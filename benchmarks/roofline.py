@@ -1,0 +1,86 @@
+"""Roofline table generator: reads artifacts/dryrun/*/*.json (written by
+repro.launch.dryrun) and emits the §Roofline markdown + CSV.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+      [--mesh single|multi] [--csv artifacts/roofline.csv]
+"""
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dir_: str, mesh: str) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, mesh, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def matmul_flops_ratio(r: Dict) -> float:
+    """useful ratio with gather-only embedding params excluded from 6ND
+    (6ND overcounts archs whose params are dominated by the input-embedding
+    table — gemma's 256k vocab at d=2048 is a GATHER, not a matmul)."""
+    from repro.configs.base import get_config
+
+    cfg = get_config(r["arch"])
+    n = r["n_active_params"]
+    if not cfg.tie_embeddings:
+        n -= cfg.vocab * cfg.d_model  # input table: gather, no flops
+    mult = 6.0 if r["kind"] == "train" else 2.0
+    if r["kind"] == "train" or r["kind"] == "prefill":
+        tokens = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768}.get(
+            r["shape"], 0)
+    else:
+        tokens = {"decode_32k": 128, "long_500k": 1}.get(r["shape"], 0)
+    if not tokens or not r["hlo_flops_per_dev"]:
+        return 0.0
+    return mult * n * tokens / r["n_chips"] / r["hlo_flops_per_dev"]
+
+
+def fmt_row(r: Dict) -> Dict[str, str]:
+    rf = r["roofline"]
+    mem = r.get("memory", {})
+    return {
+        "arch": r["arch"], "shape": r["shape"], "strategy": r["strategy"],
+        "compute_s": f"{rf['compute_s']:.3e}",
+        "memory_s": f"{rf['memory_s']:.3e}",
+        "collective_s": f"{rf['collective_s']:.3e}",
+        "dominant": rf["dominant"].replace("_s", ""),
+        "roofline_frac": f"{rf['roofline_fraction']:.3f}",
+        "useful_ratio": (f"{r['useful_flops_ratio']:.3f}"
+                         if r.get("useful_flops_ratio") else "-"),
+        "useful_mm": f"{matmul_flops_ratio(r):.3f}",
+        "peak_GiB": f"{mem.get('peak_bytes_per_device', 0)/2**30:.1f}",
+        "params_B": f"{r['n_params']/1e9:.2f}",
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="artifacts/dryrun")
+    p.add_argument("--mesh", default="single", choices=["single", "multi"])
+    p.add_argument("--csv", default="")
+    args = p.parse_args()
+    recs = load(args.dir, args.mesh)
+    if not recs:
+        raise SystemExit(f"no dry-run artifacts in {args.dir}/{args.mesh}")
+    rows = [fmt_row(r) for r in recs]
+    cols = list(rows[0])
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for row in rows:
+        print("| " + " | ".join(row[c] for c in cols) + " |")
+    if args.csv:
+        os.makedirs(os.path.dirname(args.csv), exist_ok=True)
+        with open(args.csv, "w") as f:
+            f.write(",".join(cols) + "\n")
+            for row in rows:
+                f.write(",".join(row[c] for c in cols) + "\n")
+        print(f"# wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""Control-plane benchmark harness — one benchmark per paper figure/claim.
+
+The paper is qualitative (architecture + pseudocode + workflow), so each
+figure maps to a measurable property of this implementation:
+
+  fig2_submission_latency   — Fig. 2 main(): CR create -> remote job id, per
+                              backend (the bridge's dispatch overhead).
+  fig3_monitor_throughput   — Fig. 3 monitor(): concurrent jobs one operator
+                              sustains; REST polls/sec at two poll intervals.
+  sec51_restart_recovery    — §5.1 restart semantics: pod-kill -> re-attach
+                              latency, and zero double submissions.
+  fig4_workflow_overhead    — Fig. 4: 3-step pipeline wall time vs the bare
+                              job duration (workflow tax).
+  sec4_staging_throughput   — §4 objectives: S3 -> resource file staging
+                              bandwidth through the REST facade (LSF).
+  e2e_bridged_training      — the jaxlocal backend: bridged REAL training
+                              wall time vs running the same loop unbridged
+                              (bridge overhead on a real workload).
+
+Output: CSV `name,metric,value` on stdout (tee'd to bench_output.txt).
+"""
+import json
+import statistics
+import sys
+import time
+
+ROWS = []
+
+
+def emit(name: str, metric: str, value) -> None:
+    ROWS.append((name, metric, value))
+    print(f"{name},{metric},{value}", flush=True)
+
+
+def fig2_submission_latency() -> None:
+    from repro.core import BridgeEnvironment
+
+    with BridgeEnvironment(default_duration=0.05) as env:
+        for kind in ("slurm", "lsf", "quantum", "ray", "jaxlocal"):
+            script = (json.dumps({"arch": "gemma-2b", "steps": 1, "batch": 1,
+                                  "seq": 8})
+                      if kind == "jaxlocal" else "payload")
+            lats = []
+            for i in range(5):
+                name = f"lat-{kind}-{i}"
+                t0 = time.time()
+                env.submit(name, env.make_spec(kind, script=script,
+                                               updateinterval=0.005))
+                while not env.registry.get(name).status.job_id:
+                    time.sleep(0.001)
+                lats.append(time.time() - t0)
+                env.operator.wait_for(name, timeout=120)
+            emit("fig2_submission_latency", f"{kind}_p50_ms",
+                 round(statistics.median(lats) * 1e3, 2))
+
+
+def fig3_monitor_throughput() -> None:
+    from repro.core import BridgeEnvironment
+
+    for poll in (0.02, 0.1):
+        with BridgeEnvironment(default_duration=1.0, slots=64) as env:
+            n = 32
+            t0 = time.time()
+            for i in range(n):
+                env.submit(f"mon-{i}", env.make_spec(
+                    "slurm", script="x", updateinterval=poll,
+                    jobproperties={"WallSeconds": "1.0"}))
+            for i in range(n):
+                env.operator.wait_for(f"mon-{i}", timeout=60)
+            wall = time.time() - t0
+            reqs = env.servers["slurm"].request_count
+            emit("fig3_monitor_throughput", f"poll{poll}_jobs", n)
+            emit("fig3_monitor_throughput", f"poll{poll}_wall_s", round(wall, 2))
+            emit("fig3_monitor_throughput", f"poll{poll}_rest_requests", reqs)
+            emit("fig3_monitor_throughput", f"poll{poll}_req_per_job",
+                 round(reqs / n, 1))
+
+
+def sec51_restart_recovery() -> None:
+    from repro.core import BridgeEnvironment, RUNNING, SUBMITTED
+
+    with BridgeEnvironment(default_duration=0.8) as env:
+        recov = []
+        for i in range(5):
+            name = f"rst-{i}"
+            env.submit(name, env.make_spec("slurm", script="x",
+                                           updateinterval=0.02,
+                                           jobproperties={"WallSeconds": "0.8"}))
+            while env.registry.get(name).status.state not in (SUBMITTED,
+                                                              RUNNING):
+                time.sleep(0.002)
+            pod = env.operator.pods[f"default/{name}"]
+            t0 = time.time()
+            pod.kill_pod()
+            # recovery = a NEW pod is alive again
+            while True:
+                p2 = env.operator.pods.get(f"default/{name}")
+                if p2 is not None and p2 is not pod and p2.alive():
+                    break
+                time.sleep(0.002)
+            recov.append(time.time() - t0)
+            env.operator.wait_for(name, timeout=60)
+        emit("sec51_restart_recovery", "pod_restart_p50_ms",
+             round(statistics.median(recov) * 1e3, 1))
+        emit("sec51_restart_recovery", "double_submissions",
+             len(env.clusters["slurm"].jobs) - 5)
+
+
+def fig4_workflow_overhead() -> None:
+    from repro.core import BridgeEnvironment, IMAGES, URLS
+    from repro.workflows import bridge_pipeline
+
+    with BridgeEnvironment(default_duration=0.5) as env:
+        t0 = time.time()
+        pipe = bridge_pipeline(env, "bench", resourceURL=URLS["slurm"],
+                               resourcesecret="slurm-secret", script="x",
+                               scriptlocation="inline",
+                               docker=IMAGES["slurm"], updateinterval=0.02)
+        pipe.run()
+        wall = time.time() - t0
+        emit("fig4_workflow_overhead", "pipeline_wall_s", round(wall, 3))
+        emit("fig4_workflow_overhead", "job_duration_s", 0.5)
+        emit("fig4_workflow_overhead", "overhead_ms",
+             round((wall - 0.5) * 1e3, 1))
+
+
+def sec4_staging_throughput() -> None:
+    from repro.core import BridgeEnvironment, TOKENS, URLS
+    from repro.core.backends.lsf import LSFAdapter
+
+    with BridgeEnvironment() as env:
+        client = env.directory.connect(URLS["lsf"], TOKENS["lsf"])
+        ad = LSFAdapter(client)
+        blob = b"\x5a" * (4 << 20)
+        t0 = time.time()
+        for i in range(8):
+            ad.upload(f"stage-{i}.bin", blob)
+        up = 8 * len(blob) / (time.time() - t0) / 2**20
+        t0 = time.time()
+        for i in range(8):
+            ad.download(f"stage-{i}.bin")
+        down = 8 * len(blob) / (time.time() - t0) / 2**20
+        emit("sec4_staging_throughput", "upload_MiB_s", round(up, 1))
+        emit("sec4_staging_throughput", "download_MiB_s", round(down, 1))
+
+
+def e2e_bridged_training() -> None:
+    from repro.core import BridgeEnvironment
+    from repro.core.backends.jaxlocal import train_job
+    from repro.core.objectstore import ObjectStore
+
+    spec = {"arch": "gemma-2b", "steps": 20, "batch": 2, "seq": 16,
+            "checkpoint_every": 0, "lr": 1e-3}
+    # unbridged baseline
+    t0 = time.time()
+    train_job(spec, ObjectStore())
+    base = time.time() - t0
+    # bridged
+    with BridgeEnvironment() as env:
+        t0 = time.time()
+        env.submit("bench-train", env.make_spec(
+            "jaxlocal", script=json.dumps(spec), updateinterval=0.05,
+            jobproperties={"OutputFileName": "t.out"}))
+        env.operator.wait_for("bench-train", timeout=300)
+        bridged = time.time() - t0
+    emit("e2e_bridged_training", "unbridged_s", round(base, 2))
+    emit("e2e_bridged_training", "bridged_s", round(bridged, 2))
+    emit("e2e_bridged_training", "bridge_overhead_pct",
+         round((bridged - base) / base * 100, 1))
+
+
+BENCHES = [fig2_submission_latency, fig3_monitor_throughput,
+           sec51_restart_recovery, fig4_workflow_overhead,
+           sec4_staging_throughput, e2e_bridged_training]
+
+
+def main() -> None:
+    names = sys.argv[1:]
+    print("name,metric,value")
+    for b in BENCHES:
+        if names and not any(n in b.__name__ for n in names):
+            continue
+        b()
+    print(f"# {len(ROWS)} rows ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Fault tolerance + elasticity end-to-end:
+
+  1. a bridged training job CRASHES mid-run (injected node failure);
+     resubmission with the same workdir resumes from the last checkpoint,
+  2. the controller POD is killed mid-run; the operator restarts it and the
+     new pod re-attaches to the running job (no resubmission),
+  3. straggler mitigation: the load-aware scheduler launches the payload
+     speculatively on the two least-loaded backends and keeps the winner.
+
+  PYTHONPATH=src python examples/elastic_training.py
+"""
+import json
+import time
+
+from repro.core import (BridgeEnvironment, Candidate, DONE, FAILED,
+                        IMAGES, KILLED, LoadAwareScheduler, RUNNING, URLS)
+
+
+def main() -> None:
+    with BridgeEnvironment(default_duration=0.1) as env:
+        # -- 1: crash + checkpoint resume ---------------------------------
+        payload = {"arch": "gemma-2b", "steps": 40, "batch": 2, "seq": 16,
+                   "checkpoint_every": 10, "workdir": "ckpts:runs/elastic",
+                   "lr": 1e-2, "crash_at_step": 25}
+        spec = env.make_spec("jaxlocal", script=json.dumps(payload),
+                             updateinterval=0.1,
+                             jobproperties={"OutputFileName": "train.out"})
+        env.submit("crashy", spec)
+        job = env.operator.wait_for("crashy", timeout=180)
+        print(f"1a. injected crash: state={job.status.state} "
+              f"({job.status.message[:60]})")
+        assert job.status.state == FAILED
+
+        payload["crash_at_step"] = 0
+        spec2 = env.make_spec("jaxlocal", script=json.dumps(payload),
+                              updateinterval=0.1,
+                              jobproperties={"OutputFileName": "train.out"})
+        env.submit("resumed", spec2)
+        job = env.operator.wait_for("resumed", timeout=180)
+        cm = env.statestore.get(env.operator.cm_name(job))
+        result = json.loads(env.clusters["jaxlocal"]
+                            .jobs[cm.get("id")].outputs["train.out"])
+        print(f"1b. resubmission resumed from step {result['start_step']} "
+              f"(not 0) -> {job.status.state}")
+        assert result["start_step"] == 20 and job.status.state == DONE
+
+        # -- 2: pod kill, training survives ---------------------------------
+        payload = {"arch": "gemma-2b", "steps": 60, "batch": 2, "seq": 16,
+                   "checkpoint_every": 20, "workdir": "ckpts:runs/podkill",
+                   "lr": 1e-2}
+        spec3 = env.make_spec("jaxlocal", script=json.dumps(payload),
+                              updateinterval=0.1,
+                              jobproperties={"OutputFileName": "train.out"})
+        env.submit("podkill", spec3)
+        while True:
+            job = env.registry.get("podkill")
+            if job.status.state == RUNNING and job.status.job_id:
+                break
+            time.sleep(0.05)
+        first_id = job.status.job_id
+        env.operator.pods["default/podkill"].kill_pod()
+        print("2a. controller pod killed while training runs remotely...")
+        job = env.operator.wait_for("podkill", timeout=180)
+        print(f"2b. state={job.status.state}, restarts={job.status.restarts}, "
+              f"same remote id={job.status.job_id == first_id}")
+        assert job.status.state == DONE and job.status.job_id == first_id
+
+        # -- 3: speculative execution ---------------------------------------
+        env.clusters["slurm"].default_duration = 8.0  # slurm = straggler
+        sched = LoadAwareScheduler(
+            env.directory, env.secrets, env.adapters,
+            [Candidate(URLS[k], IMAGES[k], f"{k}-secret")
+             for k in ("slurm", "lsf", "ray")])
+        base = env.make_spec("slurm", script="the payload",
+                             updateinterval=0.05)
+        t0 = time.time()
+        winner = sched.submit_speculative(env.operator, "spec", base, n=2,
+                                          timeout=60)
+        print(f"3.  speculative winner: {winner.spec.resourceURL} "
+              f"in {time.time()-t0:.2f}s (straggler was killed)")
+        assert winner.status.state == DONE
+        print("elastic training demo complete")
+
+
+if __name__ == "__main__":
+    main()

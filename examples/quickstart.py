@@ -1,0 +1,45 @@
+"""Quickstart: submit a job to a simulated SLURM cluster through the Bridge
+Operator, exactly like the paper's Fig. 1 yaml, and watch it complete.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core import BridgeEnvironment
+
+
+def main() -> None:
+    with BridgeEnvironment(default_duration=0.3) as env:
+        # the Fig. 1 BridgeJob, as a spec
+        env.s3.put("mys3bucket", "slurmbatch.sh",
+                   b"#!/bin/bash\n#SBATCH -N1\nsrun ./simulate\n")
+        spec = env.make_spec(
+            "slurm",
+            script="mys3bucket:slurmbatch.sh", scriptlocation="s3",
+            jobproperties={
+                "NodesNumber": "1", "Queue": "V100", "Tasks": "2",
+                "slurmJobName": "test",
+                "ErrorFileName": "slurmjob.err",
+                "OutputFileName": "slurmjob.out",
+            },
+            updateinterval=0.05,
+        )
+        env.submit("slurmjob-test", spec)
+        print("BridgeJob created; operator reconciling...")
+        last = ""
+        while True:
+            job = env.registry.get("slurmjob-test")
+            if job.status.state != last:
+                last = job.status.state
+                print(f"  status={last:10s} remote_id={job.status.job_id!r}")
+            if job.status.terminal():
+                break
+            time.sleep(0.02)
+        print(f"final: {job.status.state}, "
+              f"ran {job.status.end_time - job.status.start_time:.2f}s "
+              f"on the external resource")
+        assert job.status.state == "DONE"
+
+
+if __name__ == "__main__":
+    main()

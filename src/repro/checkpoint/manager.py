@@ -1,0 +1,171 @@
+"""Checkpointing: commit-marked, reshard-on-load, async save, keep-last-k.
+
+Layout under an ObjectStore prefix (works over local dirs or the in-memory
+store — the same store the bridge uses for S3 staging):
+
+    <prefix>/step_000123/leaf_0000.npy ... leaf_NNNN.npy
+    <prefix>/step_000123/MANIFEST.json   <- written LAST (commit marker)
+
+A checkpoint without MANIFEST.json is invisible to ``latest_step`` — a save
+interrupted by a node failure can never be restored from partially.
+
+Reshard-on-load: leaves are stored as full (unsharded) arrays; ``restore``
+device_puts them with the CURRENT mesh's shardings, so an elastic restart may
+change the mesh shape freely.  (On a real multi-host pod each host would save
+its addressable shards; the manifest format already records per-leaf shapes
+so that extension is additive.)
+"""
+from __future__ import annotations
+
+import io
+import json
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.objectstore import NoSuchKey, ObjectStore
+
+MANIFEST = "MANIFEST.json"
+
+
+def _leaf_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def _dump_npy(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _load_npy(data: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(data), allow_pickle=False)
+
+
+class CheckpointManager:
+    def __init__(self, store: ObjectStore, bucket: str, prefix: str,
+                 keep: int = 3):
+        self.store = store
+        self.bucket = bucket
+        self.prefix = prefix.rstrip("/")
+        self.keep = keep
+        self._async_thread: Optional[threading.Thread] = None
+        self._async_err: Optional[BaseException] = None
+
+    # -- save ----------------------------------------------------------------
+
+    def _to_host(self, tree: Any) -> List[Tuple[str, np.ndarray, str]]:
+        """(keypath, numpy array [bf16 stored as uint16 view], dtype tag)."""
+        out = []
+        for keypath, leaf in _leaf_paths(tree):
+            dtype_tag = str(leaf.dtype)
+            arr = np.asarray(jax.device_get(leaf))
+            if dtype_tag == "bfloat16":
+                arr = arr.view(np.uint16)
+            out.append((keypath, arr, dtype_tag))
+        return out
+
+    def _write(self, step: int, host_leaves: List[Tuple[str, np.ndarray, str]],
+               extra: Optional[Dict[str, Any]]) -> None:
+        stepdir = self._stepdir(step)
+        manifest = {"step": step, "extra": extra or {}, "leaves": []}
+        for i, (keypath, arr, dtype_tag) in enumerate(host_leaves):
+            key = f"{stepdir}/leaf_{i:05d}.npy"
+            self.store.put(self.bucket, key, _dump_npy(arr))
+            manifest["leaves"].append({"path": keypath, "key": key,
+                                       "dtype": dtype_tag,
+                                       "shape": list(arr.shape)})
+        # commit marker LAST
+        self.store.put(self.bucket, f"{stepdir}/{MANIFEST}",
+                       json.dumps(manifest).encode())
+        self._gc()
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None) -> None:
+        self._write(step, self._to_host(tree), extra)
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot to host memory synchronously, write in the background —
+        the train loop resumes while bytes stream out (compute/IO overlap)."""
+        self.wait()  # one in flight at a time
+        host_leaves = self._to_host(tree)
+
+        def work():
+            try:
+                self._write(step, host_leaves, extra)
+            except BaseException as e:  # surfaced on next wait()
+                self._async_err = e
+
+        self._async_thread = threading.Thread(target=work, daemon=True)
+        self._async_thread.start()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+        if self._async_err is not None:
+            err, self._async_err = self._async_err, None
+            raise err
+
+    # -- restore ------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for key in self.store.list(self.bucket, self.prefix + "/"):
+            if key.endswith("/" + MANIFEST):
+                part = key[len(self.prefix) + 1:].split("/")[0]
+                if part.startswith("step_"):
+                    steps.append(int(part[5:]))
+        return max(steps) if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None
+                ) -> Tuple[Any, Dict[str, Any]]:
+        """``like``: pytree (concrete or ShapeDtypeStruct) fixing the treedef.
+        ``shardings``: optional matching tree of NamedSharding for reshard-on-load."""
+        stepdir = self._stepdir(step)
+        manifest = json.loads(self.store.get(self.bucket, f"{stepdir}/{MANIFEST}"))
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        entries = manifest["leaves"]
+        if len(entries) != len(flat_like):
+            raise ValueError(f"checkpoint has {len(entries)} leaves, "
+                             f"model expects {len(flat_like)}")
+        flat_sh = (jax.tree_util.tree_flatten(shardings)[0]
+                   if shardings is not None else [None] * len(flat_like))
+        out = []
+        for e, lk, sh in zip(entries, flat_like, flat_sh):
+            arr = _load_npy(self.store.get(self.bucket, e["key"]))
+            if e["dtype"] == "bfloat16":
+                arr = arr.view(jax.numpy.bfloat16.dtype)
+            if tuple(arr.shape) != tuple(lk.shape):
+                raise ValueError(f"{e['path']}: shape {arr.shape} != {lk.shape}")
+            out.append(jax.device_put(arr, sh) if sh is not None else
+                       jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+    def restore_latest(self, like: Any, shardings: Any = None
+                       ) -> Optional[Tuple[int, Any, Dict[str, Any]]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = self.restore(step, like, shardings)
+        return step, tree, extra
+
+    # -- internals --------------------------------------------------------------
+
+    def _stepdir(self, step: int) -> str:
+        return f"{self.prefix}/step_{step:08d}"
+
+    def _gc(self) -> None:
+        steps = sorted({int(k[len(self.prefix) + 1:].split("/")[0][5:])
+                        for k in self.store.list(self.bucket, self.prefix + "/")
+                        if k.endswith("/" + MANIFEST)
+                        and k[len(self.prefix) + 1:].startswith("step_")})
+        for old in steps[:-self.keep] if self.keep > 0 else []:
+            stepdir = self._stepdir(old)
+            # delete manifest FIRST (uncommit), then leaves
+            self.store.delete(self.bucket, f"{stepdir}/{MANIFEST}")
+            for key in self.store.list(self.bucket, stepdir + "/"):
+                self.store.delete(self.bucket, key)

@@ -1,0 +1,28 @@
+"""The paper's primary contribution: the Bridge Operator control plane.
+
+Public surface:
+  BridgeJob / BridgeJobSpec        — the CRD analogue (resource.py)
+  ResourceRegistry                  — declarative store + watch (registry.py)
+  StateStore / ConfigMap            — the ConfigMap analogue (statestore.py)
+  ObjectStore                       — S3 analogue (objectstore.py)
+  SecretStore                       — secret mounts (secrets.py)
+  ControllerPod                     — paper Figs. 2-3 (controller.py)
+  BridgeOperator                    — the reconciler (operator.py)
+  LoadAwareScheduler                — paper §7 future work (scheduler.py)
+  BridgeEnvironment                 — cluster-in-a-box wiring (cluster.py)
+"""
+from repro.core.resource import (BridgeJob, BridgeJobSpec, BridgeJobStatus,
+                                 JobData, S3Storage, ValidationError,
+                                 PENDING, SUBMITTED, RUNNING, DONE, FAILED,
+                                 KILLED, UNKNOWN, TERMINAL_STATES,
+                                 load_bridgejob)
+from repro.core.registry import ResourceRegistry
+from repro.core.statestore import ConfigMap, StateStore
+from repro.core.objectstore import NoSuchKey, ObjectStore
+from repro.core.secrets import SecretNotFound, SecretStore
+from repro.core.rest import (FaultProfile, ResourceManagerDirectory,
+                             RestClient, RestServer, TransportError)
+from repro.core.controller import ControllerPod
+from repro.core.operator import BridgeOperator, default_adapters
+from repro.core.scheduler import Candidate, LoadAwareScheduler
+from repro.core.cluster import IMAGES, TOKENS, URLS, BridgeEnvironment

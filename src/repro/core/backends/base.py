@@ -1,0 +1,228 @@
+"""Simulated external-cluster machinery shared by all resource managers.
+
+A ``SimulatedCluster`` is the black box behind each REST facade: a queue of
+jobs, a bounded set of execution slots, and a scheduler thread that advances
+job states.  Specific managers (slurm/lsf/quantum/ray) expose their own REST
+dialect over this substrate; ``jaxlocal`` replaces the sleep payload with a
+REAL distributed JAX training loop.
+
+Canonical internal states (each dialect maps to its own vocabulary):
+    QUEUED -> RUNNING -> {COMPLETED, FAILED, CANCELLED}
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+QUEUED = "QUEUED"
+RUNNING = "RUNNING"
+COMPLETED = "COMPLETED"
+FAILED = "FAILED"
+CANCELLED = "CANCELLED"
+TERMINAL = (COMPLETED, FAILED, CANCELLED)
+
+
+@dataclass
+class ClusterJob:
+    id: str
+    script: str
+    properties: Dict[str, str] = field(default_factory=dict)
+    params: Dict[str, str] = field(default_factory=dict)
+    state: str = QUEUED
+    submit_time: float = field(default_factory=time.time)
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
+    exit_code: Optional[int] = None
+    reason: str = ""
+    # files produced by the job, downloadable via the manager's API
+    outputs: Dict[str, bytes] = field(default_factory=dict)
+    _cancel: threading.Event = field(default_factory=threading.Event, repr=False)
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "id": self.id, "state": self.state, "submit_time": self.submit_time,
+            "start_time": self.start_time, "end_time": self.end_time,
+            "exit_code": self.exit_code, "reason": self.reason,
+        }
+
+
+# A payload executes the job body.  It runs on a worker thread and must poll
+# ``job._cancel`` to honour kills.  Returns an exit code.
+Payload = Callable[[ClusterJob, "SimulatedCluster"], int]
+
+
+def sleep_payload(job: ClusterJob, cluster: "SimulatedCluster") -> int:
+    """Default black-box job: run for WallSeconds, optionally fail, write outputs."""
+    dur = float(job.properties.get("WallSeconds", cluster.default_duration))
+    deadline = time.time() + dur
+    while time.time() < deadline:
+        if job._cancel.is_set():
+            return -1
+        time.sleep(min(0.005, max(deadline - time.time(), 0)))
+    if job.properties.get("FailMe", "") == "true":
+        job.reason = "job script exited non-zero (FailMe)"
+        return 1
+    out_name = job.properties.get("OutputFileName", "job.out")
+    job.outputs[out_name] = (
+        f"job {job.id} ok\nscript_bytes={len(job.script)}\n"
+        f"params={sorted(job.params)}\n").encode()
+    err_name = job.properties.get("ErrorFileName", "")
+    if err_name:
+        job.outputs[err_name] = b""
+    return 0
+
+
+class ResourceAdapter:
+    """The contract every controller-pod implementation obeys (paper §5.1:
+    "to support a new resource type, the only thing that is required is the
+    implementation of the corresponding controller, based on very simple
+    rules imposed by the operator").
+
+    An adapter owns a ``RestClient`` and translates the five bridge verbs
+    into the manager's REST dialect.  Status is reported in the CANONICAL
+    vocabulary above; the adapter maps dialect states back to it.
+    """
+
+    #: docker-image prefix this adapter serves ("slurmpod", "lsfpod", ...)
+    image: str = ""
+
+    def __init__(self, client) -> None:
+        self.client = client
+
+    # every verb may raise TransportError (network) — callers must handle it
+    def submit(self, script: str, properties: Dict[str, str],
+               params: Dict[str, str]) -> str:
+        """Returns the remote job id, or raises SubmitError."""
+        raise NotImplementedError
+
+    def status(self, job_id: str) -> Dict[str, Any]:
+        """Returns {'state': CANONICAL, 'start_time', 'end_time', 'reason'}."""
+        raise NotImplementedError
+
+    def cancel(self, job_id: str) -> None:
+        raise NotImplementedError
+
+    def upload(self, name: str, data: bytes) -> bool:
+        """Stage a file onto the resource. False if the API lacks upload."""
+        return False
+
+    def download(self, name: str) -> Optional[bytes]:
+        """Fetch an output file. None if unsupported/missing."""
+        return None
+
+    def queue_load(self) -> Optional[Dict[str, int]]:
+        return None
+
+
+class SubmitError(RuntimeError):
+    """Submission rejected by the resource manager (4xx/5xx, quota, ...)."""
+
+
+class SimulatedCluster:
+    """Bounded-slot job executor with a scheduler thread."""
+
+    def __init__(self, name: str, slots: int = 4, default_duration: float = 0.05,
+                 payload: Optional[Payload] = None, id_prefix: str = "",
+                 start_numbering: int = 1000):
+        self.name = name
+        self.slots = slots
+        self.default_duration = default_duration
+        self.payload = payload or sleep_payload
+        self.id_prefix = id_prefix
+        self.jobs: Dict[str, ClusterJob] = {}
+        # staged files visible to jobs (upload/download area; LSF-style)
+        self.files: Dict[str, bytes] = {}
+        self._next_id = start_numbering
+        self._lock = threading.RLock()
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        self._sched = threading.Thread(target=self._schedule_loop, daemon=True,
+                                       name=f"{name}-sched")
+        self._sched.start()
+
+    # -- control surface (what REST facades call) ---------------------------
+
+    def submit(self, script: str, properties: Dict[str, str],
+               params: Dict[str, str]) -> ClusterJob:
+        with self._lock:
+            jid = f"{self.id_prefix}{self._next_id}"
+            self._next_id += 1
+            job = ClusterJob(id=jid, script=script, properties=dict(properties or {}),
+                             params=dict(params or {}))
+            self.jobs[jid] = job
+            return job
+
+    def get(self, job_id: str) -> Optional[ClusterJob]:
+        with self._lock:
+            return self.jobs.get(job_id)
+
+    def cancel(self, job_id: str) -> bool:
+        with self._lock:
+            job = self.jobs.get(job_id)
+            if job is None:
+                return False
+            if job.state in TERMINAL:
+                return True
+            if job.state == QUEUED:
+                job.state = CANCELLED
+                job.end_time = time.time()
+                return True
+        job._cancel.set()
+        return True
+
+    def queue_load(self) -> Dict[str, int]:
+        with self._lock:
+            q = sum(1 for j in self.jobs.values() if j.state == QUEUED)
+            r = sum(1 for j in self.jobs.values() if j.state == RUNNING)
+        return {"queued": q, "running": r, "slots": self.slots}
+
+    def upload(self, name: str, data: bytes) -> None:
+        with self._lock:
+            self.files[name] = bytes(data)
+
+    def download(self, name: str) -> Optional[bytes]:
+        with self._lock:
+            return self.files.get(name)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        for j in list(self.jobs.values()):
+            j._cancel.set()
+        self._sched.join(timeout=2)
+
+    # -- scheduler --------------------------------------------------------
+
+    def _schedule_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                running = sum(1 for j in self.jobs.values() if j.state == RUNNING)
+                free = self.slots - running
+                to_start = [j for j in sorted(self.jobs.values(),
+                                              key=lambda j: j.submit_time)
+                            if j.state == QUEUED][:max(free, 0)]
+                for job in to_start:
+                    job.state = RUNNING
+                    job.start_time = time.time()
+                    t = threading.Thread(target=self._run_job, args=(job,),
+                                         daemon=True, name=f"{self.name}-{job.id}")
+                    self._threads.append(t)
+                    t.start()
+            time.sleep(0.005)
+
+    def _run_job(self, job: ClusterJob) -> None:
+        try:
+            code = self.payload(job, self)
+        except Exception as e:  # payload crash == job failure
+            job.reason = f"{type(e).__name__}: {e}"
+            code = 1
+        with self._lock:
+            job.exit_code = code
+            job.end_time = time.time()
+            if job._cancel.is_set() or code == -1:
+                job.state = CANCELLED
+            elif code == 0:
+                job.state = COMPLETED
+            else:
+                job.state = FAILED

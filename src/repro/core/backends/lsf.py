@@ -1,0 +1,136 @@
+"""Simulated IBM Spectrum LSF Application Center REST API.
+
+Dialect notes (paper §5.2): bsub-style submission options; states
+PEND/RUN/DONE/EXIT; the Application Center API DOES support file upload and
+download to/from the cluster, plus queue queries.
+"""
+from __future__ import annotations
+
+import base64
+from typing import Any, Dict, Optional
+
+from repro.core.backends import base as B
+from repro.core.rest import FaultProfile, HttpResponse, RestServer
+
+_STATE_TO_LSF = {
+    B.QUEUED: "PEND",
+    B.RUNNING: "RUN",
+    B.COMPLETED: "DONE",
+    B.FAILED: "EXIT",
+    B.CANCELLED: "EXIT",  # LSF kills show as EXIT; reason distinguishes
+}
+
+
+def _lsf_to_state(s: str, reason: str) -> str:
+    if s == "PEND":
+        return B.QUEUED
+    if s == "RUN":
+        return B.RUNNING
+    if s == "DONE":
+        return B.COMPLETED
+    if "TERM_OWNER" in reason or "killed" in reason.lower():
+        return B.CANCELLED
+    return B.FAILED
+
+
+def make_server(cluster: B.SimulatedCluster, token: str = "",
+                fault: FaultProfile = None) -> RestServer:
+    srv = RestServer(token=token, fault=fault)
+
+    def submit(_groups, body) -> HttpResponse:
+        body = body or {}
+        if not body.get("COMMANDTORUN"):
+            return HttpResponse(400, {"error": "COMMANDTORUN required"})
+        props = {k: v for k, v in body.items() if k != "COMMANDTORUN"}
+        job = cluster.submit(body["COMMANDTORUN"], props, body.get("PARAMS", {}))
+        return HttpResponse(200, {"jobId": job.id,
+                                  "message": f"Job <{job.id}> is submitted to queue."})
+
+    def jobinfo(groups, _body) -> HttpResponse:
+        job = cluster.get(groups["id"])
+        if job is None:
+            return HttpResponse(404, {"error": "Job not found"})
+        reason = job.reason or ("TERM_OWNER: killed by owner"
+                                if job.state == B.CANCELLED else "")
+        return HttpResponse(200, {
+            "jobId": job.id, "status": _STATE_TO_LSF[job.state],
+            "startTime": job.start_time, "endTime": job.end_time,
+            "exitReason": reason,
+        })
+
+    def kill(groups, _body) -> HttpResponse:
+        ok = cluster.cancel(groups["id"])
+        return HttpResponse(200 if ok else 404, {})
+
+    def upload(groups, body) -> HttpResponse:
+        cluster.upload(groups["name"], base64.b64decode(body["data"]))
+        return HttpResponse(200, {})
+
+    def download(groups, _body) -> HttpResponse:
+        name = groups["name"]
+        # job outputs take priority over the shared staging area
+        for job in cluster.jobs.values():
+            if name in job.outputs:
+                return HttpResponse(200, {"data": base64.b64encode(
+                    job.outputs[name]).decode()})
+        data = cluster.download(name)
+        if data is None:
+            return HttpResponse(404, {"error": "no such file"})
+        return HttpResponse(200, {"data": base64.b64encode(data).decode()})
+
+    def queues(_groups, _body) -> HttpResponse:
+        load = cluster.queue_load()
+        return HttpResponse(200, {"queues": [dict(name="normal", **load)]})
+
+    srv.route("POST", "/platform/ws/jobs/submit", submit)
+    srv.route("GET", "/platform/ws/jobs/{id}", jobinfo)
+    srv.route("POST", "/platform/ws/jobs/{id}/kill", kill)
+    srv.route("PUT", "/platform/ws/files/{name}", upload)
+    srv.route("GET", "/platform/ws/files/{name}", download)
+    srv.route("GET", "/platform/ws/queues", queues)
+    return srv
+
+
+class LSFAdapter(B.ResourceAdapter):
+    image = "lsfpod"
+
+    def submit(self, script, properties, params) -> str:
+        body = dict(properties or {})
+        body["COMMANDTORUN"] = script
+        body["PARAMS"] = dict(params or {})
+        r = self.client.post("/platform/ws/jobs/submit", body)
+        if not r.ok:
+            raise B.SubmitError(f"lsf submit: HTTP {r.status} {r.json}")
+        return str(r.json["jobId"])
+
+    def status(self, job_id: str) -> Dict[str, Any]:
+        r = self.client.get(f"/platform/ws/jobs/{job_id}")
+        if r.status == 404:
+            return {"state": B.FAILED, "reason": "job not found in mbatchd"}
+        if not r.ok:
+            raise B.SubmitError(f"lsf status: HTTP {r.status}")
+        j = r.json
+        return {"state": _lsf_to_state(j["status"], j.get("exitReason", "")),
+                "start_time": j.get("startTime"), "end_time": j.get("endTime"),
+                "reason": j.get("exitReason", "")}
+
+    def cancel(self, job_id: str) -> None:
+        self.client.post(f"/platform/ws/jobs/{job_id}/kill")
+
+    def upload(self, name: str, data: bytes) -> bool:
+        r = self.client.put(f"/platform/ws/files/{name}",
+                            {"data": base64.b64encode(data).decode()})
+        return r.ok
+
+    def download(self, name: str) -> Optional[bytes]:
+        r = self.client.get(f"/platform/ws/files/{name}")
+        if not r.ok:
+            return None
+        return base64.b64decode(r.json["data"])
+
+    def queue_load(self) -> Optional[Dict[str, int]]:
+        r = self.client.get("/platform/ws/queues")
+        if not r.ok:
+            return None
+        q = r.json["queues"][0]
+        return {"queued": q["queued"], "running": q["running"], "slots": q["slots"]}

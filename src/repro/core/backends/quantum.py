@@ -1,0 +1,114 @@
+"""Simulated IBM Quantum Runtime service.
+
+Dialect notes (paper §2.1): "technically this is not a resource manager" but
+the API provides the same verbs.  Idiom: program + params submission returns
+an opaque job id; results are pushed to OBJECT STORAGE on completion (the
+bridge downloads from there, not from the service).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Optional
+
+from repro.core.backends import base as B
+from repro.core.objectstore import ObjectStore
+from repro.core.rest import FaultProfile, HttpResponse, RestServer
+
+_STATE_TO_Q = {
+    B.QUEUED: "Queued",
+    B.RUNNING: "Running",
+    B.COMPLETED: "Completed",
+    B.FAILED: "Failed",
+    B.CANCELLED: "Cancelled",
+}
+_Q_TO_STATE = {v: k for k, v in _STATE_TO_Q.items()}
+
+
+def quantum_payload(store: ObjectStore, bucket: str) -> B.Payload:
+    """Payload that uploads a result object to S3 on completion (the
+    quantum-service idiom: results land in object storage)."""
+
+    def run(job: B.ClusterJob, cluster: B.SimulatedCluster) -> int:
+        code = B.sleep_payload(job, cluster)
+        if code == 0:
+            result = {"job_id": job.id, "quasi_dists": [{"0": 0.5, "1": 0.5}],
+                      "shots": int(job.properties.get("shots", "1024"))}
+            store.put(bucket, f"results/{job.id}.json", json.dumps(result).encode())
+            job.outputs["result_ref"] = f"{bucket}:results/{job.id}.json".encode()
+        return code
+
+    return run
+
+
+def make_server(cluster: B.SimulatedCluster, token: str = "",
+                fault: FaultProfile = None) -> RestServer:
+    srv = RestServer(token=token, fault=fault)
+
+    def submit(_groups, body) -> HttpResponse:
+        body = body or {}
+        if not body.get("program"):
+            return HttpResponse(400, {"errors": [{"message": "program required"}]})
+        job = cluster.submit(body["program"], body.get("backend_options", {}),
+                             body.get("params", {}))
+        return HttpResponse(200, {"id": f"q-{job.id}"})
+
+    def jobinfo(groups, _body) -> HttpResponse:
+        job = cluster.get(groups["id"].replace("q-", "", 1))
+        if job is None:
+            return HttpResponse(404, {"errors": [{"message": "job not found"}]})
+        out = {"id": f"q-{job.id}", "status": _STATE_TO_Q[job.state],
+               "created": job.submit_time, "ended": job.end_time,
+               "reason": job.reason}
+        if "result_ref" in job.outputs:
+            out["results_location"] = job.outputs["result_ref"].decode()
+        return HttpResponse(200, out)
+
+    def cancel(groups, _body) -> HttpResponse:
+        ok = cluster.cancel(groups["id"].replace("q-", "", 1))
+        return HttpResponse(204 if ok else 404, {})
+
+    def load(_groups, _body) -> HttpResponse:
+        q = cluster.queue_load()
+        return HttpResponse(200, {"backends": [dict(name="simulated_qpu", **q)]})
+
+    srv.route("POST", "/runtime/jobs", submit)
+    srv.route("GET", "/runtime/jobs/{id}", jobinfo)
+    srv.route("DELETE", "/runtime/jobs/{id}", cancel)
+    srv.route("GET", "/runtime/backends", load)
+    return srv
+
+
+class QuantumAdapter(B.ResourceAdapter):
+    image = "quantumpod"
+
+    def submit(self, script, properties, params) -> str:
+        r = self.client.post("/runtime/jobs", {"program": script,
+                                               "backend_options": properties,
+                                               "params": params})
+        if not r.ok:
+            raise B.SubmitError(f"quantum submit: HTTP {r.status} {r.json}")
+        return r.json["id"]
+
+    def status(self, job_id: str) -> Dict[str, Any]:
+        r = self.client.get(f"/runtime/jobs/{job_id}")
+        if r.status == 404:
+            return {"state": B.FAILED, "reason": "job not found"}
+        if not r.ok:
+            raise B.SubmitError(f"quantum status: HTTP {r.status}")
+        j = r.json
+        out = {"state": _Q_TO_STATE.get(j["status"], B.FAILED),
+               "start_time": j.get("created"), "end_time": j.get("ended"),
+               "reason": j.get("reason", "")}
+        if "results_location" in j:
+            out["results_location"] = j["results_location"]
+        return out
+
+    def cancel(self, job_id: str) -> None:
+        self.client.delete(f"/runtime/jobs/{job_id}")
+
+    def queue_load(self) -> Optional[Dict[str, int]]:
+        r = self.client.get("/runtime/backends")
+        if not r.ok:
+            return None
+        b = r.json["backends"][0]
+        return {"queued": b["queued"], "running": b["running"], "slots": b["slots"]}

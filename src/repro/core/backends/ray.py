@@ -1,0 +1,130 @@
+"""Simulated Ray Jobs API (job submission SDK surface, paper §2.1).
+
+Dialect notes: submission ids look like ``raysubmit_XXXX``; the client may
+supply its own submission_id (Ray semantics — used here to demonstrate
+idempotent resubmission); states PENDING/RUNNING/SUCCEEDED/STOPPED/FAILED.
+"""
+from __future__ import annotations
+
+import base64
+from typing import Any, Dict, Optional
+
+from repro.core.backends import base as B
+from repro.core.rest import FaultProfile, HttpResponse, RestServer
+
+_STATE_TO_RAY = {
+    B.QUEUED: "PENDING",
+    B.RUNNING: "RUNNING",
+    B.COMPLETED: "SUCCEEDED",
+    B.FAILED: "FAILED",
+    B.CANCELLED: "STOPPED",
+}
+_RAY_TO_STATE = {v: k for k, v in _STATE_TO_RAY.items()}
+
+
+def make_server(cluster: B.SimulatedCluster, token: str = "",
+                fault: FaultProfile = None) -> RestServer:
+    srv = RestServer(token=token, fault=fault)
+    by_submission: Dict[str, str] = {}  # submission_id -> cluster job id
+
+    def submit(_groups, body) -> HttpResponse:
+        body = body or {}
+        if not body.get("entrypoint"):
+            return HttpResponse(400, {"error": "entrypoint required"})
+        sid = body.get("submission_id", "")
+        if sid and sid in by_submission:  # idempotent resubmission
+            return HttpResponse(200, {"submission_id": sid})
+        job = cluster.submit(body["entrypoint"],
+                             body.get("runtime_env", {}) | body.get("metadata", {}),
+                             body.get("params", {}))
+        sid = sid or f"raysubmit_{job.id}"
+        by_submission[sid] = job.id
+        return HttpResponse(200, {"submission_id": sid})
+
+    def _job_for(sid: str):
+        jid = by_submission.get(sid)
+        return cluster.get(jid) if jid else None
+
+    def jobinfo(groups, _body) -> HttpResponse:
+        job = _job_for(groups["sid"])
+        if job is None:
+            return HttpResponse(404, {"error": "submission not found"})
+        return HttpResponse(200, {
+            "submission_id": groups["sid"], "status": _STATE_TO_RAY[job.state],
+            "start_time": job.start_time, "end_time": job.end_time,
+            "message": job.reason,
+        })
+
+    def stop(groups, _body) -> HttpResponse:
+        job = _job_for(groups["sid"])
+        if job is None:
+            return HttpResponse(404, {})
+        cluster.cancel(job.id)
+        return HttpResponse(200, {"stopped": True})
+
+    def logs(groups, _body) -> HttpResponse:
+        job = _job_for(groups["sid"])
+        if job is None:
+            return HttpResponse(404, {})
+        blob = b"".join(job.outputs.values())
+        return HttpResponse(200, {"logs": base64.b64encode(blob).decode()})
+
+    def load(_groups, _body) -> HttpResponse:
+        return HttpResponse(200, cluster.queue_load())
+
+    srv.route("POST", "/api/jobs/", submit)
+    srv.route("GET", "/api/jobs/{sid}", jobinfo)
+    srv.route("POST", "/api/jobs/{sid}/stop", stop)
+    srv.route("GET", "/api/jobs/{sid}/logs", logs)
+    srv.route("GET", "/api/cluster_status", load)
+    return srv
+
+
+class RayAdapter(B.ResourceAdapter):
+    image = "raypod"
+
+    def __init__(self, client, submission_id: str = "") -> None:
+        super().__init__(client)
+        self.submission_id = submission_id  # deterministic id => idempotent submit
+
+    def submit(self, script, properties, params) -> str:
+        body = {"entrypoint": script, "runtime_env": dict(properties or {}),
+                "params": dict(params or {})}
+        if self.submission_id:
+            body["submission_id"] = self.submission_id
+        r = self.client.post("/api/jobs/", body)
+        if not r.ok:
+            raise B.SubmitError(f"ray submit: HTTP {r.status} {r.json}")
+        return r.json["submission_id"]
+
+    def status(self, job_id: str) -> Dict[str, Any]:
+        r = self.client.get(f"/api/jobs/{job_id}")
+        if r.status == 404:
+            return {"state": B.FAILED, "reason": "submission not found"}
+        if not r.ok:
+            raise B.SubmitError(f"ray status: HTTP {r.status}")
+        j = r.json
+        return {"state": _RAY_TO_STATE.get(j["status"], B.FAILED),
+                "start_time": j.get("start_time"), "end_time": j.get("end_time"),
+                "reason": j.get("message", "")}
+
+    def cancel(self, job_id: str) -> None:
+        self.client.post(f"/api/jobs/{job_id}/stop")
+
+    def download(self, name: str) -> Optional[bytes]:
+        # Ray jobs expose logs, not arbitrary files
+        if name != "logs":
+            return None
+        return None  # resolved per-job by the controller via job_id
+
+    def download_logs(self, job_id: str) -> Optional[bytes]:
+        r = self.client.get(f"/api/jobs/{job_id}/logs")
+        if not r.ok:
+            return None
+        return base64.b64decode(r.json["logs"])
+
+    def queue_load(self) -> Optional[Dict[str, int]]:
+        r = self.client.get("/api/cluster_status")
+        if not r.ok:
+            return None
+        return {k: r.json[k] for k in ("queued", "running", "slots")}

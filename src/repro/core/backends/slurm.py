@@ -1,0 +1,101 @@
+"""Simulated slurmrestd (REST dialect per Slurm's v0.0.37-era API).
+
+Dialect notes (paper §5.2): numeric job ids; sacct-style states; the Slurm
+REST API tested in the paper (21.08) does NOT support file upload/download —
+the adapter honestly returns unsupported for both, which exercises the
+bridge's "stage via S3 + remote path" alternative.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.core.backends import base as B
+from repro.core.rest import FaultProfile, HttpResponse, RestServer
+
+_STATE_TO_SLURM = {
+    B.QUEUED: "PENDING",
+    B.RUNNING: "RUNNING",
+    B.COMPLETED: "COMPLETED",
+    B.FAILED: "FAILED",
+    B.CANCELLED: "CANCELLED",
+}
+_SLURM_TO_STATE = {v: k for k, v in _STATE_TO_SLURM.items()}
+
+
+def make_server(cluster: B.SimulatedCluster, token: str = "",
+                fault: FaultProfile = None) -> RestServer:
+    srv = RestServer(token=token, fault=fault)
+
+    def submit(_groups, body) -> HttpResponse:
+        body = body or {}
+        if "script" not in body:
+            return HttpResponse(400, {"error": "no script"})
+        job = cluster.submit(body["script"], body.get("job", {}),
+                             body.get("params", {}))
+        return HttpResponse(200, {"job_id": int(job.id)})
+
+    def get_job(groups, _body) -> HttpResponse:
+        job = cluster.get(groups["id"])
+        if job is None:
+            return HttpResponse(404, {"error": "job not found"})
+        s = job.snapshot()
+        return HttpResponse(200, {"jobs": [{
+            "job_id": int(job.id),
+            "job_state": _STATE_TO_SLURM[job.state],
+            "start_time": s["start_time"], "end_time": s["end_time"],
+            "exit_code": s["exit_code"], "state_reason": s["reason"],
+        }]})
+
+    def cancel(groups, _body) -> HttpResponse:
+        ok = cluster.cancel(groups["id"])
+        return HttpResponse(200 if ok else 404, {})
+
+    def ping(_groups, _body) -> HttpResponse:
+        return HttpResponse(200, {"pings": [{"ping": "UP"}]})
+
+    def partitions(_groups, _body) -> HttpResponse:
+        load = cluster.queue_load()
+        return HttpResponse(200, {"partitions": [dict(name="batch", **load)]})
+
+    srv.route("POST", "/slurm/v0.0.37/job/submit", submit)
+    srv.route("GET", "/slurm/v0.0.37/job/{id}", get_job)
+    srv.route("DELETE", "/slurm/v0.0.37/job/{id}", cancel)
+    srv.route("GET", "/slurm/v0.0.37/ping", ping)
+    srv.route("GET", "/slurm/v0.0.37/partitions", partitions)
+    return srv
+
+
+class SlurmAdapter(B.ResourceAdapter):
+    image = "slurmpod"
+
+    def submit(self, script, properties, params) -> str:
+        r = self.client.post("/slurm/v0.0.37/job/submit",
+                             {"script": script, "job": properties, "params": params})
+        if not r.ok:
+            raise B.SubmitError(f"slurm submit: HTTP {r.status} {r.json}")
+        return str(r.json["job_id"])
+
+    def status(self, job_id: str) -> Dict[str, Any]:
+        r = self.client.get(f"/slurm/v0.0.37/job/{job_id}")
+        if r.status == 404:
+            return {"state": B.FAILED, "reason": "job vanished from slurmctld"}
+        if not r.ok:
+            raise B.SubmitError(f"slurm status: HTTP {r.status}")
+        j = r.json["jobs"][0]
+        return {
+            "state": _SLURM_TO_STATE.get(j["job_state"], B.FAILED),
+            "start_time": j.get("start_time"), "end_time": j.get("end_time"),
+            "reason": j.get("state_reason", ""),
+        }
+
+    def cancel(self, job_id: str) -> None:
+        self.client.delete(f"/slurm/v0.0.37/job/{job_id}")
+
+    # Slurm REST 21.08: no file staging (paper §5.2) — inherit False/None.
+
+    def queue_load(self) -> Optional[Dict[str, int]]:
+        r = self.client.get("/slurm/v0.0.37/partitions")
+        if not r.ok:
+            return None
+        p = r.json["partitions"][0]
+        return {"queued": p["queued"], "running": p["running"], "slots": p["slots"]}

@@ -1,0 +1,134 @@
+"""BridgeEnvironment — a cluster-in-a-box wiring of every component.
+
+One call builds: resource registry + state store + secrets + object store +
+the four simulated external resource managers (SLURM, LSF, Quantum, Ray) +
+the real ``jaxlocal`` trainer backend + the operator.  Tests, examples and
+benchmarks all start here, so the wiring itself is exercised everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+from typing import Dict, Optional
+
+from repro.core.backends import base as B
+from repro.core.backends import jaxlocal as JX
+from repro.core.backends import lsf as LSFB
+from repro.core.backends import quantum as QB
+from repro.core.backends import ray as RAYB
+from repro.core.backends import slurm as SLB
+from repro.core.objectstore import ObjectStore
+from repro.core.operator import BridgeOperator, default_adapters
+from repro.core.registry import ResourceRegistry
+from repro.core.resource import BridgeJob, BridgeJobSpec, JobData, S3Storage
+from repro.core.rest import FaultProfile, ResourceManagerDirectory
+from repro.core.secrets import SecretStore
+from repro.core.statestore import StateStore
+
+URLS = {
+    "slurm": "https://slurm.hpc.example.com",
+    "lsf": "https://lsf.hpc.example.com",
+    "quantum": "https://quantum.cloud.example.com",
+    "ray": "https://ray.cluster.example.com",
+    "jaxlocal": "https://jax.pod0.example.com",
+}
+IMAGES = {
+    "slurm": "slurmpod:0.1",
+    "lsf": "lsfpod:0.1",
+    "quantum": "quantumpod:0.1",
+    "ray": "raypod:0.1",
+    "jaxlocal": "jaxpod:0.1",
+}
+TOKENS = {k: f"{k}-token-0123" for k in URLS}
+
+
+class BridgeEnvironment:
+    def __init__(self, root: Optional[str] = None, *, durable: bool = False,
+                 slots: int = 4, default_duration: float = 0.05,
+                 fault_profiles: Optional[Dict[str, FaultProfile]] = None,
+                 operator_kwargs: Optional[dict] = None):
+        if durable and root is None:
+            root = tempfile.mkdtemp(prefix="bridge-env-")
+        self.root = root
+        self.registry = ResourceRegistry()
+        self.statestore = StateStore(root=f"{root}/configmaps" if durable else None)
+        self.secrets = SecretStore()
+        self.s3 = ObjectStore(root=f"{root}/s3" if durable else None,
+                              endpoint="s3.local")
+        self.directory = ResourceManagerDirectory()
+        self.adapters = default_adapters()
+        self.fault_profiles = dict(fault_profiles or {})
+
+        self.clusters: Dict[str, B.SimulatedCluster] = {
+            "slurm": B.SimulatedCluster("slurm", slots=slots,
+                                        default_duration=default_duration,
+                                        start_numbering=1000),
+            "lsf": B.SimulatedCluster("lsf", slots=slots,
+                                      default_duration=default_duration,
+                                      start_numbering=2000),
+            "quantum": B.SimulatedCluster("quantum", slots=slots,
+                                          default_duration=default_duration,
+                                          start_numbering=3000),
+            "ray": B.SimulatedCluster("ray", slots=slots,
+                                      default_duration=default_duration,
+                                      start_numbering=4000),
+            "jaxlocal": JX.make_jaxlocal_cluster(self.s3, slots=max(slots, 2)),
+        }
+        self.clusters["quantum"].payload = QB.quantum_payload(self.s3, "qresults")
+
+        makers = {"slurm": SLB.make_server, "lsf": LSFB.make_server,
+                  "quantum": QB.make_server, "ray": RAYB.make_server,
+                  "jaxlocal": JX.make_server}
+        self.servers = {}
+        for kind, make in makers.items():
+            fp = self.fault_profiles.get(kind)
+            srv = make(self.clusters[kind], token=TOKENS[kind], fault=fp)
+            self.servers[kind] = srv
+            self.directory.register(URLS[kind], srv)
+            self.secrets.create(f"{kind}-secret", {"token": TOKENS[kind]})
+
+        self.operator = BridgeOperator(
+            self.registry, self.statestore, self.secrets, self.s3,
+            self.directory, self.adapters, **(operator_kwargs or {}))
+
+    # -- convenience -----------------------------------------------------------
+
+    def start(self) -> "BridgeEnvironment":
+        self.operator.start()
+        return self
+
+    def stop(self) -> None:
+        self.operator.stop()
+        for c in self.clusters.values():
+            c.shutdown()
+
+    def __enter__(self) -> "BridgeEnvironment":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def make_spec(self, kind: str, *, script: str = "", scriptlocation: str = "inline",
+                  jobproperties: Optional[Dict[str, str]] = None,
+                  jobparams: Optional[Dict[str, str]] = None,
+                  additionaldata: str = "", updateinterval: float = 0.02,
+                  uploadfiles: str = "", uploadbucket: str = "",
+                  kill: bool = False, unknown_after: int = 5) -> BridgeJobSpec:
+        """Spec targeting one of the five built-in backends."""
+        s3 = None
+        if scriptlocation == "s3" or uploadfiles or additionaldata:
+            s3 = S3Storage(s3secret="s3-secret", endpoint=self.s3.endpoint,
+                           uploadfiles=uploadfiles, uploadbucket=uploadbucket)
+        return BridgeJobSpec(
+            resourceURL=URLS[kind], image=IMAGES[kind],
+            resourcesecret=f"{kind}-secret", updateinterval=updateinterval,
+            jobdata=JobData(jobscript=script, scriptlocation=scriptlocation,
+                            additionaldata=additionaldata,
+                            jobparams=dict(jobparams or {})),
+            jobproperties=dict(jobproperties or {}), s3storage=s3,
+            kill=kill, unknown_after=unknown_after)
+
+    def submit(self, name: str, spec: BridgeJobSpec,
+               namespace: str = "default") -> BridgeJob:
+        return self.registry.create(BridgeJob(name=name, spec=spec,
+                                              namespace=namespace))

@@ -1,0 +1,257 @@
+"""ControllerPod — the paper's "workhorse" (Figs. 2-3).
+
+One pod per remote job.  The pod:
+  1. reads execution data from the associated config map,
+  2. mounts secrets, connects to the remote resource manager over the
+     HTTP/HTTPS API (the ONLY channel to the external system),
+  3. fetches the job script (inline / s3 / remote) and stages extra data,
+  4. submits IF AND ONLY IF the config map holds no job id — a restarted pod
+     finds the id and resumes monitoring instead of resubmitting (paper §5.1),
+  5. runs the monitor loop: poll status, mirror it into the config map,
+     honour the kill flag, tolerate transient network failures (UNKNOWN
+     after ``unknown_after`` consecutive failures — never invent a terminal
+     state),
+  6. on completion downloads outputs and uploads them to S3, then exits
+     0 (COMPLETED) / 1 (FAILED or CANCELLED), exactly like Fig. 3.
+
+Pod death is simulated by ``kill_pod()``: the thread aborts at the next
+action boundary WITHOUT flushing anything — only config-map state survives,
+which is precisely the failure mode the paper's design addresses.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Dict, Mapping, Optional, Type
+
+from repro.core.backends import base as B
+from repro.core.objectstore import NoSuchKey, ObjectStore
+from repro.core.resource import (DONE, FAILED, KILLED, RUNNING, SUBMITTED,
+                                 UNKNOWN)
+from repro.core.rest import ResourceManagerDirectory, TransportError
+from repro.core.secrets import SecretStore
+from repro.core.statestore import ConfigMap, StateStore
+
+# backend canonical -> bridge state
+_CANON_TO_BRIDGE = {
+    B.QUEUED: SUBMITTED,
+    B.RUNNING: RUNNING,
+    B.COMPLETED: DONE,
+    B.FAILED: FAILED,
+    B.CANCELLED: KILLED,
+}
+
+
+class PodKilled(BaseException):
+    """Out-of-band pod termination (node failure / eviction)."""
+
+
+class ControllerPod:
+    # pod phases (Kubernetes-like)
+    PENDING = "Pending"
+    RUNNING_PHASE = "Running"
+    SUCCEEDED = "Succeeded"
+    FAILED_PHASE = "Failed"
+    KILLED_PHASE = "Killed"   # external kill (node loss) — operator restarts
+
+    def __init__(self, name: str, configmap: ConfigMap, secrets: SecretStore,
+                 objectstore: ObjectStore, directory: ResourceManagerDirectory,
+                 adapters: Mapping[str, Type[B.ResourceAdapter]],
+                 min_sleep: float = 0.005):
+        self.name = name
+        self.cm = configmap
+        self.secrets = secrets
+        self.s3 = objectstore
+        self.directory = directory
+        self.adapters = dict(adapters)
+        self.min_sleep = min_sleep
+        self.phase = self.PENDING
+        self.exit_code: Optional[int] = None
+        self.error: str = ""
+        self._killed = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"pod-{name}")
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def kill_pod(self) -> None:
+        """Simulate pod/node failure: abort without flushing state."""
+        self._killed.set()
+
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)
+
+    # -- internals ----------------------------------------------------------
+
+    def _checkpoint(self) -> None:
+        """Action boundary: a killed pod dies here, state unflushed."""
+        if self._killed.is_set():
+            raise PodKilled(self.name)
+
+    def _sleep(self, seconds: float) -> None:
+        deadline = time.time() + seconds
+        while time.time() < deadline:
+            self._checkpoint()
+            time.sleep(min(self.min_sleep, max(deadline - time.time(), 0)))
+
+    def _adapter_for(self, image: str, client) -> B.ResourceAdapter:
+        base_image = image.split(":")[0]
+        if base_image not in self.adapters:
+            raise KeyError(f"no controller implementation for image {image!r}")
+        return self.adapters[base_image](client)
+
+    # -- paper Fig. 2: main --------------------------------------------------
+
+    def _run(self) -> None:
+        self.phase = self.RUNNING_PHASE
+        try:
+            self._main()
+        except PodKilled:
+            self.phase = self.KILLED_PHASE
+        except Exception as e:  # pod crash (bug/unhandled) — operator restarts
+            self.error = f"{type(e).__name__}: {e}"
+            self.phase = self.KILLED_PHASE
+
+    def _main(self) -> None:
+        cm_data = self.cm.data
+        url = cm_data["resourceURL"]
+        image = cm_data["image"]
+        poll = float(cm_data.get("updateinterval", "20"))
+
+        # credentials from the mounted secret (never from the spec/config map)
+        secret = self.secrets.mount(cm_data["resourcesecret"])
+        token = secret.get("token", "")
+        client = self.directory.connect(url, token)
+        adapter = self._adapter_for(image, client)
+
+        job_id = cm_data.get("id", "")
+        if not job_id:
+            job_id = self._submit(adapter, cm_data)
+            if not job_id:
+                return  # FAILED already recorded; Fig. 2 klog.Exit path
+        else:
+            # paper: "Job has ID in ConfigMap. Handling state."
+            pass
+        self._monitor(adapter, job_id, poll, cm_data)
+
+    def _submit(self, adapter: B.ResourceAdapter, cm_data: Dict[str, str]) -> str:
+        self._checkpoint()
+        try:
+            script = self._fetch_script(cm_data)
+            self._stage_additional_data(adapter, cm_data)
+            properties = json.loads(cm_data.get("jobproperties", "{}"))
+            params = json.loads(cm_data.get("jobparams", "{}"))
+            job_id = adapter.submit(script, properties, params)
+        except (B.SubmitError, TransportError, NoSuchKey, KeyError, ValueError) as e:
+            self.cm.update({"jobStatus": FAILED,
+                            "message": f"Failed to submit a job to HPC resource: {e}"})
+            self._exit(1)
+            return ""
+        self.cm.update({"id": job_id, "jobStatus": SUBMITTED,
+                        "submit_time": str(time.time()), "message": ""})
+        return job_id
+
+    def _fetch_script(self, cm_data: Dict[str, str]) -> str:
+        loc = cm_data.get("scriptlocation", "inline")
+        script = cm_data.get("jobscript", "")
+        if loc == "inline":
+            return script
+        if loc == "s3":
+            bucket, key = ObjectStore.parse_ref(script)
+            return self.s3.get_text(bucket, key)
+        if loc == "remote":
+            return script  # path already on the resource; submit by reference
+        raise ValueError(f"scriptlocation {loc!r}")
+
+    def _stage_additional_data(self, adapter: B.ResourceAdapter,
+                               cm_data: Dict[str, str]) -> None:
+        """Upload extra input files (s3 -> resource) where the API allows."""
+        refs = [r for r in cm_data.get("additionaldata", "").split(",") if r]
+        for ref in refs:
+            bucket, key = ObjectStore.parse_ref(ref)
+            data = self.s3.get(bucket, key)
+            name = key.split("/")[-1]
+            if not adapter.upload(name, data):
+                # API without upload (e.g. slurmrestd): the job script must
+                # fetch from S3 itself; record for observability.
+                self.cm.update({"staging": f"unsupported:{name}"})
+
+    # -- paper Fig. 3: monitor ------------------------------------------------
+
+    def _monitor(self, adapter: B.ResourceAdapter, job_id: str, poll: float,
+                 cm_data: Dict[str, str]) -> None:
+        unknown_after = int(cm_data.get("unknown_after", "5"))
+        consecutive_failures = 0
+        kill_sent = False
+        while True:
+            self._sleep(poll)
+            cm_now = self.cm.data  # Fig. 3: "Get current config map"
+            try:
+                info = adapter.status(job_id)
+                consecutive_failures = 0
+            except (TransportError, B.SubmitError) as e:
+                consecutive_failures += 1
+                if consecutive_failures >= unknown_after:
+                    # black-box honesty: unreachable != dead
+                    self.cm.update({"jobStatus": UNKNOWN,
+                                    "message": f"resource unreachable: {e}"})
+                continue
+
+            state = _CANON_TO_BRIDGE[info["state"]]
+            updates = {"jobStatus": state, "message": info.get("reason", "") or ""}
+            if info.get("start_time"):
+                updates["start_time"] = str(info["start_time"])
+            if info.get("end_time"):
+                updates["end_time"] = str(info["end_time"])
+            if info.get("results_location"):
+                updates["results_location"] = info["results_location"]
+            self.cm.update(updates)
+
+            if cm_now.get("kill", "false") == "true" and not kill_sent:
+                try:
+                    adapter.cancel(job_id)
+                    kill_sent = True
+                except TransportError:
+                    pass  # retry next poll
+
+            if state == DONE:
+                self._finalize_outputs(adapter, job_id, cm_now)
+                self._exit(0)
+                return
+            if state in (FAILED, KILLED):
+                self._exit(1)
+                return
+
+    def _finalize_outputs(self, adapter: B.ResourceAdapter, job_id: str,
+                          cm_data: Dict[str, str]) -> None:
+        """Download outputs from the resource; upload to S3 if configured."""
+        self._checkpoint()
+        props = json.loads(cm_data.get("jobproperties", "{}"))
+        bucket = cm_data.get("s3uploadbucket", "")
+        names = [n for n in cm_data.get("s3uploadfiles", "").split(",") if n]
+        for key in ("OutputFileName", "ErrorFileName"):
+            if props.get(key) and props[key] not in names:
+                names.append(props[key])
+        uploaded = []
+        for name in names:
+            data = adapter.download(name)
+            if data is None and hasattr(adapter, "download_logs"):
+                data = adapter.download_logs(job_id)  # ray idiom
+            if data is None:
+                continue
+            if bucket:
+                self.s3.put(bucket, f"{self.name}/{name}", data)
+                uploaded.append(f"{bucket}:{self.name}/{name}")
+        if uploaded:
+            self.cm.update({"outputs": ",".join(uploaded)})
+
+    def _exit(self, code: int) -> None:
+        self.exit_code = code
+        self.phase = self.SUCCEEDED if code == 0 else self.FAILED_PHASE

@@ -1,0 +1,257 @@
+"""BridgeOperator — the reconciler (paper §5.1).
+
+Watches BridgeJob custom resources and drives the world toward their
+declared state:
+
+  * CR created   -> create the per-job config map (populated from the spec),
+                    create the controller pod (one per remote job).
+  * pod dies     -> if the job is not terminal, RESTART the pod; the new pod
+                    finds the remote id in the config map and resumes
+                    monitoring (never resubmits).
+  * CR kill flag -> write kill=true into the config map; the pod's monitor
+                    loop cancels the remote job.
+  * CR deleted   -> kill pod, delete config map, purge the CR (cleanup).
+  * always       -> mirror config-map state into CR.status
+                    (DONE/KILLED/FAILED/UNKNOWN + start/end times).
+
+The operator is GENERIC: nothing here knows which resource manager is behind
+a job — that knowledge lives in the controller-pod adapter chosen by
+``spec.image`` (paper: "the operator is generic, implementation of a
+controller pod is specific for a given external resource manager").
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+import time
+from typing import Dict, Mapping, Optional, Type
+
+from repro.core.backends import base as B
+from repro.core.controller import ControllerPod
+from repro.core.objectstore import ObjectStore
+from repro.core.registry import ResourceRegistry
+from repro.core.resource import (ALL_STATES, BridgeJob, PENDING, RUNNING,
+                                 SUBMITTED, TERMINAL_STATES, UNKNOWN)
+from repro.core.rest import ResourceManagerDirectory
+from repro.core.secrets import SecretStore
+from repro.core.statestore import StateStore
+
+# default adapter registry (image prefix -> controller implementation)
+def default_adapters() -> Dict[str, Type[B.ResourceAdapter]]:
+    from repro.core.backends.jaxlocal import JaxLocalAdapter
+    from repro.core.backends.lsf import LSFAdapter
+    from repro.core.backends.quantum import QuantumAdapter
+    from repro.core.backends.ray import RayAdapter
+    from repro.core.backends.slurm import SlurmAdapter
+
+    return {a.image: a for a in
+            (SlurmAdapter, LSFAdapter, QuantumAdapter, RayAdapter,
+             JaxLocalAdapter)}
+
+
+class BridgeOperator:
+    def __init__(self, registry: ResourceRegistry, statestore: StateStore,
+                 secrets: SecretStore, objectstore: ObjectStore,
+                 directory: ResourceManagerDirectory,
+                 adapters: Optional[Mapping[str, Type[B.ResourceAdapter]]] = None,
+                 reconcile_interval: float = 0.02,
+                 max_restarts: Optional[int] = None,
+                 pod_min_sleep: float = 0.005):
+        self.registry = registry
+        self.statestore = statestore
+        self.secrets = secrets
+        self.s3 = objectstore
+        self.directory = directory
+        self.adapters = dict(adapters or default_adapters())
+        self.reconcile_interval = reconcile_interval
+        self.max_restarts = max_restarts
+        self.pod_min_sleep = pod_min_sleep
+        self.pods: Dict[str, ControllerPod] = {}
+        self._events: "queue.Queue" = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.RLock()
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> "BridgeOperator":
+        self._events = self.registry.watch(include_existing=True)
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="bridge-operator")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2)
+        self.registry.unwatch(self._events)
+        for pod in self.pods.values():
+            pod.kill_pod()
+
+    # -- naming ----------------------------------------------------------------
+
+    @staticmethod
+    def cm_name(job: BridgeJob) -> str:
+        return f"{job.uid}-bridge-cm"
+
+    # -- reconcile loop -----------------------------------------------------
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            drained = False
+            try:
+                while True:
+                    event, job = self._events.get_nowait()
+                    drained = True
+                    self._handle_event(event, job)
+            except queue.Empty:
+                pass
+            self._sweep()
+            if not drained:
+                time.sleep(self.reconcile_interval)
+
+    def _handle_event(self, event: str, job: BridgeJob) -> None:
+        if event == "ADDED":
+            self._ensure_started(job)
+        elif event == "MODIFIED":
+            if job.spec.kill and not job.status.terminal():
+                try:
+                    self.statestore.get(self.cm_name(job)).update({"kill": "true"})
+                except KeyError:
+                    pass
+        elif event == "DELETED":
+            self._finalize_delete(job)
+
+    def _ensure_started(self, job: BridgeJob) -> None:
+        with self._lock:
+            if job.uid in self.pods or job.deleted:
+                return
+            cm = self.statestore.get_or_create(
+                self.cm_name(job), self._cm_payload(job))
+            self.registry.update_status(job.name, job.namespace, state=PENDING)
+            self._spawn_pod(job)
+
+    def _cm_payload(self, job: BridgeJob) -> Dict[str, str]:
+        """Operator 'populates the configuration map with the parameters
+        required for the pod's execution' (paper §5.1)."""
+        s = job.spec
+        data = {
+            "resourceURL": s.resourceURL,
+            "image": s.image,
+            "resourcesecret": s.resourcesecret,
+            "updateinterval": str(s.updateinterval),
+            "jobscript": s.jobdata.jobscript,
+            "scriptlocation": s.jobdata.scriptlocation,
+            "additionaldata": s.jobdata.additionaldata,
+            "jobproperties": json.dumps(s.jobproperties),
+            "jobparams": json.dumps(s.jobdata.jobparams),
+            "unknown_after": str(s.unknown_after),
+            "id": "",
+            "jobStatus": PENDING,
+            "kill": "true" if s.kill else "false",
+            "message": "",
+        }
+        if s.s3storage:
+            data["s3endpoint"] = s.s3storage.endpoint
+            data["s3secret"] = s.s3storage.s3secret
+            data["s3uploadfiles"] = s.s3storage.uploadfiles
+            data["s3uploadbucket"] = s.s3storage.uploadbucket
+        return data
+
+    def _spawn_pod(self, job: BridgeJob) -> None:
+        cm = self.statestore.get(self.cm_name(job))
+        pod = ControllerPod(
+            name=f"{job.uid}-pod", configmap=cm, secrets=self.secrets,
+            objectstore=self.s3, directory=self.directory,
+            adapters=self.adapters, min_sleep=self.pod_min_sleep)
+        self.pods[job.uid] = pod
+        pod.start()
+
+    # -- periodic sweep: status mirroring + pod restart -------------------------
+
+    def _sweep(self) -> None:
+        for job in self.registry.list():
+            if job.deleted:
+                self._finalize_delete(job)
+                continue
+            pod = self.pods.get(job.uid)
+            if pod is None:
+                self._ensure_started(job)
+                continue
+            self._mirror_status(job)
+            if not pod.alive():
+                self._handle_pod_exit(job, pod)
+
+    def _mirror_status(self, job: BridgeJob) -> None:
+        try:
+            data = self.statestore.get(self.cm_name(job)).data
+        except KeyError:
+            return
+        state = data.get("jobStatus", PENDING)
+        if state not in ALL_STATES:
+            state = UNKNOWN
+        fields = dict(state=state, message=data.get("message", ""),
+                      job_id=data.get("id", ""))
+        if data.get("start_time"):
+            fields["start_time"] = float(data["start_time"])
+        if data.get("end_time"):
+            fields["end_time"] = float(data["end_time"])
+        if (job.status.state, job.status.message, job.status.job_id,
+                job.status.start_time, job.status.end_time) != (
+                fields["state"], fields["message"], fields["job_id"],
+                fields.get("start_time", job.status.start_time),
+                fields.get("end_time", job.status.end_time)):
+            self.registry.update_status(job.name, job.namespace, **fields)
+
+    def _handle_pod_exit(self, job: BridgeJob, pod: ControllerPod) -> None:
+        terminal = job.status.terminal()
+        if pod.phase in (ControllerPod.SUCCEEDED, ControllerPod.FAILED_PHASE):
+            # pod finished its protocol; nothing to do (status already mirrored)
+            return
+        if terminal:
+            return
+        # pod died out-of-band -> restart; the new pod resumes via config map
+        if (self.max_restarts is not None
+                and job.status.restarts >= self.max_restarts):
+            self.registry.update_status(
+                job.name, job.namespace, state=UNKNOWN,
+                message=f"pod crash-looped ({job.status.restarts} restarts): "
+                        f"{pod.error}")
+            return
+        self.registry.update_status(job.name, job.namespace,
+                                    restarts=job.status.restarts + 1)
+        self._spawn_pod(job)
+
+    def _finalize_delete(self, job: BridgeJob) -> None:
+        """CR deletion cleans up all associated resources (paper §5.1)."""
+        with self._lock:
+            pod = self.pods.pop(job.uid, None)
+        if pod is not None:
+            pod.kill_pod()
+        self.statestore.delete(self.cm_name(job))
+        self.registry.purge(job.name, job.namespace)
+
+    # -- convenience (kubectl-style sync helpers) ----------------------------
+
+    def wait_for(self, name: str, namespace: str = "default",
+                 timeout: float = 30.0) -> BridgeJob:
+        """Block until the job reaches a terminal state."""
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            job = self.registry.get(name, namespace)
+            if job is not None and job.status.terminal():
+                return job
+            time.sleep(0.01)
+        raise TimeoutError(f"BridgeJob {namespace}/{name} not terminal "
+                           f"after {timeout}s "
+                           f"(state={job.status.state if job else '?'})")
+
+    def kill(self, name: str, namespace: str = "default") -> None:
+        """User-facing kill signal: update the CR (paper: 'A user can also
+        update the CR with a kill signal')."""
+        import dataclasses
+
+        self.registry.update_spec(
+            name, lambda s: dataclasses.replace(s, kill=True), namespace)

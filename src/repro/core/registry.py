@@ -1,0 +1,113 @@
+"""Declarative resource registry with watch semantics (API-server analogue).
+
+Kubernetes is "a declarative system — you supply the representation of the
+desired state ... and the system determines the sequence of commands to
+transition to this desired state" (paper §2.2).  The registry stores BridgeJob
+CRs, versions every mutation, and delivers (event, object) pairs to watchers —
+the substrate the operator's reconcile loop runs on.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.resource import BridgeJob, BridgeJobSpec, ValidationError
+
+Event = Tuple[str, BridgeJob]  # ("ADDED"|"MODIFIED"|"DELETED", job)
+
+
+class ResourceRegistry:
+    def __init__(self) -> None:
+        self._objects: Dict[str, BridgeJob] = {}
+        self._lock = threading.RLock()
+        self._watchers: List["queue.Queue[Event]"] = []
+        self._version = 0
+
+    # -- CRUD (kubectl analogue) -------------------------------------------
+
+    def create(self, job: BridgeJob) -> BridgeJob:
+        job.spec.validate()
+        with self._lock:
+            if job.uid in self._objects:
+                raise ValidationError(f"{job.uid} already exists")
+            self._version += 1
+            job.resource_version = self._version
+            self._objects[job.uid] = job
+            self._notify("ADDED", job)
+        return job
+
+    def get(self, name: str, namespace: str = "default") -> Optional[BridgeJob]:
+        with self._lock:
+            return self._objects.get(f"{namespace}/{name}")
+
+    def list(self, namespace: Optional[str] = None) -> List[BridgeJob]:
+        with self._lock:
+            return [j for j in self._objects.values()
+                    if namespace is None or j.namespace == namespace]
+
+    def update_spec(self, name: str, mutate: Callable[[BridgeJobSpec], BridgeJobSpec],
+                    namespace: str = "default") -> BridgeJob:
+        """Replace the spec (e.g. set kill=True) and notify watchers."""
+        with self._lock:
+            job = self._require(name, namespace)
+            job.spec = mutate(job.spec)
+            job.spec.validate()
+            self._version += 1
+            job.resource_version = self._version
+            self._notify("MODIFIED", job)
+            return job
+
+    def update_status(self, name: str, namespace: str = "default",
+                      **fields) -> BridgeJob:
+        with self._lock:
+            job = self._require(name, namespace)
+            for k, v in fields.items():
+                if not hasattr(job.status, k):
+                    raise AttributeError(f"BridgeJobStatus has no field {k!r}")
+                setattr(job.status, k, v)
+            self._version += 1
+            job.resource_version = self._version
+            self._notify("MODIFIED", job)
+            return job
+
+    def delete(self, name: str, namespace: str = "default") -> None:
+        """Mark deleted; the operator finalizes (GCs pod/configmap) then purges."""
+        with self._lock:
+            job = self._require(name, namespace)
+            job.deleted = True
+            self._version += 1
+            job.resource_version = self._version
+            self._notify("DELETED", job)
+
+    def purge(self, name: str, namespace: str = "default") -> None:
+        with self._lock:
+            self._objects.pop(f"{namespace}/{name}", None)
+
+    # -- watch ---------------------------------------------------------------
+
+    def watch(self, include_existing: bool = True) -> "queue.Queue[Event]":
+        q: "queue.Queue[Event]" = queue.Queue()
+        with self._lock:
+            if include_existing:
+                for job in self._objects.values():
+                    q.put(("ADDED", job))
+            self._watchers.append(q)
+        return q
+
+    def unwatch(self, q: "queue.Queue[Event]") -> None:
+        with self._lock:
+            if q in self._watchers:
+                self._watchers.remove(q)
+
+    # -- internals -------------------------------------------------------------
+
+    def _require(self, name: str, namespace: str) -> BridgeJob:
+        job = self._objects.get(f"{namespace}/{name}")
+        if job is None:
+            raise KeyError(f"BridgeJob {namespace}/{name} not found")
+        return job
+
+    def _notify(self, event: str, job: BridgeJob) -> None:
+        for q in self._watchers:
+            q.put((event, job))

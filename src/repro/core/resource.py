@@ -1,0 +1,210 @@
+"""BridgeJob — the paper's Custom Resource (CRD analogue).
+
+Mirrors the ``BridgeJob`` yaml of paper Fig. 1:
+
+    kind: BridgeJob
+    apiVersion: bridgeoperator.ibm.com/v1alpha1
+    metadata: {name: slurmjob-test}
+    spec:
+      resourceURL: http://my-slurm-cluster@hpc.com
+      image: slurmpod:0.1
+      resourcesecret: mysecret
+      imagepullpolicy: Always
+      updateinterval: 20
+      jobdata: {jobscript: ..., scriptlocation: s3|remote|inline, ...}
+      jobproperties: {...}
+      s3storage: {s3secret: ..., endpoint: ..., secure: ...}
+
+The spec is declarative; the operator reconciles it.  Status carries the
+paper's terminal states DONE/KILLED/FAILED/UNKNOWN plus start/end times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+API_VERSION = "bridgeoperator.repro/v1alpha1"
+KIND = "BridgeJob"
+
+# Lifecycle states (paper §5.1 + DESIGN.md §8).
+PENDING = "PENDING"
+SUBMITTED = "SUBMITTED"
+RUNNING = "RUNNING"
+DONE = "DONE"
+FAILED = "FAILED"
+KILLED = "KILLED"
+UNKNOWN = "UNKNOWN"
+
+TERMINAL_STATES = (DONE, FAILED, KILLED)
+ALL_STATES = (PENDING, SUBMITTED, RUNNING, DONE, FAILED, KILLED, UNKNOWN)
+
+SCRIPT_LOCATIONS = ("inline", "s3", "remote")
+
+
+class ValidationError(ValueError):
+    pass
+
+
+@dataclass(frozen=True)
+class JobData:
+    """spec.jobdata — what to run and where the script lives."""
+    jobscript: str = ""          # inline text | "bucket:key" | remote path
+    scriptlocation: str = "inline"
+    scriptmd: str = ""           # optional integrity digest
+    additionaldata: str = ""     # comma-sep "bucket:key" files staged to the resource
+    jobparams: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class S3Storage:
+    """spec.s3storage — object-store endpoint used for staging/uploads."""
+    s3secret: str = ""
+    endpoint: str = ""
+    secure: bool = False
+    uploadfiles: str = ""        # comma-sep output files to upload on completion
+    uploadbucket: str = ""
+
+
+@dataclass(frozen=True)
+class BridgeJobSpec:
+    resourceURL: str
+    image: str                     # controller-pod image == backend kind ("slurmpod:0.1")
+    resourcesecret: str
+    imagepullpolicy: str = "IfNotPresent"
+    updateinterval: float = 20.0   # poll seconds (paper: CR poll parameter)
+    jobdata: JobData = field(default_factory=JobData)
+    jobproperties: Dict[str, str] = field(default_factory=dict)
+    s3storage: Optional[S3Storage] = None
+    # kill signal: "a user can also update the CR with a kill signal" (§5.1)
+    kill: bool = False
+    # UNKNOWN after this many consecutive unreachable polls (DESIGN.md §8)
+    unknown_after: int = 5
+
+    def validate(self) -> None:
+        if not self.resourceURL:
+            raise ValidationError("spec.resourceURL is required")
+        if not self.image:
+            raise ValidationError("spec.image is required")
+        if not self.resourcesecret:
+            raise ValidationError("spec.resourcesecret is required")
+        if self.updateinterval <= 0:
+            raise ValidationError("spec.updateinterval must be > 0")
+        if self.jobdata.scriptlocation not in SCRIPT_LOCATIONS:
+            raise ValidationError(
+                f"spec.jobdata.scriptlocation {self.jobdata.scriptlocation!r} "
+                f"not in {SCRIPT_LOCATIONS}")
+        if self.jobdata.scriptlocation == "s3":
+            if self.s3storage is None:
+                raise ValidationError("scriptlocation=s3 requires spec.s3storage")
+            if ":" not in self.jobdata.jobscript:
+                raise ValidationError("s3 jobscript must be 'bucket:key'")
+        if self.s3storage and self.s3storage.uploadfiles and not self.s3storage.uploadbucket:
+            raise ValidationError("s3storage.uploadfiles requires uploadbucket")
+
+
+@dataclass
+class BridgeJobStatus:
+    state: str = PENDING
+    message: str = ""
+    job_id: str = ""               # remote job id (mirrored from the config map)
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
+    restarts: int = 0              # controller-pod restarts performed by the operator
+
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+
+@dataclass
+class BridgeJob:
+    """A full CR object: metadata + spec + status."""
+    name: str
+    spec: BridgeJobSpec
+    namespace: str = "default"
+    status: BridgeJobStatus = field(default_factory=BridgeJobStatus)
+    # registry bookkeeping
+    resource_version: int = 0
+    deleted: bool = False
+
+    @property
+    def uid(self) -> str:
+        return f"{self.namespace}/{self.name}"
+
+    # -- dict round-trip (yaml-equivalent; json keeps the container offline) --
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {
+            "apiVersion": API_VERSION,
+            "kind": KIND,
+            "metadata": {"name": self.name, "namespace": self.namespace},
+            "spec": _spec_to_dict(self.spec),
+            "status": dataclasses.asdict(self.status),
+        }
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "BridgeJob":
+        if d.get("kind", KIND) != KIND:
+            raise ValidationError(f"kind {d.get('kind')!r} != {KIND}")
+        meta = d.get("metadata", {})
+        spec = spec_from_dict(d.get("spec", {}))
+        job = BridgeJob(name=meta.get("name", ""), spec=spec,
+                        namespace=meta.get("namespace", "default"))
+        if not job.name:
+            raise ValidationError("metadata.name is required")
+        spec.validate()
+        return job
+
+
+def _spec_to_dict(s: BridgeJobSpec) -> Dict[str, Any]:
+    d: Dict[str, Any] = {
+        "resourceURL": s.resourceURL,
+        "image": s.image,
+        "resourcesecret": s.resourcesecret,
+        "imagepullpolicy": s.imagepullpolicy,
+        "updateinterval": s.updateinterval,
+        "jobdata": dataclasses.asdict(s.jobdata),
+        "jobproperties": dict(s.jobproperties),
+        "kill": s.kill,
+        "unknown_after": s.unknown_after,
+    }
+    if s.s3storage is not None:
+        d["s3storage"] = dataclasses.asdict(s.s3storage)
+    return d
+
+
+def spec_from_dict(d: Dict[str, Any]) -> BridgeJobSpec:
+    jd = d.get("jobdata", {})
+    s3 = d.get("s3storage")
+    spec = BridgeJobSpec(
+        resourceURL=d.get("resourceURL", ""),
+        image=d.get("image", ""),
+        resourcesecret=d.get("resourcesecret", ""),
+        imagepullpolicy=d.get("imagepullpolicy", "IfNotPresent"),
+        updateinterval=float(d.get("updateinterval", 20.0)),
+        jobdata=JobData(
+            jobscript=jd.get("jobscript", ""),
+            scriptlocation=jd.get("scriptlocation", "inline"),
+            scriptmd=jd.get("scriptmd", ""),
+            additionaldata=jd.get("additionaldata", ""),
+            jobparams=dict(jd.get("jobparams", {})),
+        ),
+        jobproperties=dict(d.get("jobproperties", {})),
+        s3storage=None if s3 is None else S3Storage(
+            s3secret=s3.get("s3secret", ""),
+            endpoint=s3.get("endpoint", ""),
+            secure=bool(s3.get("secure", False)),
+            uploadfiles=s3.get("uploadfiles", ""),
+            uploadbucket=s3.get("uploadbucket", ""),
+        ),
+        kill=bool(d.get("kill", False)),
+        unknown_after=int(d.get("unknown_after", 5)),
+    )
+    return spec
+
+
+def load_bridgejob(text: str) -> BridgeJob:
+    """Parse a BridgeJob from its JSON serialization (yaml stand-in)."""
+    return BridgeJob.from_dict(json.loads(text))

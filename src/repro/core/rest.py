@@ -1,0 +1,142 @@
+"""HTTP/HTTPS transport simulation.
+
+The paper's only assumption on an external system is that it "exposes a
+HTTP/HTTPS API for its control/management".  We preserve that boundary: the
+controller pods talk to backends EXCLUSIVELY through ``RestClient.request``
+(method, path, json) and never call backend internals.  The transport injects
+the unreliable-network character (latency, fault windows, auth failures) that
+the bridge's retry/UNKNOWN logic exists to survive.
+"""
+from __future__ import annotations
+
+import random
+import re
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class TransportError(ConnectionError):
+    """Network-level failure (timeout / connection refused)."""
+
+
+@dataclass
+class HttpResponse:
+    status: int
+    json: Any = None
+
+    @property
+    def ok(self) -> bool:
+        return 200 <= self.status < 300
+
+
+@dataclass
+class FaultProfile:
+    """Deterministic (seeded) fault injection for the simulated network."""
+    drop_rate: float = 0.0        # probability a request raises TransportError
+    latency: float = 0.0          # fixed per-request latency (seconds)
+    seed: int = 0
+    # hard outage window: every request fails while ``outage`` is set
+    _outage: threading.Event = field(default_factory=threading.Event, repr=False)
+    _rng: random.Random = field(default=None, repr=False)
+
+    def __post_init__(self):
+        self._rng = random.Random(self.seed)
+
+    def begin_outage(self) -> None:
+        self._outage.set()
+
+    def end_outage(self) -> None:
+        self._outage.clear()
+
+    def check(self) -> None:
+        if self.latency:
+            time.sleep(self.latency)
+        if self._outage.is_set():
+            raise TransportError("simulated network outage")
+        if self.drop_rate and self._rng.random() < self.drop_rate:
+            raise TransportError("simulated packet loss")
+
+
+Handler = Callable[[Dict[str, str], Any], HttpResponse]
+
+
+class RestServer:
+    """Route table + bearer-token auth for one simulated resource manager."""
+
+    def __init__(self, token: str = "", fault: Optional[FaultProfile] = None):
+        self._routes: List[Tuple[str, re.Pattern, Handler]] = []
+        self._token = token
+        self.fault = fault or FaultProfile()
+        self.request_count = 0
+        self._lock = threading.Lock()
+
+    def route(self, method: str, pattern: str, handler: Handler) -> None:
+        """pattern: '/jobs/{id}' -> named groups."""
+        rx = re.compile("^" + re.sub(r"\{(\w+)\}", r"(?P<\1>[^/]+)", pattern) + "$")
+        self._routes.append((method.upper(), rx, handler))
+
+    def handle(self, method: str, path: str, json_body: Any = None,
+               headers: Optional[Dict[str, str]] = None) -> HttpResponse:
+        self.fault.check()
+        with self._lock:
+            self.request_count += 1
+        headers = headers or {}
+        if self._token:
+            auth = headers.get("Authorization", "")
+            if auth != f"Bearer {self._token}":
+                return HttpResponse(401, {"error": "unauthorized"})
+        for m, rx, handler in self._routes:
+            if m != method.upper():
+                continue
+            match = rx.match(path)
+            if match:
+                try:
+                    return handler(match.groupdict(), json_body)
+                except Exception as e:  # backend bug -> 500, not a crash
+                    return HttpResponse(500, {"error": f"{type(e).__name__}: {e}"})
+        return HttpResponse(404, {"error": f"no route {method} {path}"})
+
+
+class RestClient:
+    """What a controller pod holds: endpoint + credentials, nothing else."""
+
+    def __init__(self, server: RestServer, token: str = "", timeout: float = 5.0):
+        self._server = server
+        self._token = token
+        self.timeout = timeout
+
+    def request(self, method: str, path: str, json: Any = None) -> HttpResponse:
+        headers = {"Authorization": f"Bearer {self._token}"} if self._token else {}
+        return self._server.handle(method, path, json, headers)
+
+    def get(self, path: str) -> HttpResponse:
+        return self.request("GET", path)
+
+    def post(self, path: str, json: Any = None) -> HttpResponse:
+        return self.request("POST", path, json)
+
+    def delete(self, path: str) -> HttpResponse:
+        return self.request("DELETE", path)
+
+    def put(self, path: str, json: Any = None) -> HttpResponse:
+        return self.request("PUT", path, json)
+
+
+class ResourceManagerDirectory:
+    """Maps resourceURL -> RestServer (DNS + ingress analogue)."""
+
+    def __init__(self) -> None:
+        self._servers: Dict[str, RestServer] = {}
+
+    def register(self, url: str, server: RestServer) -> None:
+        self._servers[url] = server
+
+    def connect(self, url: str, token: str = "") -> RestClient:
+        if url not in self._servers:
+            raise TransportError(f"cannot resolve {url!r}")
+        return RestClient(self._servers[url], token)
+
+    def urls(self) -> List[str]:
+        return sorted(self._servers)

@@ -1,0 +1,119 @@
+"""Load-aware backend selection — the paper's named FUTURE WORK (§7):
+
+    "Future work will focus on creating companion operator using the same
+    approach to monitor current load on these remote resources and make
+    intelligent decisions on which remote resource ... to use for execution."
+
+Beyond-paper feature: a companion that polls each registered resource
+manager's queue via the SAME HTTP surface the bridge uses, scores load, and
+picks a target.  Also provides speculative (straggler-mitigation) execution:
+launch the same payload on the two least-loaded resources, keep the first
+finisher, kill the other.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Mapping, Optional, Tuple, Type
+
+from repro.core.backends import base as B
+from repro.core.registry import ResourceRegistry
+from repro.core.resource import BridgeJob, BridgeJobSpec, DONE, KILLED
+from repro.core.rest import ResourceManagerDirectory, TransportError
+from repro.core.secrets import SecretStore
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One schedulable target: where + how to talk to it."""
+    resourceURL: str
+    image: str           # selects the controller-pod adapter
+    resourcesecret: str
+
+
+class LoadAwareScheduler:
+    def __init__(self, directory: ResourceManagerDirectory, secrets: SecretStore,
+                 adapters: Mapping[str, Type[B.ResourceAdapter]],
+                 candidates: List[Candidate]):
+        self.directory = directory
+        self.secrets = secrets
+        self.adapters = dict(adapters)
+        self.candidates = list(candidates)
+
+    def load_of(self, cand: Candidate) -> Optional[float]:
+        """Normalized load: (queued + running) / slots.  None if unreachable."""
+        try:
+            token = self.secrets.mount(cand.resourcesecret).get("token", "")
+            client = self.directory.connect(cand.resourceURL, token)
+            adapter = self.adapters[cand.image.split(":")[0]](client)
+            q = adapter.queue_load()
+        except (TransportError, KeyError):
+            return None
+        if not q or not q.get("slots"):
+            return None
+        return (q["queued"] + q["running"]) / q["slots"]
+
+    def rank(self) -> List[Tuple[float, Candidate]]:
+        scored = []
+        for c in self.candidates:
+            load = self.load_of(c)
+            if load is not None:
+                scored.append((load, c))
+        scored.sort(key=lambda t: t[0])
+        return scored
+
+    def pick(self) -> Candidate:
+        ranked = self.rank()
+        if not ranked:
+            raise RuntimeError("no reachable candidate resource")
+        return ranked[0][1]
+
+    def place(self, spec: BridgeJobSpec) -> BridgeJobSpec:
+        """Rewrite a spec to target the least-loaded candidate."""
+        best = self.pick()
+        return dataclasses.replace(spec, resourceURL=best.resourceURL,
+                                   image=best.image,
+                                   resourcesecret=best.resourcesecret)
+
+    # -- speculative execution (straggler mitigation) ------------------------
+
+    def submit_speculative(self, operator, base_name: str, spec: BridgeJobSpec,
+                           n: int = 2, namespace: str = "default",
+                           timeout: float = 60.0) -> BridgeJob:
+        """Run the payload on the ``n`` least-loaded resources; return the
+        first DONE job and kill the rest.  Raises if all replicas fail."""
+        ranked = self.rank()
+        if not ranked:
+            raise RuntimeError("no reachable candidate resource")
+        names = []
+        for i, (_, cand) in enumerate(ranked[:n]):
+            s = dataclasses.replace(spec, resourceURL=cand.resourceURL,
+                                    image=cand.image,
+                                    resourcesecret=cand.resourcesecret)
+            name = f"{base_name}-spec{i}"
+            operator.registry.create(BridgeJob(name=name, spec=s,
+                                               namespace=namespace))
+            names.append(name)
+        deadline = time.time() + timeout
+        winner: Optional[BridgeJob] = None
+        while time.time() < deadline and winner is None:
+            done = [operator.registry.get(n_, namespace) for n_ in names]
+            for job in done:
+                if job and job.status.state == DONE:
+                    winner = job
+                    break
+            if all(j and j.status.terminal() and j.status.state != DONE
+                   for j in done):
+                raise RuntimeError(
+                    f"all speculative replicas failed: "
+                    f"{[(j.name, j.status.state) for j in done]}")
+            time.sleep(0.01)
+        if winner is None:
+            raise TimeoutError("speculative execution timed out")
+        for n_ in names:  # kill the stragglers
+            if n_ != winner.name:
+                job = operator.registry.get(n_, namespace)
+                if job and not job.status.terminal():
+                    operator.kill(n_, namespace)
+        return winner

@@ -1,0 +1,43 @@
+"""Kubernetes-Secret analogue.
+
+Paper §4: "Credentials to access the external resources as well as object
+storage are accessible as Kubernetes secrets mounted in a volume by the pod."
+
+Secrets live in the store under a name; a controller pod *mounts* a secret,
+receiving a read-only dict.  Secret values never appear in BridgeJob specs or
+config maps (only the secret *name* does), matching the paper's separation.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Mapping, Optional
+from types import MappingProxyType
+
+
+class SecretNotFound(KeyError):
+    pass
+
+
+class SecretStore:
+    def __init__(self) -> None:
+        self._secrets: Dict[str, Dict[str, str]] = {}
+        self._lock = threading.RLock()
+
+    def create(self, name: str, data: Dict[str, str]) -> None:
+        with self._lock:
+            self._secrets[name] = dict(data)
+
+    def mount(self, name: str) -> Mapping[str, str]:
+        """Read-only view, as a mounted volume would provide."""
+        with self._lock:
+            if name not in self._secrets:
+                raise SecretNotFound(name)
+            return MappingProxyType(dict(self._secrets[name]))
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            self._secrets.pop(name, None)
+
+    def exists(self, name: str) -> bool:
+        with self._lock:
+            return name in self._secrets

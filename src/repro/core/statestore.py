@@ -1,0 +1,132 @@
+"""ConfigMap analogue: atomic, file-backed KV store per job.
+
+The paper's key fault-tolerance mechanism: "Because the remote job ID is kept
+in the config map, [on restart] the pod will know that the remote job is
+already running and will not try to restart it" (§5.1).  The store therefore
+must (a) survive controller-pod death, (b) be atomic per update, and (c) allow
+both the operator and the pod to read/write concurrently.
+
+Writes go through tempfile + os.replace (atomic on POSIX).  An optional
+in-memory mode backs unit tests that don't need durability.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+
+class ConfigMap:
+    """One named KV map (string -> string), Kubernetes-ConfigMap shaped."""
+
+    def __init__(self, name: str, store: "StateStore"):
+        self.name = name
+        self._store = store
+
+    @property
+    def data(self) -> Dict[str, str]:
+        return self._store._read(self.name)
+
+    def get(self, key: str, default: str = "") -> str:
+        return self.data.get(key, default)
+
+    def update(self, updates: Dict[str, str]) -> Dict[str, str]:
+        return self._store._update(self.name, updates)
+
+    def replace(self, data: Dict[str, str]) -> None:
+        self._store._replace(self.name, data)
+
+
+class StateStore:
+    """Cluster-level config-map registry (durable by default)."""
+
+    def __init__(self, root: Optional[str] = None):
+        self._root = root
+        self._mem: Dict[str, Dict[str, str]] = {}
+        self._lock = threading.RLock()
+        if root:
+            os.makedirs(root, exist_ok=True)
+
+    # -- public API -----------------------------------------------------
+
+    def create(self, name: str, data: Optional[Dict[str, str]] = None) -> ConfigMap:
+        with self._lock:
+            if self.exists(name):
+                raise KeyError(f"configmap {name!r} already exists")
+            self._replace(name, dict(data or {}))
+        return ConfigMap(name, self)
+
+    def get(self, name: str) -> ConfigMap:
+        if not self.exists(name):
+            raise KeyError(f"configmap {name!r} not found")
+        return ConfigMap(name, self)
+
+    def get_or_create(self, name: str, data: Optional[Dict[str, str]] = None) -> ConfigMap:
+        with self._lock:
+            if self.exists(name):
+                return ConfigMap(name, self)
+            return self.create(name, data)
+
+    def exists(self, name: str) -> bool:
+        with self._lock:
+            if self._root:
+                return os.path.exists(self._path(name))
+            return name in self._mem
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            if self._root:
+                try:
+                    os.remove(self._path(name))
+                except FileNotFoundError:
+                    pass
+            self._mem.pop(name, None)
+
+    def list(self) -> Iterator[str]:
+        with self._lock:
+            if self._root:
+                for f in sorted(os.listdir(self._root)):
+                    if f.endswith(".json"):
+                        yield f[:-5]
+            else:
+                yield from sorted(self._mem)
+
+    # -- internals --------------------------------------------------------
+
+    def _path(self, name: str) -> str:
+        safe = name.replace("/", "__")
+        return os.path.join(self._root, safe + ".json")
+
+    def _read(self, name: str) -> Dict[str, str]:
+        with self._lock:
+            if self._root:
+                try:
+                    with open(self._path(name)) as f:
+                        return json.load(f)
+                except FileNotFoundError:
+                    raise KeyError(f"configmap {name!r} not found")
+            if name not in self._mem:
+                raise KeyError(f"configmap {name!r} not found")
+            return dict(self._mem[name])
+
+    def _replace(self, name: str, data: Dict[str, str]) -> None:
+        with self._lock:
+            if self._root:
+                fd, tmp = tempfile.mkstemp(dir=self._root, suffix=".tmp")
+                try:
+                    with os.fdopen(fd, "w") as f:
+                        json.dump(data, f)
+                    os.replace(tmp, self._path(name))  # atomic
+                finally:
+                    if os.path.exists(tmp):
+                        os.remove(tmp)
+            self._mem[name] = dict(data)
+
+    def _update(self, name: str, updates: Dict[str, str]) -> Dict[str, str]:
+        with self._lock:
+            cur = self._read(name)
+            cur.update({k: str(v) for k, v in updates.items()})
+            self._replace(name, cur)
+            return cur

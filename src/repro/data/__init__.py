@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, SyntheticDataset, dataset_for,
+                                 with_frontend_stubs)

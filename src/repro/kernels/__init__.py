@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the data plane's compute hot-spots.
+
+Each kernel ships three pieces: <name>.py (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ops.py (jit'd layout/padding wrapper used by the
+model code), ref.py (pure-jnp oracle for the allclose sweeps in
+tests/test_kernels.py).  CPU validation runs interpret=True; on TPU the
+same calls lower through Mosaic.
+
+  flash_attention.py  — blockwise online-softmax causal attention (GQA via
+                        k/v index_map; lane-replicated m/l scratch)
+  decode_attention.py — flash-decode over a long KV cache (SMEM lengths,
+                        G x block_m MXU tiles)
+  ssm_scan.py         — chunked selective scan + the discretization-FUSED
+                        variant (dA/dBx built in VMEM, ~30x less HBM read)
+"""
+from repro.kernels import ops, ref

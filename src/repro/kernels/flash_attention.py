@@ -1,0 +1,123 @@
+"""Blockwise online-softmax (flash) attention Pallas TPU kernel.
+
+TPU adaptation notes (vs the CUDA original):
+  * tiling is BlockSpec-driven: q tiles (block_q x D) stream through VMEM
+    while k/v tiles (block_k x D) iterate on the innermost grid dim, which
+    Mosaic executes sequentially per core — the running max / sum / output
+    accumulator therefore lives in VMEM scratch and persists across k steps;
+  * the MXU wants (128,128)-aligned matmuls: default blocks are 128 and the
+    wrapper pads sequence lengths up to a block multiple (causal masking
+    makes key padding self-masking);
+  * running max/denominator scratch is lane-replicated (block_q, 128) to
+    match the TPU vector layout instead of a CUDA-style (block_q,) register.
+  * GQA is expressed in the k/v index_map (head h reads kv head h//group) —
+    no repeated k/v materialization in HBM.
+
+Grid: (B, Hq, nq, nk), nk innermost/sequential ("arbitrary" semantics).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  n_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        cols = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_scr[:, :1]                         # (bq, 1)
+    l_prev = l_scr[:, :1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                        # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                # (bq, 1)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        denom = jnp.where(l_scr[:, :1] == 0.0, 1.0, l_scr[:, :1])
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = False
+                         ) -> jax.Array:
+    """q: (B,Hq,Sq,D); k,v: (B,Hkv,Sk,D) -> (B,Hq,Sq,D).
+
+    Sq/Sk must be multiples of the block sizes (wrapper in ops.py pads)."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if hq % hkv:
+        raise ValueError(f"Hq {hq} % Hkv {hkv}")
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"seq ({sq},{sk}) not multiples of blocks "
+                         f"({block_q},{block_k})")
+    n_q, n_k = sq // block_q, sk // block_k
+    grid = (b, hq, n_q, n_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (d ** 0.5), block_q=block_q,
+        block_k=block_k, causal=causal, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, _g=group: (b_, h // _g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, _g=group: (b_, h // _g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # running max
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),       # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q: (B,Hq,Sq,D); k,v: (B,Hkv,Sk,D); GQA by head repetition.
+    Returns (B,Hq,Sq,D).  f32 softmax, output in q.dtype."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / jnp.sqrt(d)
+    if causal:
+        iq = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 0)
+        ik = jax.lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+        s = jnp.where(ik <= iq, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B,Hq,D); k,v: (B,Hkv,M,D); lengths: (B,) valid slots.
+    Returns (B,Hq,D)."""
+    b, hq, d = q.shape
+    hkv, m = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhmd->bhm", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / jnp.sqrt(d)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (b, 1, m), 2) < lengths[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhm,bhmd->bhd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(dA: jax.Array, dBx: jax.Array, C: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = dA_t * h_{t-1} + dBx_t;  y_t = <h_t, C_t>.
+
+    dA, dBx: (B,S,di,N) f32;  C: (B,S,N) f32.
+    Returns (y (B,S,di) f32, h_last (B,di,N) f32)."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, C)
+    return y, h[:, -1]

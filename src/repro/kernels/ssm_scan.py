@@ -1,0 +1,156 @@
+"""Chunked selective-scan Pallas TPU kernel (hymba's SSM hot-spot).
+
+The recurrence h_t = dA_t * h_{t-1} + dBx_t is memory-bound: the XLA
+associative-scan materializes all (B,S,di,N) intermediates in HBM
+(O(S log S) traffic).  The kernel streams (chunk, di, N) tiles through VMEM,
+carries h in scratch across the sequential chunk grid dim, and fuses the
+y_t = <h_t, C_t> contraction so h never round-trips to HBM — one read of
+dA/dBx/C and one write of y total.
+
+Grid: (B, n_chunks), chunks innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(dA_ref, dBx_ref, C_ref, y_ref, h_last_ref, h_scr, *,
+                chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    dA = dA_ref[0].astype(jnp.float32)       # (chunk, di, N)
+    dBx = dBx_ref[0].astype(jnp.float32)
+    C = C_ref[0].astype(jnp.float32)         # (chunk, N)
+
+    def step(t, carry):
+        h, y = carry
+        h = dA[t] * h + dBx[t]               # (di, N)
+        y = y.at[t].set(h @ C[t])            # (di,)
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros((chunk, dA.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_scr[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        h_last_ref[0] = h_scr[...]
+
+
+def _ssm_fused_kernel(delta_ref, b_ref, c_ref, x_ref, a_ref, y_ref,
+                      h_last_ref, h_scr, *, chunk: int, n_chunks: int):
+    """Fused-discretization variant: dA/dBx are built IN VMEM from
+    (delta, B, x, A) — HBM reads drop from O(S·di·N) to O(S·(di+N)),
+    ~(di·N)/(di+N) x less traffic (e.g. 32x for di=3200, N=16)."""
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    delta = delta_ref[0].astype(jnp.float32)   # (chunk, di)
+    Bm = b_ref[0].astype(jnp.float32)          # (chunk, N)
+    Cm = c_ref[0].astype(jnp.float32)          # (chunk, N)
+    x = x_ref[0].astype(jnp.float32)           # (chunk, di)
+    A = a_ref[...].astype(jnp.float32)         # (di, N)
+
+    def step(t, carry):
+        h, y = carry
+        dA = jnp.exp(delta[t][:, None] * A)            # (di, N) in VMEM
+        dBx = delta[t][:, None] * Bm[t][None, :] * x[t][:, None]
+        h = dA * h + dBx
+        y = y.at[t].set(h @ Cm[t])
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros((chunk, delta.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_scr[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        h_last_ref[0] = h_scr[...]
+
+
+def ssm_scan_fused(delta: jax.Array, B: jax.Array, C: jax.Array,
+                   x: jax.Array, A: jax.Array, *, chunk: int = 16,
+                   interpret: bool = False):
+    """delta,x: (B,S,di); B,C: (B,S,N); A: (di,N).  S % chunk == 0.
+    Returns (y (B,S,di) f32, h_last (B,di,N) f32)."""
+    b, s, di = delta.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk}")
+    n_chunks = s // chunk
+    kernel = functools.partial(_ssm_fused_kernel, chunk=chunk,
+                               n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, di), lambda b_, ci: (b_, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, ci: (b_, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, ci: (b_, ci, 0)),
+            pl.BlockSpec((1, chunk, di), lambda b_, ci: (b_, ci, 0)),
+            pl.BlockSpec((di, n), lambda b_, ci: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, di), lambda b_, ci: (b_, ci, 0)),
+            pl.BlockSpec((1, di, n), lambda b_, ci: (b_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, di), jnp.float32),
+            jax.ShapeDtypeStruct((b, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((di, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(delta, B, C, x, A)
+
+
+def ssm_scan_chunked(dA: jax.Array, dBx: jax.Array, C: jax.Array, *,
+                     chunk: int = 16, interpret: bool = False):
+    """dA, dBx: (B,S,di,N); C: (B,S,N).  S must be a multiple of ``chunk``.
+    Returns (y (B,S,di) f32, h_last (B,di,N) f32)."""
+    b, s, di, n = dA.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk}")
+    n_chunks = s // chunk
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, di, n), lambda b_, ci: (b_, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, di, n), lambda b_, ci: (b_, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, ci: (b_, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, di), lambda b_, ci: (b_, ci, 0)),
+            pl.BlockSpec((1, di, n), lambda b_, ci: (b_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, di), jnp.float32),
+            jax.ShapeDtypeStruct((b, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((di, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(dA, dBx, C)

@@ -1,0 +1,286 @@
+"""Prefill / single-token decode with KV + recurrent-state caches.
+
+Cache layouts (layer-major leading dim so lax.scan can carry them):
+  dense/vlm/moe : {"k","v": (L,B,M,Hkv,Dh), "pos": (B,)}
+  hybrid        : + {"conv": (L,B,k-1,di), "ssm": (L,B,di,n)}
+  encdec        : + {"cross_k","cross_v": (L,B,F,H,Dh)} (fixed after prefill)
+  ssm (xlstm)   : {"blocks": [per-layer state dicts], "pos": (B,)}
+
+``window > 0`` uses a circular KV buffer of size ``window`` (sub-quadratic
+long-context mode for hybrid archs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.transformer import xlstm_layer_kinds
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, window: int = 0) -> Dict[str, Any]:
+    dt = L.adtype(cfg)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    m = min(window, max_len) if window else max_len
+    if cfg.family == "ssm":
+        blocks = []
+        for kind in xlstm_layer_kinds(cfg):
+            blocks.append(
+                XL.init_mlstm_state(cfg, batch) if kind == "mlstm"
+                else XL.init_slstm_state(cfg, batch)
+            )
+        return {"blocks": blocks, "pos": jnp.zeros((batch,), jnp.int32)}
+    cache: Dict[str, Any] = {
+        "k": jnp.zeros((cfg.n_layers, batch, m, hkv, hd), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, m, hkv, hd), dt),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        cache["conv"] = jnp.zeros((cfg.n_layers, batch, s.d_conv - 1, di), dt)
+        cache["ssm"] = jnp.zeros((cfg.n_layers, batch, di, s.d_state), jnp.float32)
+    if cfg.family == "encdec":
+        cache["cross_k"] = jnp.zeros((cfg.n_layers, batch, cfg.enc_frames, hkv, hd), dt)
+        cache["cross_v"] = jnp.zeros((cfg.n_layers, batch, cfg.enc_frames, hkv, hd), dt)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, window: int = 0):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, window))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: Params, cfg: ModelConfig, batch_inputs: Dict[str, jax.Array],
+            max_len: int, window: int = 0) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run the full prompt, returning (last-token logits, filled cache)."""
+    if cfg.family == "ssm":
+        return _prefill_xlstm(params, cfg, batch_inputs)
+    if cfg.family == "encdec":
+        return _prefill_encdec(params, cfg, batch_inputs, max_len)
+    from repro.models.transformer import _apply_block, _embed_inputs
+
+    x, positions, _ = _embed_inputs(params, cfg, batch_inputs)
+    b, s, _ = x.shape
+    body = functools.partial(_apply_block, positions=positions, cfg=cfg,
+                             window=window, want_kv=True)
+    if isinstance(params["blocks"], list):  # unrolled stacks
+        per_layer = []
+        for lp in params["blocks"]:
+            x, o = body(lp, x)
+            per_layer.append(o)
+        ks = jnp.stack([o[0] for o in per_layer])
+        vs = jnp.stack([o[1] for o in per_layer])
+        outs = (ks, vs,
+                tuple(jnp.stack([o[2][i] for o in per_layer])
+                      for i in range(len(per_layer[0][2]))),
+                jnp.stack([o[3] for o in per_layer]))
+    else:
+        x, outs = jax.lax.scan(lambda c, lp: body(lp, c), x, params["blocks"])
+    ks, vs = outs[0], outs[1]  # (L,B,S,Hkv,Dh)
+    cache = init_cache(cfg, b, max_len, window)
+    m = cache["k"].shape[2]
+    if s >= m:
+        cache["k"] = ks[:, :, -m:]
+        cache["v"] = vs[:, :, -m:]
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], ks, 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vs, 0, axis=2)
+    if cfg.family == "hybrid":
+        conv, ssm_h = outs[2]
+        cache["conv"], cache["ssm"] = conv, ssm_h
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)
+    return logits, cache
+
+
+def _prefill_xlstm(params, cfg, batch_inputs):
+    tokens = batch_inputs["tokens"]
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    kinds = xlstm_layer_kinds(cfg)
+    states = []
+    for kind, p in zip(kinds, params["blocks"]):
+        if kind == "mlstm":
+            out, st = XL.mlstm_forward(p, x, cfg)
+            x = x + out
+        else:
+            x, st = XL.slstm_forward(p, x, cfg)
+        states.append(st)
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)
+    return logits, {"blocks": states, "pos": jnp.full((b,), s, jnp.int32)}
+
+
+def _prefill_encdec(params, cfg, batch_inputs, max_len):
+    from repro.models.transformer import _forward_train_encdec  # reuse encoder body
+
+    frames = batch_inputs["enc_frames"].astype(L.adtype(cfg))
+    enc = frames + params["enc_pos"]["pos"][None, : frames.shape[1]]
+    b = enc.shape[0]
+    enc_pos = jnp.broadcast_to(jnp.arange(enc.shape[1], dtype=jnp.int32), (b, enc.shape[1]))
+
+    def enc_block(p, x):
+        xn = L.apply_norm(p["ln_attn"], x, cfg.norm)
+        a, _ = L.attn_forward(p["attn"], xn, enc_pos, cfg, causal=False)
+        x = x + a
+        xn = L.apply_norm(p["ln_mlp"], x, cfg.norm)
+        return x + L.apply_mlp(p["mlp"], xn, cfg.activation), ()
+
+    if isinstance(params["enc_blocks"], list):
+        for lp in params["enc_blocks"]:
+            enc, _ = enc_block(lp, enc)
+    else:
+        enc, _ = jax.lax.scan(lambda c, lp: enc_block(lp, c), enc,
+                              params["enc_blocks"])
+    enc = L.apply_norm(params["enc_ln_f"], enc, cfg.norm)
+
+    tokens = batch_inputs["tokens"]
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    s = x.shape[1]
+    x = x + params["dec_pos"]["pos"][None, :s]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def dec_block(p, x):
+        xn = L.apply_norm(p["ln_attn"], x, cfg.norm)
+        a, (k, v) = L.attn_forward(p["attn"], xn, positions, cfg)
+        x = x + a
+        xn = L.apply_norm(p["ln_cross"], x, cfg.norm)
+        ck = jnp.einsum("bsd,dhk->bshk", enc, p["cross"]["wk"])
+        cv = jnp.einsum("bsd,dhk->bshk", enc, p["cross"]["wv"])
+        c, _ = L.attn_forward(p["cross"], xn, positions, cfg, kv_override=(ck, cv))
+        x = x + c
+        xn = L.apply_norm(p["ln_mlp"], x, cfg.norm)
+        return x + L.apply_mlp(p["mlp"], xn, cfg.activation), (k, v, ck, cv)
+
+    if isinstance(params["blocks"], list):
+        per_layer = []
+        for lp in params["blocks"]:
+            x, o = dec_block(lp, x)
+            per_layer.append(o)
+        ks, vs, cks, cvs = (jnp.stack([o[i] for o in per_layer])
+                            for i in range(4))
+    else:
+        x, outs = jax.lax.scan(lambda c, lp: dec_block(lp, c), x,
+                               params["blocks"])
+        ks, vs, cks, cvs = outs
+    cache = init_cache(cfg, b, max_len)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], ks, 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vs, 0, axis=2)
+    cache["cross_k"], cache["cross_v"] = cks, cvs
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict[str, Any],
+                tokens: jax.Array, window: int = 0) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence.  tokens: (B,1) int32."""
+    if cfg.family == "ssm":
+        return _decode_xlstm(params, cfg, cache, tokens)
+    pos = cache["pos"]  # (B,) absolute position of the new token
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    m = cache["k"].shape[2]
+    write_pos = pos % m if window else pos
+
+    def body(x, layer):
+        p = layer["p"]
+        aux = ()
+        xn = L.apply_norm(p["ln_attn"], x, cfg.norm)
+        attn_out, (ck, cv) = L.attn_decode(
+            p["attn"], xn, layer["k"], layer["v"], pos, cfg,
+            write_pos=write_pos, cross=False,
+        )
+        new_layer = {"k": ck, "v": cv}
+        if cfg.family == "hybrid":
+            ssm_out, st = SSM.ssm_decode(p["ssm"], xn, {"conv": layer["conv"],
+                                                        "ssm": layer["ssm"]}, cfg)
+            w = jax.nn.relu(p["mix_w"])
+            x = x + (w[0] * attn_out.astype(jnp.float32)
+                     + w[1] * ssm_out.astype(jnp.float32)).astype(x.dtype)
+            new_layer["conv"], new_layer["ssm"] = st["conv"], st["ssm"]
+        else:
+            x = x + attn_out
+        if cfg.family == "encdec":
+            xn = L.apply_norm(p["ln_cross"], x, cfg.norm)
+            c, _ = L.attn_decode(p["cross"], xn, layer["cross_k"], layer["cross_v"],
+                                 pos, cfg, cross=True)
+            x = x + c
+        xn2 = L.apply_norm(p["ln_mlp"], x, cfg.norm)
+        if cfg.family == "moe":
+            ffn_out, _ = MOE.apply_moe(p["moe"], xn2, cfg)
+        else:
+            ffn_out = L.apply_mlp(p["mlp"], xn2, cfg.activation)
+        x = x + ffn_out
+        return x, new_layer
+
+    if isinstance(params["blocks"], list):  # unrolled stacks
+        new_cols: Dict[str, list] = {}
+        for li, lp in enumerate(params["blocks"]):
+            layer = {"p": lp, "k": cache["k"][li], "v": cache["v"][li]}
+            if cfg.family == "hybrid":
+                layer["conv"], layer["ssm"] = cache["conv"][li], cache["ssm"][li]
+            if cfg.family == "encdec":
+                layer["cross_k"] = cache["cross_k"][li]
+                layer["cross_v"] = cache["cross_v"][li]
+            x, nl = body(x, layer)
+            for k_, v_ in nl.items():
+                new_cols.setdefault(k_, []).append(v_)
+        new_layers = {k_: jnp.stack(v_) for k_, v_ in new_cols.items()}
+    else:
+        layers_in = {"p": params["blocks"], "k": cache["k"], "v": cache["v"]}
+        if cfg.family == "hybrid":
+            layers_in["conv"], layers_in["ssm"] = cache["conv"], cache["ssm"]
+        if cfg.family == "encdec":
+            layers_in["cross_k"], layers_in["cross_v"] = (cache["cross_k"],
+                                                          cache["cross_v"])
+        x, new_layers = jax.lax.scan(lambda c, lp: body(c, lp), x, layers_in)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = new_layers["k"], new_layers["v"]
+    if cfg.family == "hybrid":
+        new_cache["conv"], new_cache["ssm"] = new_layers["conv"], new_layers["ssm"]
+    new_cache["pos"] = pos + 1
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, new_cache
+
+
+def _decode_xlstm(params, cfg, cache, tokens):
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    kinds = xlstm_layer_kinds(cfg)
+    new_states = []
+    for kind, p, st in zip(kinds, params["blocks"], cache["blocks"]):
+        if kind == "mlstm":
+            out, st2 = XL.mlstm_decode(p, x, st, cfg)
+            x = x + out
+        else:
+            x, st2 = XL.slstm_decode(p, x, st, cfg)
+        new_states.append(st2)
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"blocks": new_states, "pos": cache["pos"] + 1}

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer: top-k router + expert FFNs.
+
+Three routing implementations (``cfg.moe.routing_impl``):
+  * ``dense``    — every expert computes every token, combined by router probs.
+                   O(E) compute; only for tiny smoke configs / oracles.
+  * ``dropping`` — GShard/Switch-style capacity-based one-hot dispatch under
+                   pjit.  Auto-shardable (experts on "model" = EP via the SPMD
+                   partitioner).  This is the BASELINE for the roofline; its
+                   dispatch einsums inflate HLO FLOPs, which the §Perf hillclimb
+                   attacks with the shard_map EP path.
+  * ``ep_shard_map`` — beyond-paper optimized manual expert parallelism
+                   (see repro/parallel/ep.py), selected by the perf config.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.models.layers import adtype, apply_mlp, mlp_defs
+
+Params = Dict[str, Any]
+
+
+def moe_defs(cfg) -> Params:
+    m = cfg.moe
+    d, dff, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    ep = m.e_pad  # weights padded to a mesh-divisible expert count (§Perf)
+    dt = adtype(cfg)
+    defs: Params = {
+        "router": ParamDef((d, e), ("embed", "expert"), dtype=jnp.float32),
+        "w1": ParamDef((ep, d, dff), ("expert", "embed", "mlp"), dtype=dt),
+        "w2": ParamDef((ep, dff, d), ("expert", "mlp", "embed"), dtype=dt),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        defs["w3"] = ParamDef((ep, d, dff), ("expert", "embed", "mlp"), dtype=dt)
+    if m.n_shared_experts:
+        defs["shared"] = mlp_defs(cfg, d_ff=m.d_ff_expert * m.n_shared_experts)
+    return defs
+
+
+def _router(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,S,d) -> (probs (B,S,E) f32, gates (B,S,k), idx (B,S,k))."""
+    logits = (x.astype(jnp.float32) @ p["router"])  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)  # renormalize
+    return probs, gates, idx
+
+
+def aux_load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean_prob * mean_assignment)."""
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    assign = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32).sum(2)  # (B,S,E)
+    ce = jnp.mean(assign, axis=(0, 1))
+    ce = ce / jnp.maximum(ce.sum(), 1e-9)
+    return n_experts * jnp.sum(me * ce)
+
+
+def _expert_ffn(p: Params, h: jax.Array, activation: str) -> jax.Array:
+    """h: (E, C, d) -> (E, C, d), batched over experts."""
+    u = jnp.einsum("ecd,edf->ecf", h, p["w1"])
+    if activation == "swiglu":
+        u = jax.nn.silu(u) * jnp.einsum("ecd,edf->ecf", h, p["w3"])
+    elif activation == "geglu":
+        u = jax.nn.gelu(u) * jnp.einsum("ecd,edf->ecf", h, p["w3"])
+    elif activation == "relu2":
+        u = jnp.square(jax.nn.relu(u))
+    else:
+        u = jax.nn.gelu(u)
+    return jnp.einsum("ecf,efd->ecd", u, p["w2"])
+
+
+def moe_dense(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    probs, gates, idx = _router(p, x, cfg)
+    m = cfg.moe
+    # all experts on all tokens: (E,B,S,d)
+    def one(e):
+        sub = {k: p[k][e] for k in ("w1", "w2", *(["w3"] if "w3" in p else []))}
+        return apply_mlp(sub, x, cfg.activation)
+
+    all_out = jnp.stack([one(e) for e in range(m.n_experts)], axis=0)
+    combine = jnp.zeros(probs.shape, probs.dtype)
+    combine = jnp.sum(
+        jax.nn.one_hot(idx, m.n_experts, dtype=jnp.float32) * gates[..., None], axis=2
+    )  # (B,S,E)
+    out = jnp.einsum("ebsd,bse->bsd", all_out.astype(jnp.float32), combine).astype(x.dtype)
+    return out, aux_load_balance_loss(probs, idx, m.n_experts)
+
+
+def moe_dropping(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based dispatch (GShard).  Groups = batch dim; capacity per group."""
+    b, s, d = x.shape
+    m = cfg.moe
+    probs, gates, idx = _router(p, x, cfg)
+    e = m.e_pad  # one-hot over padded count (router never picks the pads)
+    capacity = max(int(s * m.top_k * m.capacity_factor / m.n_experts), 1)
+    # pad capacity to a lane-friendly multiple
+    capacity = (capacity + 7) // 8 * 8
+
+    # position of each (token, choice) within its expert queue
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (B,S,k,E)
+    flat = onehot.reshape(b, s * m.top_k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (B,S*k,E)
+    pos = jnp.sum(flat * pos_in_expert, axis=-1).reshape(b, s, m.top_k)
+    keep = pos < capacity
+
+    oh_f = onehot.astype(x.dtype)
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=x.dtype)  # (B,S,k,C)
+    # dispatch (B,S,E,C): 1 where token s goes to slot c of expert e
+    dispatch = jnp.einsum("bske,bskc->bsec", oh_f, pos_oh * keep[..., None].astype(x.dtype))
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gates.astype(x.dtype), oh_f,
+                         pos_oh * keep[..., None].astype(x.dtype))
+
+    expert_in = jnp.einsum("bsec,bsd->becd", dispatch, x)  # (B,E,C,d)
+    out_e = jax.vmap(lambda h: _expert_ffn(p, h, cfg.activation))(expert_in)  # (B,E,C,d)
+    out = jnp.einsum("bsec,becd->bsd", combine, out_e)
+    aux = aux_load_balance_loss(probs, idx, m.n_experts)
+    return out, aux
+
+
+def apply_moe(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    impl = cfg.moe.routing_impl
+    if impl == "dense":
+        out, aux = moe_dense(p, x, cfg)
+    elif impl == "dropping":
+        out, aux = moe_dropping(p, x, cfg)
+    elif impl == "ep_shard_map":
+        from repro.parallel.ep import moe_ep_shard_map
+
+        out, aux = moe_ep_shard_map(p, x, cfg)
+    elif impl == "ep_gather":
+        from repro.parallel.ep import moe_ep_gather
+
+        out, aux = moe_ep_gather(p, x, cfg)
+    else:
+        raise ValueError(impl)
+    if cfg.moe.n_shared_experts:
+        out = out + apply_mlp(p["shared"], x, cfg.activation)
+    return out, aux

@@ -1,0 +1,173 @@
+"""Mamba-style selective-scan SSM mixer (hymba's parallel-head partner).
+
+Training/prefill uses an associative scan over time (work-efficient, O(S log S)
+depth); decode carries (conv_state, ssm_state) and is O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.models.layers import adtype
+
+Params = Dict[str, Any]
+
+
+def ssm_defs(cfg) -> Params:
+    s = cfg.ssm
+    d, di, n, k = cfg.d_model, s.d_inner(cfg.d_model), s.d_state, s.d_conv
+    dt = adtype(cfg)
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("embed", "inner"), dtype=dt),
+        "conv_w": ParamDef((k, di), (None, "inner"), init="scaled", scale=0.5, dtype=dt),
+        "conv_b": ParamDef((di,), ("inner",), init="zeros", dtype=dt),
+        "x_proj": ParamDef((di, dt_rank + 2 * n), ("inner", None), dtype=dt),
+        "dt_proj": ParamDef((dt_rank, di), (None, "inner"), dtype=dt),
+        "dt_bias": ParamDef((di,), ("inner",), init="scaled", scale=1.0, dtype=jnp.float32),
+        "A_log": ParamDef((di, n), ("inner", None), init="scaled", scale=1.0, dtype=jnp.float32),
+        "D": ParamDef((di,), ("inner",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamDef((di, d), ("inner", "embed"), dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (B,S,di); w: (k,di).  Returns (y, new_state)
+    where state holds the last k-1 inputs (B,k-1,di)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+k-1, di)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y, new_state
+
+
+def _sel_params(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (..., di) -> (delta (...,di), B (...,n), C (...,n)) all f32."""
+    n = cfg.ssm.d_state
+    dt_rank = p["dt_proj"].shape[0]
+    proj = x @ p["x_proj"]  # (..., dt_rank + 2n)
+    dt_in, bc = proj[..., :dt_rank], proj[..., dt_rank:]
+    delta = jax.nn.softplus(dt_in.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                            + p["dt_bias"])
+    B, C = bc[..., :n].astype(jnp.float32), bc[..., n:].astype(jnp.float32)
+    return delta, B, C
+
+
+def ssm_forward(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence selective scan.  x: (B,S,d) -> (y (B,S,d), final state)."""
+    xz = x @ p["in_proj"]
+    di = xz.shape[-1] // 2
+    xs, z = xz[..., :di], xz[..., di:]
+    xs, conv_state = _causal_conv(xs, p["conv_w"], p["conv_b"])
+    xs = jax.nn.silu(xs)
+    delta, B, C = _sel_params(p, xs, cfg)
+    A = -jnp.exp(p["A_log"])  # (di, n)
+    xf = xs.astype(jnp.float32)
+
+    impl = getattr(cfg.ssm, "scan_impl", "assoc")
+    if impl in ("chunked", "chunked_u"):
+        y, h_last = _chunked_selective_scan(delta, B, C, xf, A,
+                                            chunk=cfg.ssm.chunk,
+                                            unroll=(impl == "chunked_u"))
+    else:
+        # discretize: a_t = exp(delta_t*A) (B,S,di,n); b_t = delta_t*B_t*x_t
+        dA = jnp.exp(delta[..., None] * A)  # (B,S,di,n)
+        dBx = delta[..., None] * B[:, :, None, :] * xf[..., None]
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", h, C)
+        h_last = h[:, -1]
+    y = y + p["D"] * xf
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    final = {"conv": conv_state, "ssm": h_last}  # (B,di,n)
+    return y @ p["out_proj"], final
+
+
+def _chunked_selective_scan(delta, B, C, xf, A, chunk: int,
+                            unroll: bool = False):
+    """Stream the recurrence in (B,chunk,di,N) tiles: the discretized dA/dBx
+    tensors never materialize at full length (the assoc baseline writes
+    O(S·di·N) f32 to HBM; this path writes O(chunk·di·N) per step and
+    carries h).  Within a chunk the scan is associative + a prefix
+    correction for the carried state."""
+    b, s, di = xf.shape
+    n = B.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+    nb = delta.shape[1] // c
+
+    def to_chunks(t):
+        return t.reshape(b, nb, c, *t.shape[2:]).swapaxes(0, 1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    def body(h_in, args):
+        d_c, B_c, C_c, x_c = args          # (B,c,di) / (B,c,n) / .. / (B,c,di)
+        dA = jnp.exp(d_c[..., None] * A)   # (B,c,di,n)
+        dBx = d_c[..., None] * B_c[:, :, None, :] * x_c[..., None]
+        pa, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = hs + pa * h_in[:, None]       # prefix correction
+        y_c = jnp.einsum("bsdn,bsn->bsd", hs, C_c)
+        return hs[:, -1], y_c
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    if unroll:
+        # explicit chunk loop so HLO cost analysis sees every chunk
+        h, ys_l = h0, []
+        dc, Bc, Cc, xc = (to_chunks(delta), to_chunks(B), to_chunks(C),
+                          to_chunks(xf))
+        for i in range(nb):
+            h, y_c = body(h, (dc[i], Bc[i], Cc[i], xc[i]))
+            ys_l.append(y_c)
+        h_last, ys = h, jnp.stack(ys_l)
+    else:
+        h_last, ys = jax.lax.scan(
+            body, h0, (to_chunks(delta), to_chunks(B), to_chunks(C),
+                       to_chunks(xf)))
+    y = ys.swapaxes(0, 1).reshape(b, nb * c, di)[:, :s]
+    return y, h_last
+
+
+def ssm_decode(p: Params, x: jax.Array, state: Dict[str, jax.Array], cfg
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step.  x: (B,1,d); state: {conv (B,k-1,di), ssm (B,di,n)}."""
+    xz = x @ p["in_proj"]
+    di = xz.shape[-1] // 2
+    xs, z = xz[..., :di], xz[..., di:]
+    xs, conv_state = _causal_conv(xs, p["conv_w"], p["conv_b"], state["conv"])
+    xs = jax.nn.silu(xs)
+    delta, B, C = _sel_params(p, xs[:, 0], cfg)  # (B,di),(B,n),(B,n)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(delta[..., None] * A)  # (B,di,n)
+    h = state["ssm"] * dA + delta[..., None] * B[:, None, :] * xs[:, 0].astype(jnp.float32)[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, C) + p["D"] * xs[:, 0].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    return y @ p["out_proj"], {"conv": conv_state, "ssm": h}
+
+
+def init_ssm_state(cfg, batch: int) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di), adtype(cfg)),
+        "ssm": jnp.zeros((batch, di, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,2 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update, opt_pspecs,
+                               cosine_schedule, global_norm, clip_by_global_norm)

@@ -1,0 +1,126 @@
+"""Hand-rolled AdamW over pytrees (no optax in this container), with
+ZeRO-1-style optimizer-state sharding and standard LR schedules.
+
+Master params policy: params may be bf16; Adam moments are f32; the update is
+computed in f32 and cast back to the param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.params import is_paramdef
+from repro.sharding import dp_axes, spec_for, _axis_size
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree_util.tree_map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                                  tree), g
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"mu": zeros(params), "nu": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads: Any, state: Dict[str, Any], params: Any, cfg: AdamWConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * jnp.square(gf)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if jnp.issubdtype(p.dtype, jnp.floating):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m2, v2
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = jax.tree_util.tree_leaves(state["mu"])
+    flat_v = jax.tree_util.tree_leaves(state["nu"])
+    flat_p = jax.tree_util.tree_leaves(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"mu": new_m, "nu": new_v, "step": step}, metrics
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state sharding (ZeRO-1)
+# ---------------------------------------------------------------------------
+
+
+def _zero1_spec(shape, base: P, mesh: Mesh) -> P:
+    """Add unused data-parallel axes to the first divisible unsharded dim."""
+    dp = dp_axes(mesh)
+    used = set()
+    for e in base:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            used.add(a)
+    free_dp = tuple(a for a in dp if a not in used)
+    if not free_dp:
+        return base
+    size = _axis_size(mesh, free_dp)
+    entries = list(base) + [None] * (len(shape) - len(base))
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % size == 0:
+            entries[i] = free_dp if len(free_dp) > 1 else free_dp[0]
+            return P(*entries)
+    return base
+
+
+def opt_pspecs(defs: Any, rules: Dict[str, Any], mesh: Mesh, zero1: bool = True) -> Any:
+    """PartitionSpecs for the adamw state tree matching ``adamw_init``."""
+
+    def one(d):
+        base = spec_for(d.shape, d.axes, rules, mesh)
+        return _zero1_spec(d.shape, base, mesh) if zero1 else base
+
+    mu = jax.tree_util.tree_map(one, defs, is_leaf=is_paramdef)
+    return {"mu": mu, "nu": jax.tree_util.tree_map(lambda x: x, mu), "step": P()}

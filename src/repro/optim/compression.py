@@ -1,0 +1,100 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for the DP all-reduce at 1000+ node scale).
+
+Mechanism (1-bit-Adam-family, at 8 bits):
+  * quantize grads to int8 with a power-of-two-free shared scale,
+  * exchange at int8 width — reduce-scatter + all-gather built from
+    all_to_all/all_gather so the WIRE format really is 1 byte/elem
+    (a plain psum would widen to f32 on the wire),
+  * keep the quantization residual in an error-feedback buffer that is
+    added to the next step's gradient — unbiased over time, provably
+    convergent for SGD-family optimizers.
+
+Byte math per element per direction vs bf16 ring all-reduce:
+  bf16 psum  ≈ 2 x 2B = 4B     int8 RS+AG ≈ 2 x 1B = 2B   (2x saving)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, scale: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grad: jax.Array, error: jax.Array,
+                           scale: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(grad + carried error) -> (q, scale, new_error)."""
+    corrected = grad.astype(jnp.float32) + error
+    q, scale = quantize_int8(corrected, scale)
+    new_error = corrected - dequantize_int8(q, scale)
+    return q, scale, new_error
+
+
+def compressed_mean(x: jax.Array, error: jax.Array, axis_name: str
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Mean of ``x`` across ``axis_name`` with int8 on-wire format.
+
+    Must be called INSIDE shard_map/pmap.  Implementation: shared scale
+    (pmax), int8 reduce-scatter via all_to_all, local f32 accumulation,
+    int8 all-gather of the reduced shard.  Returns (mean_f32, new_error).
+    Leading dim must be divisible by the axis size (pad upstream).
+    """
+    n = jax.lax.psum(1, axis_name)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    flat = jnp.pad(flat, (0, pad))
+    err_flat = jnp.pad(error.reshape(-1), (0, pad))
+
+    # shared scale so shards can sum in integer space coherently
+    amax = jax.lax.pmax(jnp.max(jnp.abs(flat.astype(jnp.float32) + err_flat)),
+                        axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    corrected = flat.astype(jnp.float32) + err_flat
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    new_error = corrected - q.astype(jnp.float32) * scale
+
+    # reduce-scatter at int8: each peer receives its 1/n slice of every shard
+    qs = q.reshape(n, flat.shape[0] // n)
+    recv = jax.lax.all_to_all(qs, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)                      # (n, len/n)
+    local_sum = jnp.sum(recv.astype(jnp.float32), axis=0) * scale / n
+
+    # all-gather the reduced shard at int8 (re-quantized, second feedback-free
+    # stage: quantization error here is averaged noise, not accumulated bias).
+    # Each shard quantizes with its own scale; gather the scales alongside.
+    q2, scale2 = quantize_int8(local_sum)
+    gathered = jax.lax.all_gather(q2, axis_name, axis=0, tiled=False)   # (n, len/n)
+    scales = jax.lax.all_gather(scale2, axis_name, axis=0, tiled=False)  # (n,)
+    mean = (gathered.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    mean = mean[: x.size].reshape(x.shape)
+    return mean, new_error[: x.size].reshape(x.shape)
+
+
+def init_error_tree(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_mean_tree(grads: Any, errors: Any, axis_name: str
+                         ) -> Tuple[Any, Any]:
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(errors)
+    out = [compressed_mean(g, e, axis_name) for g, e in zip(flat_g, flat_e)]
+    means = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_err = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return means, new_err

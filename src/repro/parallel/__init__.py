@@ -1,0 +1,2 @@
+from repro.parallel.ep import ep_mesh, moe_ep_shard_map
+from repro.parallel.pipeline import pipeline_apply, stack_stage_params

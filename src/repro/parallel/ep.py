@@ -1,0 +1,226 @@
+"""Manual expert parallelism via shard_map (beyond-paper §Perf optimization).
+
+Baseline (`routing_impl="dropping"`): GShard-style dispatch einsums under
+pjit — the SPMD partitioner sees a (B,S,E,C) dispatch tensor and usually
+materializes full-E intermediates per shard, inflating HLO FLOPs/bytes.
+
+This path (`routing_impl="ep_shard_map"`): tokens are REPLICATED across the
+"model" axis (standard TP), experts are SHARDED across it.  Each model shard
+therefore only ever builds the dispatch/combine tensors for its E/n local
+experts and runs only its local expert FFNs; one psum over "model" merges the
+partial outputs (same wire cost as a Megatron MLP all-reduce).  Dispatch
+memory and dispatch FLOPs drop by n_model; no all-to-all is needed because
+the tokens already live everywhere in the TP group.
+
+Mesh discovery: the step builders install the mesh via ``ep_mesh(mesh)``
+around tracing; apply_moe finds it here.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.moe import _router, aux_load_balance_loss
+from repro.sharding import dp_axes
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def ep_mesh(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def _capacity(s: int, cfg) -> int:
+    m = cfg.moe
+    capacity = max(int(s * m.top_k * m.capacity_factor / m.n_experts), 1)
+    return (capacity + 7) // 8 * 8
+
+
+def _local_routing(router, x_l, cfg, e, n_model):
+    """Shared per-shard routing: top-k, local expert ids, capacity slots.
+    Returns (probs, gates, lidx_c, pos, keep, capacity, e_loc, midx)."""
+    m = cfg.moe
+    e_loc = e // n_model
+    midx = jax.lax.axis_index("model")
+    s = x_l.shape[1]
+    capacity = _capacity(s, cfg)
+    probs, gates, idx = _router({"router": router}, x_l, cfg)
+    lidx = idx - midx * e_loc
+    mine = (lidx >= 0) & (lidx < e_loc)
+    lidx_c = jnp.clip(lidx, 0, e_loc - 1)
+    onehot = jax.nn.one_hot(lidx_c, e_loc, dtype=jnp.int32)
+    onehot = onehot * mine[..., None].astype(jnp.int32)       # (B,S,k,El)
+    bl = x_l.shape[0]
+    flat = onehot.reshape(bl, s * m.top_k, e_loc)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat
+    pos = jnp.sum(flat * pos_in_expert, axis=-1).reshape(bl, s, m.top_k)
+    keep = (pos < capacity) & mine
+    return probs, gates, idx, lidx_c, pos, keep, capacity, e_loc, midx
+
+
+def moe_ep_gather(p: Dict[str, Any], x: jax.Array, cfg
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """EP with GATHER/SCATTER dispatch (beyond-paper §Perf iteration 2).
+
+    The one-hot dispatch of `moe_ep_shard_map` still pays two
+    O(B·S·E_loc·C·d) matmuls to move tokens.  Routing is a PERMUTATION, not
+    a contraction: build the slot->token index map once (integer scatter),
+    then dispatch = one gather and combine = one gather — zero matmul flops
+    and O(B·(E_loc·C + S·k)·d) bytes."""
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        raise RuntimeError("ep_gather requires ep_mesh(mesh)")
+    n_model = mesh.shape["model"]
+    e = cfg.moe.e_pad
+    if e % n_model != 0:
+        raise ValueError(f"n_experts(_padded) {e} % model={n_model}")
+    dp = dp_axes(mesh)
+    dpsz = 1
+    for a in dp:
+        dpsz *= mesh.shape[a]
+    b = x.shape[0]
+    x_spec = P(dp if (b % dpsz == 0 and dpsz > 1) else None, None, None)
+    has_w3 = "w3" in p
+    in_specs = (x_spec, P(None, None), P("model", None, None),
+                P("model", None, None)) + \
+        ((P("model", None, None),) if has_w3 else ())
+    out_specs = (x_spec, P())
+
+    def local(x_l, router, w1, w2, *maybe_w3):
+        m = cfg.moe
+        bl, s, d = x_l.shape
+        probs, gates, idx_g, lidx_c, pos, keep, capacity, e_loc, _ = \
+            _local_routing(router, x_l, cfg, e, n_model)
+        bidx = jax.lax.broadcasted_iota(jnp.int32, (bl, s, m.top_k), 0)
+        sidx = jax.lax.broadcasted_iota(jnp.int32, (bl, s, m.top_k), 1)
+        pos_eff = jnp.where(keep, pos, capacity)  # dropped -> OOB (ignored)
+
+        slot_tok = jnp.zeros((bl, e_loc, capacity), jnp.int32)
+        slot_tok = slot_tok.at[bidx, lidx_c, pos_eff].set(sidx, mode="drop")
+        slot_use = jnp.zeros((bl, e_loc, capacity), x_l.dtype)
+        slot_use = slot_use.at[bidx, lidx_c, pos_eff].set(1.0, mode="drop")
+
+        bidx2 = jax.lax.broadcasted_iota(jnp.int32, (bl, e_loc, capacity), 0)
+        h = x_l[bidx2, slot_tok] * slot_use[..., None]     # gather dispatch
+        h = h.swapaxes(0, 1).reshape(e_loc, bl * capacity, d)
+        u = jnp.einsum("ecd,edf->ecf", h, w1)
+        if cfg.activation == "swiglu":
+            u = jax.nn.silu(u) * jnp.einsum("ecd,edf->ecf", h, maybe_w3[0])
+        elif cfg.activation == "geglu":
+            u = jax.nn.gelu(u) * jnp.einsum("ecd,edf->ecf", h, maybe_w3[0])
+        elif cfg.activation == "relu2":
+            u = jnp.square(jax.nn.relu(u))
+        else:
+            u = jax.nn.gelu(u)
+        out_e = jnp.einsum("ecf,efd->ecd", u, w2)
+        out_e = out_e.reshape(e_loc, bl, capacity, d).swapaxes(0, 1)
+
+        pos_c = jnp.minimum(pos_eff, capacity - 1)
+        y_sk = out_e[bidx, lidx_c, pos_c]                  # gather combine
+        w = (gates * keep.astype(gates.dtype)).astype(x_l.dtype)
+        y_partial = jnp.einsum("bsk,bskd->bsd", w, y_sk)
+        y = jax.lax.psum(y_partial, "model")
+
+        aux = aux_load_balance_loss(probs, idx_g, cfg.moe.n_experts)
+        for a in dp:
+            aux = jax.lax.pmean(aux, a)
+        return y, aux
+
+    args = (x, p["router"], p["w1"], p["w2"]) + ((p["w3"],) if has_w3 else ())
+    return jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(*args)
+
+
+def moe_ep_shard_map(p: Dict[str, Any], x: jax.Array, cfg
+                     ) -> Tuple[jax.Array, jax.Array]:
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        raise RuntimeError("ep_shard_map requires ep_mesh(mesh) with a "
+                           "'model' axis; use routing_impl='dropping' locally")
+    n_model = mesh.shape["model"]
+    e = cfg.moe.e_pad  # padded expert count (pads are never routed to)
+    if e % n_model != 0:
+        raise ValueError(f"n_experts(_padded) {e} not divisible by "
+                         f"model={n_model}")
+    dp = dp_axes(mesh)
+    dpsz = 1
+    for a in dp:
+        dpsz *= mesh.shape[a]
+    b = x.shape[0]
+    x_spec = P(dp if (b % dpsz == 0 and dpsz > 1) else None, None, None)
+
+    has_w3 = "w3" in p
+    in_specs = (
+        x_spec,                      # x
+        P(None, None),               # router (replicated; small)
+        P("model", None, None),      # w1
+        P("model", None, None),      # w2
+    ) + ((P("model", None, None),) if has_w3 else ())
+    out_specs = (x_spec, P())
+
+    def local(x_l, router, w1, w2, *maybe_w3):
+        m = cfg.moe
+        e_loc = e // n_model
+        midx = jax.lax.axis_index("model")
+        bl, s, d = x_l.shape
+        capacity = _capacity(s, cfg)
+
+        probs, gates, idx = _router({"router": router}, x_l, cfg)
+        # local expert index; out-of-range marks "not my expert"
+        lidx = idx - midx * e_loc
+        mine = (lidx >= 0) & (lidx < e_loc)
+        lidx_c = jnp.clip(lidx, 0, e_loc - 1)
+
+        onehot = jax.nn.one_hot(lidx_c, e_loc, dtype=jnp.int32)
+        onehot = onehot * mine[..., None].astype(jnp.int32)       # (B,S,k,El)
+        flat = onehot.reshape(bl, s * m.top_k, e_loc)
+        pos_in_expert = jnp.cumsum(flat, axis=1) - flat
+        pos = jnp.sum(flat * pos_in_expert, axis=-1).reshape(bl, s, m.top_k)
+        keep = (pos < capacity) & mine
+
+        oh_f = onehot.astype(x_l.dtype)
+        pos_oh = jax.nn.one_hot(pos, capacity, dtype=x_l.dtype)
+        kept = pos_oh * keep[..., None].astype(x_l.dtype)
+        dispatch = jnp.einsum("bske,bskc->bsec", oh_f, kept)       # (B,S,El,C)
+        combine = jnp.einsum("bsk,bske,bskc->bsec",
+                             gates.astype(x_l.dtype), oh_f, kept)
+
+        h = jnp.einsum("bsec,bsd->ebcd", dispatch, x_l)            # (El,B,C,d)
+        h = h.reshape(e_loc, bl * capacity, d)
+        u = jnp.einsum("ecd,edf->ecf", h, w1)
+        if cfg.activation == "swiglu":
+            u = jax.nn.silu(u) * jnp.einsum("ecd,edf->ecf", h, maybe_w3[0])
+        elif cfg.activation == "geglu":
+            u = jax.nn.gelu(u) * jnp.einsum("ecd,edf->ecf", h, maybe_w3[0])
+        elif cfg.activation == "relu2":
+            u = jnp.square(jax.nn.relu(u))
+        else:
+            u = jax.nn.gelu(u)
+        out_e = jnp.einsum("ecf,efd->ecd", u, w2)
+        out_e = out_e.reshape(e_loc, bl, capacity, d)
+        y_partial = jnp.einsum("bsec,ebcd->bsd", combine, out_e)
+        y = jax.lax.psum(y_partial, "model")                       # merge experts
+
+        aux = aux_load_balance_loss(probs, idx, cfg.moe.n_experts)
+        for a in dp:  # mean over data-parallel shards; model is replicated
+            aux = jax.lax.pmean(aux, a)
+        return y, aux
+
+    args = (x, p["router"], p["w1"], p["w2"]) + ((p["w3"],) if has_w3 else ())
+    return jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(*args)

@@ -1,0 +1,86 @@
+"""GPipe-style pipeline parallelism over a mesh axis (default: "pod").
+
+Alternative distribution strategy for the multi-pod mesh: instead of pure DP
+over the pod axis, split the LAYER STACK across pods and stream microbatches
+through with collective_permute between stages.  Provided as a composable
+building block (validated at small scale in tests; selectable in the dry-run
+via strategy="pp").
+
+Schedule: forward-only GPipe loop with (n_micro + n_stages - 1) ticks.  Each
+tick every stage processes one microbatch-slot and the activations rotate by
+ppermute.  Works under jit+shard_map and differentiates (backward replays the
+permutes in reverse), so it can wrap a train step at small scale.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                   stage_params: Any, x: jax.Array, mesh: Mesh,
+                   axis: str = "pod", n_micro: int = None) -> jax.Array:
+    """Run ``x`` through n_stages stages, each living on one ``axis`` shard.
+
+    stage_params: pytree whose leaves have leading dim n_stages (sharded on
+    ``axis``).  x: (B, ...) with B divisible by n_micro.  stage_fn is applied
+    n_stages times in sequence overall.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = n_micro or n_stages
+    b = x.shape[0]
+    if b % n_micro:
+        raise ValueError(f"batch {b} % n_micro {n_micro}")
+
+    in_specs = (jax.tree_util.tree_map(lambda _: P(axis), stage_params,
+                                       is_leaf=lambda l: hasattr(l, "shape")),
+                P())  # x replicated into the pipe; stage 0 selects its slice
+    out_specs = P()
+
+    def run(params_l, x_l):
+        params_l = jax.tree_util.tree_map(lambda p: p[0], params_l)
+        sidx = jax.lax.axis_index(axis)
+        micro = x_l.reshape(n_micro, b // n_micro, *x_l.shape[1:])
+        n_ticks = n_micro + n_stages - 1
+        buf = jnp.zeros_like(micro[0])
+        outs = jnp.zeros_like(micro)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if any remain)
+            take = jnp.clip(t, 0, n_micro - 1)
+            buf = jnp.where(sidx == 0,
+                            jnp.where(t < n_micro, micro[take], buf), buf)
+            y = stage_fn(params_l, buf)
+            # last stage emits microbatch (t - n_stages + 1)
+            emit_idx = t - (n_stages - 1)
+            emit = jnp.clip(emit_idx, 0, n_micro - 1)
+            outs = jnp.where((sidx == n_stages - 1) & (emit_idx >= 0),
+                             outs.at[emit].set(y), outs)
+            # rotate activations downstream
+            y = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (y, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(n_ticks))
+        # only the last stage holds real outputs; share them with everyone
+        outs = jax.lax.psum(
+            jnp.where(sidx == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs.reshape(b, *x_l.shape[1:])
+
+    return jax.shard_map(run, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(stage_params, x)
+
+
+def stack_stage_params(layer_params: Any, n_stages: int) -> Any:
+    """Reshape (L, ...) stacked layer params into (n_stages, L/n_stages, ...)."""
+    def f(p):
+        L = p.shape[0]
+        if L % n_stages:
+            raise ValueError(f"layers {L} % stages {n_stages}")
+        return p.reshape(n_stages, L // n_stages, *p.shape[1:])
+
+    return jax.tree_util.tree_map(f, layer_params)

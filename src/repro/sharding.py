@@ -1,0 +1,170 @@
+"""Logical-axis -> mesh-axis sharding rules (t5x-style), with divisibility
+fallbacks so one rule table serves every architecture.
+
+Param logical axes used by the model defs:
+  embed, heads, kv_heads, head_dim, mlp, vocab, expert, inner, layers, embed_out
+
+Strategies:
+  tp       — params sharded over "model" only, replicated over data (+pod)
+  fsdp_tp  — additionally shard the "embed" axis over "data" (2-D weight
+             sharding; XLA all-gathers per layer inside the scan = FSDP).
+             Required for nemotron-340b-class models to fit HBM.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import ParamDef, is_paramdef, param_axes
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel mesh axes: ("pod","data") on the multi-pod mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_rules(mesh: Mesh, strategy: str = "tp") -> Dict[str, Any]:
+    rules: Dict[str, Any] = {
+        "layers": None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "inner": "model",
+        "embed_out": None,
+    }
+    if strategy == "fsdp_tp":
+        rules["embed"] = "data"
+    elif strategy != "tp":
+        raise ValueError(strategy)
+    return rules
+
+
+def _axis_size(mesh: Mesh, axis: Any) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]], rules: Dict[str, Any],
+             mesh: Mesh) -> P:
+    """Resolve one param's PartitionSpec, dropping non-divisible or duplicate
+    mesh-axis assignments (first dim wins)."""
+    used: set = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if mesh_ax is None:
+            entries.append(None)
+            continue
+        axs = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        if any(a in used for a in axs) or dim % _axis_size(mesh, mesh_ax) != 0:
+            entries.append(None)
+            continue
+        used.update(axs)
+        entries.append(mesh_ax)
+    return P(*entries)
+
+
+def param_pspecs(defs: Any, rules: Dict[str, Any], mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda d: spec_for(d.shape, d.axes, rules, mesh), defs, is_leaf=is_paramdef
+    )
+
+
+def param_shardings(defs: Any, rules: Dict[str, Any], mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda d: NamedSharding(mesh, spec_for(d.shape, d.axes, rules, mesh)),
+        defs,
+        is_leaf=is_paramdef,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch_specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    dpsz = _axis_size(mesh, dp)
+    out = {}
+    for k, v in batch_specs.items():
+        b = v.shape[0] if v.shape else 0
+        lead = dp if (b and b % dpsz == 0) else None
+        out[k] = P(lead, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def _auto_state_spec(shape: Sequence[int], mesh: Mesh, batch_dim: int = 0) -> P:
+    """Heuristic for recurrent-state leaves: batch over dp, largest remaining
+    dim over model."""
+    dp = dp_axes(mesh)
+    dpsz = _axis_size(mesh, dp)
+    msz = mesh.shape.get("model", 1)
+    entries: list = [None] * len(shape)
+    if len(shape) > batch_dim and shape[batch_dim] % dpsz == 0:
+        entries[batch_dim] = dp
+    rest = [(d, i) for i, d in enumerate(shape) if i != batch_dim]
+    for d, i in sorted(rest, reverse=True):
+        if d % msz == 0 and msz > 1:
+            entries[i] = "model"
+            break
+    return P(*entries)
+
+
+def cache_pspecs(cfg, cache_spec: Any, mesh: Mesh) -> Any:
+    """PartitionSpecs for a decode cache pytree (see decoding.init_cache)."""
+    dp = dp_axes(mesh)
+    dpsz = _axis_size(mesh, dp)
+    msz = mesh.shape.get("model", 1)
+
+    def kv_spec(s):
+        # (L, B, M, Hkv, Dh).  Prefer sharding kv heads over "model"; archs
+        # with fewer kv heads than the model axis (GQA kv=8 on a 16-way axis)
+        # fall back to sharding head_dim — the cache then FITS at the price
+        # of a scores all-reduce per layer (the collective-bound baseline the
+        # §Perf sequence-sharded decode attacks).
+        bt = dp if s.shape[1] % dpsz == 0 else None
+        if getattr(cfg, "decode_seq_shard", False) and s.shape[2] % msz == 0:
+            return P(None, bt, "model", None, None)  # flash-decode layout
+        if s.shape[3] % msz == 0:
+            return P(None, bt, None, "model", None)
+        if s.shape[4] % msz == 0:
+            return P(None, bt, None, None, "model")
+        return P(None, bt, None, None, None)
+
+    out: Dict[str, Any] = {}
+    for key, val in cache_spec.items():
+        if key in ("k", "v", "cross_k", "cross_v"):
+            out[key] = kv_spec(val)
+        elif key == "conv":  # (L,B,k-1,di)
+            bt = dp if val.shape[1] % dpsz == 0 else None
+            out[key] = P(None, bt, None, "model" if val.shape[3] % msz == 0 else None)
+        elif key == "ssm":  # (L,B,di,n)
+            bt = dp if val.shape[1] % dpsz == 0 else None
+            out[key] = P(None, bt, "model" if val.shape[2] % msz == 0 else None, None)
+        elif key == "pos":
+            out[key] = P(None)
+        elif key == "blocks":  # xlstm: list of per-layer state dicts
+            out[key] = jax.tree_util.tree_map(
+                lambda s: _auto_state_spec(s.shape, mesh), val
+            )
+        else:
+            raise KeyError(key)
+    return out
+
+
+def to_shardings(pspec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,200 @@
+"""Step builders: train_step / prefill_step / decode_step as pjit-able
+functions with in/out shardings, plus ``input_specs`` (ShapeDtypeStruct
+stand-ins for every model input — weak-type-correct, shardable, no device
+allocation) for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as SH
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.models import decoding as DEC
+from repro.models import transformer as TF
+from repro.models.params import abstract_params, init_params
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """Everything needed to lower/compile/run one cell."""
+    fn: Callable
+    in_shardings: Any
+    out_shardings: Any
+    input_specs: Dict[str, Any]  # kwargs of abstract inputs (incl. params/state)
+    donate_argnames: Tuple[str, ...] = ()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Model input specs per (cfg, shape)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for a cell (excluding params/optimizer/cache)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {}
+        s_text = s - (cfg.n_img_tokens if cfg.family == "vlm" else 0)
+        specs["tokens"] = _sds((b, s_text), jnp.int32)
+        if cfg.family == "vlm":
+            specs["img_embeds"] = _sds((b, cfg.n_img_tokens, cfg.d_model), dt)
+        if cfg.family == "encdec":
+            specs["enc_frames"] = _sds((b, cfg.enc_frames, cfg.d_model), dt)
+        if shape.kind == "train":
+            specs["targets"] = _sds((b, s_text), jnp.int32)
+            specs["mask"] = _sds((b, s_text), jnp.float32)
+        return specs
+    # decode: one new token against a cache of length seq_len
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def make_synthetic_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0
+                         ) -> Dict[str, jax.Array]:
+    """Concrete random batch matching ``batch_specs`` (for smoke tests/examples)."""
+    specs = batch_specs(cfg, shape)
+    rng = jax.random.PRNGKey(seed)
+    out = {}
+    for k, v in specs.items():
+        rng, sub = jax.random.split(rng)
+        if v.dtype == jnp.int32:
+            out[k] = jax.random.randint(sub, v.shape, 0, cfg.vocab, jnp.int32)
+        elif k == "mask":
+            out[k] = jnp.ones(v.shape, v.dtype)
+        else:
+            out[k] = jax.random.normal(sub, v.shape, jnp.float32).astype(v.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                    opt_cfg: Optional[AdamWConfig] = None, strategy: str = "tp",
+                    zero1: bool = True, remat: bool = True) -> StepBundle:
+    opt_cfg = opt_cfg or AdamWConfig()
+    defs = TF.model_defs(cfg, max_seq=shape.seq_len)
+    rules = SH.make_rules(mesh, strategy)
+    p_specs = SH.param_pspecs(defs, rules, mesh)
+    from repro.optim.adamw import opt_pspecs as make_opt_pspecs
+
+    o_specs = make_opt_pspecs(defs, rules, mesh, zero1=zero1)
+    b_specs_abs = batch_specs(cfg, shape)
+    b_pspecs = SH.batch_pspecs(b_specs_abs, mesh)
+
+    def train_step(params, opt_state, batch):
+        from repro.parallel.ep import ep_mesh
+
+        with ep_mesh(mesh):  # trace-time mesh for EP / seq-sharded attention
+            def loss_fn(p):
+                return TF.forward_train(p, cfg, batch, remat=remat)
+
+            (loss, metrics), grads = jax.value_and_grad(loss_fn,
+                                                        has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    abs_params = abstract_params(defs)
+    abs_opt = jax.eval_shape(adamw_init, abs_params)
+    in_shardings = (p_specs, o_specs, b_pspecs)
+    out_shardings = (p_specs, o_specs, None)
+    return StepBundle(
+        fn=train_step,
+        in_shardings=in_shardings,
+        out_shardings=out_shardings,
+        input_specs={"params": abs_params, "opt_state": abs_opt, "batch": b_specs_abs},
+        donate_argnames=("params", "opt_state"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                      strategy: str = "tp") -> StepBundle:
+    defs = TF.model_defs(cfg, max_seq=shape.seq_len)
+    rules = SH.make_rules(mesh, strategy)
+    p_specs = SH.param_pspecs(defs, rules, mesh)
+    b_specs_abs = batch_specs(cfg, shape)
+    b_pspecs = SH.batch_pspecs(b_specs_abs, mesh)
+    cache_abs = DEC.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_pspecs = SH.cache_pspecs(cfg, cache_abs, mesh)
+
+    def prefill_step(params, batch):
+        from repro.parallel.ep import ep_mesh
+
+        with ep_mesh(mesh):
+            return DEC.prefill(params, cfg, batch, max_len=shape.seq_len)
+
+    return StepBundle(
+        fn=prefill_step,
+        in_shardings=(p_specs, b_pspecs),
+        out_shardings=(None, c_pspecs),
+        input_specs={"params": abstract_params(defs), "batch": b_specs_abs},
+    )
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                     strategy: str = "tp") -> StepBundle:
+    window = cfg.long_window if (shape.name == "long_500k" and cfg.long_window) else 0
+    defs = TF.model_defs(cfg, max_seq=shape.seq_len)
+    rules = SH.make_rules(mesh, strategy)
+    p_specs = SH.param_pspecs(defs, rules, mesh)
+    b_specs_abs = batch_specs(cfg, shape)
+    b_pspecs = SH.batch_pspecs(b_specs_abs, mesh)
+    cache_abs = DEC.cache_specs(cfg, shape.global_batch, shape.seq_len, window)
+    c_pspecs = SH.cache_pspecs(cfg, cache_abs, mesh)
+
+    def decode_step(params, cache, batch):
+        from repro.parallel.ep import ep_mesh
+
+        with ep_mesh(mesh):
+            logits, new_cache = DEC.decode_step(params, cfg, cache,
+                                                batch["tokens"], window=window)
+        return logits, new_cache
+
+    return StepBundle(
+        fn=decode_step,
+        in_shardings=(p_specs, c_pspecs, b_pspecs),
+        out_shardings=(None, c_pspecs),
+        input_specs={"params": abstract_params(defs), "cache": cache_abs,
+                     "batch": b_specs_abs},
+        donate_argnames=("cache",),
+    )
+
+
+def make_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape,
+                                 **{k: v for k, v in kw.items() if k == "strategy"})
+    return make_decode_step(cfg, mesh, shape,
+                            **{k: v for k, v in kw.items() if k == "strategy"})
+
+
+# ---------------------------------------------------------------------------
+# Concrete initialization (for smoke tests / real training)
+# ---------------------------------------------------------------------------
+
+
+def init_model(cfg: ModelConfig, seed: int = 0, max_seq: int = 128):
+    defs = TF.model_defs(cfg, max_seq=max_seq)
+    params = init_params(jax.random.PRNGKey(seed), defs)
+    return defs, params

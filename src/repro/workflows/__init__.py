@@ -1,0 +1,1 @@
+from repro.workflows.pipeline import Pipeline, PipelineOp, bridge_pipeline

@@ -1,0 +1,171 @@
+"""Workflow integration (paper §6, Fig. 4).
+
+A minimal pipeline engine with KFP-like semantics (ops, ``.after()``
+dependencies, cache-staleness knobs) and the paper's canonical three-step
+bridge pipeline:
+
+    createop  — create the per-job config map from the pipeline parameters,
+    invokeop  — run the bridge controller pod to completion,
+    cleanop   — delete the config map.
+
+The bridge pipeline runs the pod DIRECTLY (as Kubeflow would run the
+container), not via the operator — matching the paper, where the pipeline is
+an alternative, self-contained consumer of the same pod images.  Pipelines
+compose: a bridge pipeline is usable "as a sub workflow for more complex
+implementations" (§6) via ``Pipeline.add_subpipeline``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.controller import ControllerPod
+from repro.core.operator import default_adapters
+from repro.core.resource import DONE, FAILED, KILLED
+
+
+class PipelineError(RuntimeError):
+    pass
+
+
+@dataclass
+class PipelineOp:
+    name: str
+    fn: Callable[[Dict[str, Any]], Any]
+    after: List[str] = field(default_factory=list)
+    # KFP: execution_options.caching_strategy.max_cache_staleness ("P0D" = never)
+    max_cache_staleness: str = "P0D"
+    retries: int = 0
+
+    def after_op(self, *ops: "PipelineOp") -> "PipelineOp":
+        self.after.extend(o.name for o in ops)
+        return self
+
+
+class Pipeline:
+    def __init__(self, name: str):
+        self.name = name
+        self.ops: Dict[str, PipelineOp] = {}
+        self._cache: Dict[str, Any] = {}
+
+    def add(self, op: PipelineOp) -> PipelineOp:
+        if op.name in self.ops:
+            raise PipelineError(f"duplicate op {op.name!r}")
+        self.ops[op.name] = op
+        return op
+
+    def add_subpipeline(self, sub: "Pipeline", after: Optional[List[str]] = None
+                        ) -> PipelineOp:
+        """Compose: run ``sub`` as a single op of this pipeline."""
+        return self.add(PipelineOp(
+            name=f"sub:{sub.name}",
+            fn=lambda ctx, _s=sub: _s.run(dict(ctx)),
+            after=list(after or [])))
+
+    def _toposort(self) -> List[PipelineOp]:
+        order, seen, visiting = [], set(), set()
+
+        def visit(name: str) -> None:
+            if name in seen:
+                return
+            if name in visiting:
+                raise PipelineError(f"dependency cycle at {name!r}")
+            visiting.add(name)
+            for dep in self.ops[name].after:
+                if dep not in self.ops:
+                    raise PipelineError(f"{name!r} depends on unknown {dep!r}")
+                visit(dep)
+            visiting.discard(name)
+            seen.add(name)
+            order.append(self.ops[name])
+
+        for name in self.ops:
+            visit(name)
+        return order
+
+    def run(self, context: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Execute ops topologically; each op sees the shared context and its
+        result is stored under ``results[name]``."""
+        ctx = dict(context or {})
+        results: Dict[str, Any] = {}
+        ctx["results"] = results
+        for op in self._toposort():
+            use_cache = op.max_cache_staleness != "P0D"
+            if use_cache and op.name in self._cache:
+                results[op.name] = self._cache[op.name]
+                continue
+            attempt = 0
+            while True:
+                try:
+                    results[op.name] = op.fn(ctx)
+                    break
+                except Exception:
+                    attempt += 1
+                    if attempt > op.retries:
+                        raise
+            if use_cache:
+                self._cache[op.name] = results[op.name]
+        return results
+
+
+# ---------------------------------------------------------------------------
+# The paper's three-step bridge pipeline (Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def bridge_pipeline(env, jobname: str, *, resourceURL: str, resourcesecret: str,
+                    script: str, scriptlocation: str, docker: str,
+                    additionaldata: str = "", jobproperties: Optional[Dict] = None,
+                    jobparams: Optional[Dict] = None, s3uploadfiles: str = "",
+                    s3uploadbucket: str = "", updateinterval: float = 0.02,
+                    namespace: str = "default", pod_retries: int = 2) -> Pipeline:
+    """Build the createop -> invokeop -> cleanop pipeline against a
+    ``BridgeEnvironment`` (same parameter list as the paper's
+    ``bridgepipeline`` python function, modulo s3 endpoint bundling)."""
+    pipe = Pipeline(f"bridge-{jobname}")
+    cm_name = f"{namespace}/{jobname}-bridge-cm"
+
+    def createop(ctx):
+        data = {
+            "resourceURL": resourceURL, "image": docker,
+            "resourcesecret": resourcesecret,
+            "updateinterval": str(updateinterval),
+            "jobscript": script, "scriptlocation": scriptlocation,
+            "additionaldata": additionaldata,
+            "jobproperties": json.dumps(jobproperties or {}),
+            "jobparams": json.dumps(jobparams or {}),
+            "unknown_after": "5", "id": "", "jobStatus": "PENDING",
+            "kill": "false", "message": "",
+            "s3uploadfiles": s3uploadfiles, "s3uploadbucket": s3uploadbucket,
+        }
+        env.statestore.get_or_create(cm_name, data)
+        return cm_name
+
+    def invokeop(ctx):
+        cm = env.statestore.get(cm_name)
+        pod = ControllerPod(
+            name=f"{namespace}/{jobname}-pod", configmap=cm,
+            secrets=env.secrets, objectstore=env.s3, directory=env.directory,
+            adapters=env.adapters, min_sleep=0.002)
+        pod.start()
+        pod.join(timeout=60)
+        status = cm.data.get("jobStatus", "")
+        if pod.exit_code != 0:
+            raise PipelineError(
+                f"bridge pod exited {pod.exit_code} (job {status})")
+        return {"jobStatus": status, "id": cm.data.get("id", ""),
+                "outputs": cm.data.get("outputs", "")}
+
+    def cleanop(ctx):
+        env.statestore.delete(cm_name)
+        return "cleaned"
+
+    create = pipe.add(PipelineOp("createop", createop))
+    invoke = pipe.add(PipelineOp("invokeop", invokeop, retries=pod_retries))
+    invoke.after_op(create)
+    clean = pipe.add(PipelineOp("cleanop", cleanop))
+    clean.after_op(invoke)
+    return pipe

@@ -1,0 +1,57 @@
+"""Dry-run machinery smoke: lower+compile a handful of representative cells
+on the production 16x16 mesh, in a subprocess (512 forced host devices must
+never leak into the main test process).  The FULL 40-cell x 2-mesh sweep is
+run by `python -m repro.launch.dryrun --all --both-meshes` (artifacts are
+committed under artifacts/dryrun/ and summarized in EXPERIMENTS.md)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+from repro.launch.dryrun import run_cell
+arch, shape, multi = sys.argv[1], sys.argv[2], sys.argv[3] == "multi"
+rec = run_cell(arch, shape, multi_pod=multi, verbose=False)
+print("RESULT " + json.dumps({k: rec[k] for k in
+    ("arch", "shape", "mesh", "hlo_flops_per_dev", "n_chips")}))
+"""
+
+
+def _run(arch, shape, mesh="single", timeout=540):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", SCRIPT, arch, shape, mesh],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[7:])
+
+
+def test_dryrun_train_cell_single_pod():
+    rec = _run("gemma-2b", "train_4k")
+    assert rec["n_chips"] == 256
+    assert rec["hlo_flops_per_dev"] > 1e13
+
+
+def test_dryrun_decode_cell_single_pod():
+    rec = _run("granite-3-8b", "decode_32k")
+    assert rec["n_chips"] == 256
+
+
+def test_dryrun_multi_pod_mesh():
+    rec = _run("phi3-mini-3.8b", "train_4k", mesh="multi")
+    assert rec["n_chips"] == 512
+    assert rec["mesh"] == "2x16x16"
+
+
+def test_dryrun_long_context_ssm():
+    rec = _run("xlstm-125m", "long_500k")
+    assert rec["n_chips"] == 256

@@ -1,0 +1,143 @@
+"""The paper's key mechanism: config-map state makes pod restarts safe.
+
+"Because the remote job ID is kept in the config map, ... the pod will know
+that the remote job is already running and will not try to restart it."
+"""
+import json
+import time
+
+import pytest
+
+from repro.core import (BridgeEnvironment, DONE, KILLED, RUNNING, SUBMITTED,
+                        UNKNOWN)
+
+
+@pytest.fixture()
+def env():
+    with BridgeEnvironment(default_duration=0.05) as e:
+        yield e
+
+
+def _wait_for_state(env, name, states, timeout=10):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        job = env.registry.get(name)
+        if job and job.status.state in states:
+            return job
+        time.sleep(0.005)
+    raise TimeoutError(f"{name} never reached {states}: "
+                       f"{env.registry.get(name).status.state}")
+
+
+def test_pod_restart_resumes_without_resubmission(env):
+    """Kill the controller pod mid-monitoring; the restarted pod must attach
+    to the SAME remote job (no second submission)."""
+    spec = env.make_spec("slurm", script="long job", updateinterval=0.02,
+                         jobproperties={"WallSeconds": "1.0"})
+    env.submit("restartme", spec)
+    job = _wait_for_state(env, "restartme", (SUBMITTED, RUNNING))
+    first_id = None
+    deadline = time.time() + 5
+    while time.time() < deadline and not first_id:
+        first_id = env.registry.get("restartme").status.job_id
+        time.sleep(0.005)
+    assert first_id
+
+    # node failure: kill the pod out-of-band
+    pod = env.operator.pods["default/restartme"]
+    pod.kill_pod()
+    job = env.operator.wait_for("restartme", timeout=20)
+    assert job.status.state == DONE
+    assert job.status.restarts >= 1, "operator must have restarted the pod"
+    assert job.status.job_id == first_id, "restarted pod must NOT resubmit"
+    # exactly one job exists on the cluster
+    assert len(env.clusters["slurm"].jobs) == 1
+
+
+def test_repeated_pod_kills(env):
+    """Multiple successive pod failures still converge to DONE, one job."""
+    spec = env.make_spec("slurm", script="x", updateinterval=0.02,
+                         jobproperties={"WallSeconds": "1.0"})
+    env.submit("flaky", spec)
+    _wait_for_state(env, "flaky", (SUBMITTED, RUNNING))
+    kills = 0
+    deadline = time.time() + 8
+    while kills < 3 and time.time() < deadline:
+        pod = env.operator.pods.get("default/flaky")
+        if pod and pod.alive():
+            pod.kill_pod()
+            kills += 1
+            time.sleep(0.1)
+        else:
+            time.sleep(0.01)
+    job = env.operator.wait_for("flaky", timeout=20)
+    assert job.status.state == DONE
+    assert kills >= 1
+    assert len(env.clusters["slurm"].jobs) == 1
+
+
+def test_kill_before_submission_no_orphan(env):
+    """Pod killed BEFORE it submits: restart submits exactly once."""
+    spec = env.make_spec("slurm", script="x", updateinterval=0.02,
+                         jobproperties={"WallSeconds": "0.3"})
+    # kill the pod the moment it exists (likely pre-submit)
+    env.submit("early", spec)
+    deadline = time.time() + 5
+    while time.time() < deadline:
+        pod = env.operator.pods.get("default/early")
+        if pod is not None:
+            pod.kill_pod()
+            break
+    job = env.operator.wait_for("early", timeout=20)
+    assert job.status.state == DONE
+    assert len(env.clusters["slurm"].jobs) == 1, "no orphaned double submit"
+
+
+def test_transport_flakiness_tolerated():
+    """20% packet loss on every request: jobs still complete (monitor loop
+    retries; statuses may transiently be stale but never invented)."""
+    from repro.core.rest import FaultProfile
+
+    with BridgeEnvironment(
+            default_duration=0.05,
+            fault_profiles={"slurm": FaultProfile(drop_rate=0.2, seed=42)}) as env:
+        spec = env.make_spec("slurm", script="x", updateinterval=0.01,
+                             jobproperties={"WallSeconds": "0.2"})
+        env.submit("flaky-net", spec)
+        job = env.operator.wait_for("flaky-net", timeout=30)
+        assert job.status.state == DONE
+
+
+def test_crash_loop_gives_unknown():
+    """A pod that crash-loops past max_restarts surfaces UNKNOWN, not silence."""
+    with BridgeEnvironment(default_duration=0.05,
+                           operator_kwargs={"max_restarts": 2}) as env:
+        spec = env.make_spec("slurm", script="x",
+                             jobproperties={"WallSeconds": "30"},
+                             updateinterval=0.02)
+        env.submit("crashloop", spec)
+        _wait_for_state(env, "crashloop", (SUBMITTED, RUNNING))
+        # kill pods as fast as they respawn
+        deadline = time.time() + 10
+        while time.time() < deadline:
+            job = env.registry.get("crashloop")
+            if job.status.state == UNKNOWN:
+                break
+            pod = env.operator.pods.get("default/crashloop")
+            if pod and pod.alive():
+                pod.kill_pod()
+            time.sleep(0.01)
+        assert env.registry.get("crashloop").status.state == UNKNOWN
+        assert "crash-looped" in env.registry.get("crashloop").status.message
+
+
+def test_statestore_durability(tmp_path):
+    """Config maps survive a full control-plane restart (file-backed)."""
+    from repro.core.statestore import StateStore
+
+    s1 = StateStore(root=str(tmp_path))
+    cm = s1.create("ns/job-cm", {"id": "123", "jobStatus": "RUNNING"})
+    cm.update({"jobStatus": "DONE"})
+    # "restart" the control plane: brand-new store over the same root
+    s2 = StateStore(root=str(tmp_path))
+    assert s2.get("ns/job-cm").data == {"id": "123", "jobStatus": "DONE"}

@@ -1,0 +1,144 @@
+"""Operator lifecycle conformance (paper §5.1 semantics)."""
+import dataclasses
+import time
+
+import pytest
+
+from repro.core import (BridgeEnvironment, BridgeJob, DONE, FAILED, KILLED,
+                        PENDING, RUNNING, SUBMITTED, UNKNOWN,
+                        ValidationError)
+
+
+@pytest.fixture()
+def env():
+    with BridgeEnvironment(default_duration=0.05) as e:
+        yield e
+
+
+def test_submit_and_complete_slurm(env):
+    spec = env.make_spec("slurm", script="#!/bin/bash\nsrun hostname\n",
+                         jobproperties={"NodesNumber": "1", "Queue": "V100",
+                                        "OutputFileName": "slurmjob.out"})
+    env.submit("slurmjob-test", spec)
+    job = env.operator.wait_for("slurmjob-test", timeout=20)
+    assert job.status.state == DONE
+    assert job.status.job_id != ""
+    assert job.status.start_time is not None
+    assert job.status.end_time is not None
+    assert job.status.end_time >= job.status.start_time
+
+
+def test_failed_job_reported(env):
+    spec = env.make_spec("slurm", script="exit 1",
+                         jobproperties={"FailMe": "true"})
+    env.submit("failjob", spec)
+    job = env.operator.wait_for("failjob", timeout=20)
+    assert job.status.state == FAILED
+    assert "FailMe" in job.status.message
+
+
+def test_kill_signal(env):
+    spec = env.make_spec("slurm", script="sleep", updateinterval=0.02,
+                         jobproperties={"WallSeconds": "5"})
+    env.submit("killme", spec)
+    # wait until running, then send kill via CR update (paper mechanism)
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        job = env.registry.get("killme")
+        if job.status.state in (SUBMITTED, RUNNING) and job.status.job_id:
+            break
+        time.sleep(0.01)
+    env.operator.kill("killme")
+    job = env.operator.wait_for("killme", timeout=20)
+    assert job.status.state == KILLED
+    assert time.time() < deadline + 10, "kill should beat the 5s wallclock"
+
+
+def test_delete_cleans_up(env):
+    spec = env.make_spec("slurm", script="x", jobproperties={"WallSeconds": "3"})
+    env.submit("gcjob", spec)
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        if env.statestore.exists(env.operator.cm_name(env.registry.get("gcjob"))):
+            break
+        time.sleep(0.01)
+    job = env.registry.get("gcjob")
+    cm_name = env.operator.cm_name(job)
+    env.registry.delete("gcjob")
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        if (not env.statestore.exists(cm_name)
+                and env.registry.get("gcjob") is None):
+            break
+        time.sleep(0.01)
+    assert not env.statestore.exists(cm_name), "config map must be GC'd"
+    assert env.registry.get("gcjob") is None, "CR must be purged"
+
+
+def test_spec_validation():
+    from repro.core.resource import BridgeJobSpec, JobData
+
+    with pytest.raises(ValidationError):
+        BridgeJobSpec(resourceURL="", image="x", resourcesecret="s").validate()
+    with pytest.raises(ValidationError):
+        BridgeJobSpec(resourceURL="u", image="x", resourcesecret="s",
+                      jobdata=JobData(scriptlocation="ftp")).validate()
+    with pytest.raises(ValidationError):
+        # s3 script without s3storage
+        BridgeJobSpec(resourceURL="u", image="x", resourcesecret="s",
+                      jobdata=JobData(jobscript="b:k", scriptlocation="s3")
+                      ).validate()
+
+
+def test_cr_dict_roundtrip():
+    from repro.core.resource import BridgeJob, load_bridgejob
+    import json
+
+    env_spec = {
+        "kind": "BridgeJob",
+        "apiVersion": "bridgeoperator.repro/v1alpha1",
+        "metadata": {"name": "slurmjob-test"},
+        "spec": {
+            "resourceURL": "http://my-slurm-cluster@hpc.com",
+            "image": "slurmpod:0.1",
+            "resourcesecret": "mysecret",
+            "imagepullpolicy": "Always",
+            "updateinterval": 20,
+            "jobdata": {"jobscript": "mys3bucket:slurmbatch.sh",
+                        "scriptlocation": "s3"},
+            "jobproperties": {"NodesNumber": "1", "Queue": "V100"},
+            "s3storage": {"s3secret": "mysecret-s3",
+                          "endpoint": "s3endpoint.cloud", "secure": False},
+        },
+    }
+    job = load_bridgejob(json.dumps(env_spec))
+    assert job.name == "slurmjob-test"
+    assert job.spec.jobdata.scriptlocation == "s3"
+    d = job.to_dict()
+    job2 = BridgeJob.from_dict(d)
+    assert job2.spec == job.spec
+
+
+def test_status_unknown_on_outage(env):
+    """Paper/black-box honesty: unreachable resource -> UNKNOWN, not FAILED."""
+    spec = env.make_spec("lsf", script="job", updateinterval=0.02,
+                         jobproperties={"WallSeconds": "5"}, unknown_after=3)
+    env.submit("outage", spec)
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        job = env.registry.get("outage")
+        if job.status.state == RUNNING:
+            break
+        time.sleep(0.01)
+    env.servers["lsf"].fault.begin_outage()
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        job = env.registry.get("outage")
+        if job.status.state == UNKNOWN:
+            break
+        time.sleep(0.01)
+    assert env.registry.get("outage").status.state == UNKNOWN
+    # network heals -> status recovers, job completes
+    env.servers["lsf"].fault.end_outage()
+    job = env.operator.wait_for("outage", timeout=20)
+    assert job.status.state == DONE

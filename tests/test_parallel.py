@@ -1,0 +1,47 @@
+"""Multi-device shard_map checks, run in a subprocess so the forced
+8-device XLA flag never leaks into this process."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(*names, timeout=900):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"),
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "parallel_checks.py"),
+         *names],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_ep_shard_map_matches_dropping():
+    out = _run("ep")
+    assert "OK ep_matches_dropping" in out
+
+
+def test_pipeline_parallel():
+    out = _run("pipeline")
+    assert "OK pipeline_apply" in out
+
+
+def test_compressed_mean_collective():
+    out = _run("compressed")
+    assert "OK compressed_mean" in out
+
+
+def test_sharded_train_step_three_families():
+    out = _run("train")
+    assert out.count("OK sharded_train_step") == 3
+
+
+def test_checkpoint_reshard_on_load():
+    out = _run("reshard")
+    assert "OK checkpoint_reshard_on_load" in out

@@ -1,0 +1,73 @@
+"""Load-aware scheduling + speculative execution (paper §7 future work)."""
+import time
+
+import pytest
+
+from repro.core import (BridgeEnvironment, Candidate, DONE, IMAGES,
+                        LoadAwareScheduler, URLS)
+
+
+@pytest.fixture()
+def env():
+    with BridgeEnvironment(default_duration=0.05) as e:
+        yield e
+
+
+def _candidates():
+    return [Candidate(URLS[k], IMAGES[k], f"{k}-secret")
+            for k in ("slurm", "lsf", "ray")]
+
+
+def _sched(env):
+    return LoadAwareScheduler(env.directory, env.secrets, env.adapters,
+                              _candidates())
+
+
+def test_pick_least_loaded(env):
+    sched = _sched(env)
+    # saturate slurm with long jobs
+    for _ in range(8):
+        env.clusters["slurm"].submit("hog", {"WallSeconds": "10"}, {})
+    ranked = sched.rank()
+    assert ranked[0][1].resourceURL != URLS["slurm"]
+    assert ranked[-1][1].resourceURL == URLS["slurm"]
+
+
+def test_place_rewrites_spec(env):
+    sched = _sched(env)
+    for _ in range(8):
+        env.clusters["slurm"].submit("hog", {"WallSeconds": "10"}, {})
+    spec = env.make_spec("slurm", script="payload")
+    placed = sched.place(spec)
+    assert placed.resourceURL != URLS["slurm"]
+    assert placed.jobdata.jobscript == "payload"  # payload untouched
+
+
+def test_unreachable_candidate_skipped(env):
+    sched = _sched(env)
+    env.servers["lsf"].fault.begin_outage()
+    ranked = sched.rank()
+    assert all(c.resourceURL != URLS["lsf"] for _, c in ranked)
+    env.servers["lsf"].fault.end_outage()
+
+
+def test_speculative_execution_straggler_mitigation(env):
+    """Launch on the two least-loaded backends; slow one gets killed."""
+    sched = _sched(env)
+    # make slurm slow (straggler) but still reachable
+    env.clusters["slurm"].default_duration = 5.0
+    spec = env.make_spec("slurm", script="payload", updateinterval=0.02)
+    winner = sched.submit_speculative(env.operator, "spec-job", spec, n=2,
+                                      timeout=30)
+    assert winner.status.state == DONE
+    # loser was killed (or still being killed) — eventually terminal
+    others = [j for j in env.registry.list() if j.name != winner.name
+              and j.name.startswith("spec-job")]
+    deadline = time.time() + 20
+    while time.time() < deadline:
+        others = [j for j in env.registry.list() if j.name != winner.name
+                  and j.name.startswith("spec-job")]
+        if all(j.status.terminal() for j in others):
+            break
+        time.sleep(0.02)
+    assert all(j.status.terminal() for j in others)

@@ -1,0 +1,114 @@
+"""Workflow integration (paper §6, Fig. 4): three-step bridge pipeline."""
+import json
+
+import pytest
+
+from repro.core import BridgeEnvironment, IMAGES, URLS
+from repro.workflows.pipeline import (Pipeline, PipelineError, PipelineOp,
+                                      bridge_pipeline)
+
+
+@pytest.fixture()
+def env():
+    with BridgeEnvironment(default_duration=0.05) as e:
+        yield e
+
+
+def test_three_step_pipeline_slurm(env):
+    env.s3.put("mys3bucket", "slurmbatch.sh", b"#!/bin/bash\nsrun job\n")
+    pipe = bridge_pipeline(
+        env, "wfjob",
+        resourceURL=URLS["slurm"], resourcesecret="slurm-secret",
+        script="mys3bucket:slurmbatch.sh", scriptlocation="s3",
+        docker=IMAGES["slurm"],
+        jobproperties={"NodesNumber": "1", "Queue": "V100",
+                       "OutputFileName": "slurmjob.out"},
+    )
+    results = pipe.run()
+    assert results["invokeop"]["jobStatus"] == "DONE"
+    assert results["cleanop"] == "cleaned"
+    # config map cleaned up
+    assert not env.statestore.exists("default/wfjob-bridge-cm")
+
+
+def test_three_step_pipeline_lsf_output_upload(env):
+    """LSF supports file download: outputs land in S3 via the pipeline."""
+    pipe = bridge_pipeline(
+        env, "wfjob-lsf",
+        resourceURL=URLS["lsf"], resourcesecret="lsf-secret",
+        script="bsub payload", scriptlocation="inline", docker=IMAGES["lsf"],
+        jobproperties={"OutputFileName": "lsfjob.out"},
+        s3uploadfiles="lsfjob.out", s3uploadbucket="outputs",
+    )
+    results = pipe.run()
+    assert results["invokeop"]["jobStatus"] == "DONE"
+    assert any(k.endswith("lsfjob.out") for k in env.s3.list("outputs"))
+
+
+def test_pipeline_is_backend_agnostic(env):
+    """Same pipeline code, different docker parameter (paper: 'can be used
+    with any of the Bridge operator pods')."""
+    for kind in ("lsf", "ray", "quantum"):
+        pipe = bridge_pipeline(
+            env, f"wf-{kind}", resourceURL=URLS[kind],
+            resourcesecret=f"{kind}-secret", script=f"payload-{kind}",
+            scriptlocation="inline", docker=IMAGES[kind])
+        results = pipe.run()
+        assert results["invokeop"]["jobStatus"] == "DONE", kind
+
+
+def test_pipeline_as_subworkflow(env):
+    """A bridge pipeline composes as a sub-workflow of a bigger pipeline."""
+    inner = bridge_pipeline(env, "inner", resourceURL=URLS["slurm"],
+                            resourcesecret="slurm-secret", script="w",
+                            scriptlocation="inline", docker=IMAGES["slurm"])
+    outer = Pipeline("outer")
+    pre = outer.add(PipelineOp("prepare", lambda ctx: "prepared"))
+    sub = outer.add_subpipeline(inner, after=["prepare"])
+    post = outer.add(PipelineOp(
+        "report", lambda ctx: ctx["results"][sub.name]["invokeop"]["jobStatus"]))
+    post.after_op(sub)
+    results = outer.run()
+    assert results["report"] == "DONE"
+
+
+def test_pipeline_cycle_detection():
+    p = Pipeline("cyclic")
+    a = p.add(PipelineOp("a", lambda ctx: 1))
+    b = p.add(PipelineOp("b", lambda ctx: 2))
+    a.after.append("b")
+    b.after.append("a")
+    with pytest.raises(PipelineError, match="cycle"):
+        p.run()
+
+
+def test_pipeline_retries(env):
+    calls = {"n": 0}
+
+    def flaky(ctx):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    p = Pipeline("retry")
+    p.add(PipelineOp("flaky", flaky, retries=3))
+    assert p.run()["flaky"] == "ok"
+    assert calls["n"] == 3
+
+
+def test_pipeline_caching():
+    calls = {"n": 0}
+
+    def op(ctx):
+        calls["n"] += 1
+        return calls["n"]
+
+    p = Pipeline("cached")
+    p.add(PipelineOp("op", op, max_cache_staleness="P30D"))
+    assert p.run()["op"] == 1
+    assert p.run()["op"] == 1  # cached
+    p2 = Pipeline("uncached")
+    p2.add(PipelineOp("op", op, max_cache_staleness="P0D"))
+    assert p2.run()["op"] == 2
+    assert p2.run()["op"] == 3

@@ -1,0 +1,91 @@
+"""Perf-iteration helper: run one dry-run cell with overrides and diff the
+roofline terms against the recorded baseline artifact.
+
+  PYTHONPATH=src python tools/perf_iter.py <arch> <shape> \
+      [--set attention_impl=blockwise] [--set moe.routing_impl=ep_shard_map] \
+      [--strategy fsdp_tp] [--save artifacts/perf/<name>.json]
+
+Override value parsing: int/float/bool/str auto-detected; "moe.<field>" and
+"ssm.<field>" nest into the sub-config.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+
+
+def parse_val(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    return v
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("arch")
+    p.add_argument("shape")
+    p.add_argument("--set", action="append", default=[], dest="sets")
+    p.add_argument("--strategy", default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--baseline", default="artifacts/dryrun")
+    p.add_argument("--save", default="")
+    p.add_argument("--mode", default=None, choices=["probe", "direct"])
+    args = p.parse_args()
+
+    from repro.configs.base import get_config
+    from repro.launch.dryrun import run_cell
+
+    overrides = {}
+    sub: dict = {}
+    for s in args.sets:
+        k, v = s.split("=", 1)
+        if "." in k:
+            outer, inner = k.split(".", 1)
+            sub.setdefault(outer, {})[inner] = parse_val(v)
+        else:
+            overrides[k] = parse_val(v)
+    if sub:
+        cfg0 = get_config(args.arch)
+        for outer, fields in sub.items():
+            subcfg = getattr(cfg0, outer)
+            overrides[outer] = dataclasses.replace(subcfg, **fields)
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   strategy=args.strategy, overrides=overrides,
+                   mode=args.mode)
+
+    mesh_tag = "multi" if args.multi_pod else "single"
+    base_path = os.path.join(args.baseline, mesh_tag,
+                             f"{args.arch}__{args.shape}.json")
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+        print("\n=== delta vs baseline ===")
+        for key in ("compute_s", "memory_s", "collective_s"):
+            b, n = base["roofline"][key], rec["roofline"][key]
+            print(f"{key:14s} {b:.4e} -> {n:.4e}  "
+                  f"({(n - b) / b * 100 if b else 0:+.1f}%)")
+        bm = base["memory"].get("peak_bytes_per_device", 0)
+        nm = rec["memory"].get("peak_bytes_per_device", 0)
+        print(f"{'peak_mem_GiB':14s} {bm/2**30:.2f} -> {nm/2**30:.2f}")
+        bu = base.get("useful_flops_ratio") or 0
+        nu = rec.get("useful_flops_ratio") or 0
+        print(f"{'useful_ratio':14s} {bu:.3f} -> {nu:.3f}")
+    if args.save:
+        os.makedirs(os.path.dirname(args.save), exist_ok=True)
+        with open(args.save, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"# saved {args.save}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+import os, sys
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp
+from repro.configs.base import get_smoke_config, ShapeConfig, ARCH_IDS
+from repro.steps import make_synthetic_batch, init_model
+from repro.models import transformer as TF
+from repro.models import decoding as DEC
+
+shape = ShapeConfig("tiny_train", 32, 2, "train")
+dshape = ShapeConfig("tiny_dec", 32, 2, "decode")
+
+for arch in sys.argv[1:] or ARCH_IDS:
+    cfg = get_smoke_config(arch)
+    try:
+        defs, params = init_model(cfg, max_seq=64)
+        batch = make_synthetic_batch(cfg, shape)
+        loss, metrics = TF.forward_train(params, cfg, batch, remat=False)
+        assert jnp.isfinite(loss), f"{arch}: loss not finite"
+        # prefill + decode
+        pre_batch = {k: v for k, v in batch.items() if k not in ("targets", "mask")}
+        logits, cache = DEC.prefill(params, cfg, pre_batch, max_len=48)
+        logits2, cache2 = DEC.decode_step(params, cfg, cache, batch["tokens"][:, :1])
+        assert jnp.all(jnp.isfinite(logits2)), f"{arch}: decode logits not finite"
+        print(f"OK   {arch:25s} loss={float(loss):.4f} logits={logits2.shape}")
+    except Exception as e:
+        import traceback; traceback.print_exc()
+        print(f"FAIL {arch:25s} {type(e).__name__}: {e}")
+        sys.exit(1)
+print("all smoke OK")
