@@ -1,0 +1,13 @@
+# Single entry points so local and CI invocations cannot drift.
+.PHONY: test test-compat deps-dev
+
+# tier-1: the ROADMAP.md verify command, verbatim (via the shared wrapper)
+test:
+	bash tools/run_tier1.sh
+
+# fast feedback on the JAX substrate seam only
+test-compat:
+	PYTHONPATH=src python -m pytest -q tests/test_compat.py
+
+deps-dev:
+	pip install -r requirements-dev.txt

@@ -1,0 +1,61 @@
+"""Runtime capability probes: which kernel path can this process run?
+
+Three tiers, best first:
+  * pallas-TPU       — a TPU is attached; ``pallas_call`` lowers via Mosaic;
+  * pallas-interpret — no TPU, but Pallas imports; kernel bodies run in
+    Python on CPU (bit-accurate correctness path for tests/containers);
+  * xla              — Pallas itself is unavailable; callers fall back to
+    the pure-jnp reference implementations.
+
+``interpret=None`` in the kernel wrappers means "pick for me":
+:func:`resolve_interpret` maps it to ``not has_tpu()`` so the same call
+site compiles on a pod and interprets in a CPU container.  Set
+``REPRO_PALLAS_INTERPRET=0/1`` to force either mode.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+
+@functools.lru_cache(maxsize=None)
+def has_tpu() -> bool:
+    import jax
+
+    try:
+        return len(jax.devices("tpu")) > 0
+    except RuntimeError:
+        return False
+
+
+@functools.lru_cache(maxsize=None)
+def pallas_available() -> bool:
+    try:
+        from jax.experimental import pallas  # noqa: F401
+        from jax.experimental.pallas import tpu  # noqa: F401
+    except ImportError:
+        return False
+    return True
+
+
+def pallas_interpret_default() -> bool:
+    """True when Pallas kernels should run in interpret mode by default."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False", "")
+    return not has_tpu()
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Map the tri-state kernel arg (None = auto) to a concrete bool."""
+    if interpret is None:
+        return pallas_interpret_default()
+    return bool(interpret)
+
+
+def best_kernel_path() -> str:
+    """'pallas_tpu' | 'pallas_interpret' | 'xla' for this process."""
+    if not pallas_available():
+        return "xla"
+    return "pallas_tpu" if has_tpu() else "pallas_interpret"

@@ -1,0 +1,34 @@
+"""JAX version probing for the compat layer.
+
+Resolution policy everywhere in ``repro.compat``: probe for the API
+(``hasattr`` / signature inspection), never compare version strings to
+decide behaviour — version numbers lie across backports and dev builds.
+The parsed version here is for *reporting* (``describe()``, error
+messages), not for dispatch.
+"""
+from __future__ import annotations
+
+import re
+from typing import Tuple
+
+import jax
+
+
+def jax_version() -> str:
+    return jax.__version__
+
+
+def jax_version_tuple() -> Tuple[int, int, int]:
+    """Best-effort (major, minor, patch); unparsable segments become 0."""
+    parts = re.split(r"[.+rc-]", jax.__version__)
+    nums = []
+    for p in parts[:3]:
+        nums.append(int(p) if p.isdigit() else 0)
+    while len(nums) < 3:
+        nums.append(0)
+    return tuple(nums)  # type: ignore[return-value]
+
+
+def at_least(major: int, minor: int, patch: int = 0) -> bool:
+    """Reporting/diagnostics helper only — dispatch must probe APIs."""
+    return jax_version_tuple() >= (major, minor, patch)

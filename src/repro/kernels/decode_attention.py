@@ -13,11 +13,14 @@ scalar per batch row from SMEM (scalar prefetch idiom).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import mosaic_params, resolve_interpret
 
 NEG_INF = -1e30
 LANES = 128
@@ -64,11 +67,12 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
 def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
                          lengths: jax.Array, *, block_m: int = 512,
-                         interpret: bool = False) -> jax.Array:
+                         interpret: Optional[bool] = None) -> jax.Array:
     """q: (B,Hq,D); k,v: (B,Hkv,M,D); lengths: (B,) int32 -> (B,Hq,D).
 
     M must be a multiple of block_m (ops.py pads; padding is masked by
-    ``lengths``)."""
+    ``lengths``).  ``interpret=None`` auto-selects per backend."""
+    interpret = resolve_interpret(interpret)
     b, hq, d = q.shape
     hkv, m = k.shape[1], k.shape[2]
     group = hq // hkv
@@ -98,8 +102,8 @@ def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((group, LANES), jnp.float32),
             pltpu.VMEM((group, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
+        **mosaic_params(dimension_semantics=("parallel", "parallel",
+                                             "arbitrary")),
     )(lengths, qg, k, v)
     return out.reshape(b, hq, d)

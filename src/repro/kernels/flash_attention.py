@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import mosaic_params, resolve_interpret
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -76,11 +78,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          causal: bool = True, block_q: int = 128,
-                         block_k: int = 128, interpret: bool = False
-                         ) -> jax.Array:
+                         block_k: int = 128,
+                         interpret: Optional[bool] = None) -> jax.Array:
     """q: (B,Hq,Sq,D); k,v: (B,Hkv,Sk,D) -> (B,Hq,Sq,D).
 
-    Sq/Sk must be multiples of the block sizes (wrapper in ops.py pads)."""
+    Sq/Sk must be multiples of the block sizes (wrapper in ops.py pads).
+    ``interpret=None`` auto-selects: Mosaic on TPU, interpret elsewhere."""
+    interpret = resolve_interpret(interpret)
     b, hq, sq, d = q.shape
     hkv, sk = k.shape[1], k.shape[2]
     if hq % hkv:
@@ -116,8 +120,7 @@ def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, LANES), jnp.float32),   # running denom
             pltpu.VMEM((block_q, d), jnp.float32),       # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
         interpret=interpret,
+        **mosaic_params(dimension_semantics=("parallel", "parallel",
+                                             "parallel", "arbitrary")),
     )(q, k, v)

@@ -3,20 +3,29 @@
 Layout contract with the model code (repro.models.layers): activations are
 (B, S, H, D) / caches are (B, M, Hkv, D); the kernels want head-major
 (B, H, S, D).  Wrappers transpose, pad sequences to block multiples, call
-the kernel, and slice back.  ``interpret=True`` runs the kernel body in
-Python on CPU (correctness path in this container); on a real TPU the same
-call lowers through Mosaic.
+the kernel, and slice back.
+
+Substrate dispatch (via repro.compat): ``interpret=None`` (the default)
+auto-selects — Mosaic lowering on TPU, Python interpret mode on CPU; and
+when Pallas itself cannot be imported on the installed JAX, each wrapper
+degrades to the pure-XLA reference implementation in ``repro.kernels.ref``
+so the model code never sees the substrate change.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention import decode_attention_bhd
-from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.ssm_scan import ssm_scan_chunked
+from repro.compat import pallas_available, resolve_interpret
+from repro.kernels import ref as _ref
+
+if pallas_available():
+    from repro.kernels.decode_attention import decode_attention_bhd
+    from repro.kernels.flash_attention import flash_attention_bhsd
+    from repro.kernels.ssm_scan import ssm_scan_chunked
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -29,16 +38,30 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
-                                             "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
     """q: (B,S,Hq,D); k,v: (B,S,Hkv,D) -> (B,S,Hq,D).  Causal only (key
     padding is masked by causality)."""
+    # resolve interpret=None OUTSIDE jit so the cache is keyed on the
+    # concrete mode and env/backend changes can't hit a stale executable
+    return _flash_attention(q, k, v, causal=causal, block_q=block_q,
+                            block_k=block_k,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def _flash_attention(q, k, v, *, causal, block_q, block_k, interpret):
     if not causal:
         raise NotImplementedError("pallas path is causal-only; xla handles "
                                   "bidirectional encoders")
+    if not pallas_available():
+        out = _ref.flash_attention_ref(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), causal=True)
+        return jnp.swapaxes(out, 1, 2)
     s = q.shape[1]
     qt = _pad_to(jnp.swapaxes(q, 1, 2), 2, block_q)
     kt = _pad_to(jnp.swapaxes(k, 1, 2), 2, block_k)
@@ -48,12 +71,21 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return jnp.swapaxes(out[:, :, :s], 1, 2)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
                      lengths: jax.Array, *, block_m: int = 512,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     """q: (B,1,Hq,D); cache_{k,v}: (B,M,Hkv,D); lengths (B,) -> (B,1,Hq,D).
     Cache padding beyond ``lengths`` is masked inside the kernel."""
+    return _decode_attention(q, cache_k, cache_v, lengths, block_m=block_m,
+                             interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def _decode_attention(q, cache_k, cache_v, lengths, *, block_m, interpret):
+    if not pallas_available():
+        return _ref.decode_attention_ref(
+            q[:, 0], jnp.swapaxes(cache_k, 1, 2),
+            jnp.swapaxes(cache_v, 1, 2), lengths.astype(jnp.int32))[:, None]
     qb = q[:, 0]  # (B,Hq,D)
     kt = _pad_to(jnp.swapaxes(cache_k, 1, 2), 2, block_m)
     vt = _pad_to(jnp.swapaxes(cache_v, 1, 2), 2, block_m)
@@ -62,12 +94,19 @@ def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     return out[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssm_scan(dA: jax.Array, dBx: jax.Array, C: jax.Array, *, chunk: int = 16,
-             interpret: bool = False):
+             interpret: Optional[bool] = None):
     """Chunked linear recurrence + output contraction (see ssm_scan.py).
     Pads S to a chunk multiple; padded steps have dA=0, dBx=0 so h_last is
     exact... padded dA must be 1 to keep h; handled here."""
+    return _ssm_scan(dA, dBx, C, chunk=chunk,
+                     interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssm_scan(dA, dBx, C, *, chunk, interpret):
+    if not pallas_available():
+        return _ref.ssm_scan_ref(dA, dBx, C)
     s = dA.shape[1]
     pad = (-s) % chunk
     if pad:
@@ -80,12 +119,20 @@ def ssm_scan(dA: jax.Array, dBx: jax.Array, C: jax.Array, *, chunk: int = 16,
     return y[:, :s], h_last
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssm_scan_fused(delta: jax.Array, B: jax.Array, C: jax.Array,
                    x: jax.Array, A: jax.Array, *, chunk: int = 16,
-                   interpret: bool = False):
+                   interpret: Optional[bool] = None):
     """Fused-discretization selective scan (see ssm_scan.py): dA/dBx never
     touch HBM.  Pads S to a chunk multiple (identity steps)."""
+    return _ssm_scan_fused(delta, B, C, x, A, chunk=chunk,
+                           interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssm_scan_fused(delta, B, C, x, A, *, chunk, interpret):
+    if not pallas_available():
+        dA, dBx = _ref.ssm_discretize(delta, B, x, A)
+        return _ref.ssm_scan_ref(dA, dBx, C)
     from repro.kernels.ssm_scan import ssm_scan_fused as _fused
 
     s = delta.shape[1]

@@ -44,6 +44,18 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return jnp.einsum("bhm,bhmd->bhd", p, vr.astype(jnp.float32)).astype(q.dtype)
 
 
+def ssm_discretize(delta: jax.Array, B: jax.Array, x: jax.Array,
+                   A: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """ZOH discretization: dA_t = exp(delta_t*A); dBx_t = delta_t*B_t*x_t.
+
+    delta, x: (B,S,di); B: (B,S,N); A: (di,N) -> dA, dBx (B,S,di,N).
+    The single definition of the math that _ssm_fused_kernel computes
+    per-timestep in VMEM — keep the two in lockstep."""
+    dA = jnp.exp(delta[..., None] * A)
+    dBx = delta[..., None] * B[:, :, None, :] * x[..., None]
+    return dA, dBx
+
+
 def ssm_scan_ref(dA: jax.Array, dBx: jax.Array, C: jax.Array
                  ) -> Tuple[jax.Array, jax.Array]:
     """Linear recurrence h_t = dA_t * h_{t-1} + dBx_t;  y_t = <h_t, C_t>.

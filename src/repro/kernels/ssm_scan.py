@@ -12,11 +12,14 @@ Grid: (B, n_chunks), chunks innermost/sequential.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import mosaic_params, resolve_interpret
 
 
 def _ssm_kernel(dA_ref, dBx_ref, C_ref, y_ref, h_last_ref, h_scr, *,
@@ -52,7 +55,9 @@ def _ssm_fused_kernel(delta_ref, b_ref, c_ref, x_ref, a_ref, y_ref,
                       h_last_ref, h_scr, *, chunk: int, n_chunks: int):
     """Fused-discretization variant: dA/dBx are built IN VMEM from
     (delta, B, x, A) — HBM reads drop from O(S·di·N) to O(S·(di+N)),
-    ~(di·N)/(di+N) x less traffic (e.g. 32x for di=3200, N=16)."""
+    ~(di·N)/(di+N) x less traffic (e.g. 32x for di=3200, N=16).
+    The math must stay in lockstep with ref.ssm_discretize (the XLA
+    fallback path in ops.py uses that definition)."""
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
@@ -86,9 +91,10 @@ def _ssm_fused_kernel(delta_ref, b_ref, c_ref, x_ref, a_ref, y_ref,
 
 def ssm_scan_fused(delta: jax.Array, B: jax.Array, C: jax.Array,
                    x: jax.Array, A: jax.Array, *, chunk: int = 16,
-                   interpret: bool = False):
+                   interpret: Optional[bool] = None):
     """delta,x: (B,S,di); B,C: (B,S,N); A: (di,N).  S % chunk == 0.
     Returns (y (B,S,di) f32, h_last (B,di,N) f32)."""
+    interpret = resolve_interpret(interpret)
     b, s, di = delta.shape
     n = B.shape[-1]
     chunk = min(chunk, s)
@@ -116,16 +122,16 @@ def ssm_scan_fused(delta: jax.Array, B: jax.Array, C: jax.Array,
             jax.ShapeDtypeStruct((b, di, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((di, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
+        **mosaic_params(dimension_semantics=("parallel", "arbitrary")),
     )(delta, B, C, x, A)
 
 
 def ssm_scan_chunked(dA: jax.Array, dBx: jax.Array, C: jax.Array, *,
-                     chunk: int = 16, interpret: bool = False):
+                     chunk: int = 16, interpret: Optional[bool] = None):
     """dA, dBx: (B,S,di,N); C: (B,S,N).  S must be a multiple of ``chunk``.
     Returns (y (B,S,di) f32, h_last (B,di,N) f32)."""
+    interpret = resolve_interpret(interpret)
     b, s, di, n = dA.shape
     chunk = min(chunk, s)
     if s % chunk:
@@ -150,7 +156,6 @@ def ssm_scan_chunked(dA: jax.Array, dBx: jax.Array, C: jax.Array, *,
             jax.ShapeDtypeStruct((b, di, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((di, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
+        **mosaic_params(dimension_semantics=("parallel", "arbitrary")),
     )(dA, dBx, C)

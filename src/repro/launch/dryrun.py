@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional
 
 import jax
 
+from repro.compat import cost_analysis_dict, jit_sharded, use_mesh
 from repro.configs.base import ARCH_IDS, SHAPES, cells, get_config
 from repro.launch.analysis import (collective_stats, memory_stats_dict,
                                    model_flops, roofline_terms)
@@ -76,14 +77,15 @@ def default_strategy(arch: str, shape_name: str) -> str:
 def _compile_once(cfg, shape, mesh, strategy):
     t0 = time.time()
     bundle = make_step(cfg, mesh, shape, strategy=strategy)
-    with jax.sharding.set_mesh(mesh):
-        jf = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
-                     out_shardings=bundle.out_shardings,
-                     donate_argnames=bundle.donate_argnames or None)
+    with use_mesh(mesh):
+        jf = jit_sharded(bundle.fn, mesh,
+                         in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnames=bundle.donate_argnames)
         lowered = jf.lower(*bundle.input_specs.values())
         compiled = lowered.compile()
     t = time.time() - t0
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     return {
         "compile_s": t,
         "flops": float(cost.get("flops", 0.0)),

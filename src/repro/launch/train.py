@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.compat import jit_sharded, use_mesh
 from repro.configs.base import ARCH_IDS, ShapeConfig, get_config, get_smoke_config
 from repro.core.objectstore import ObjectStore
 from repro.data import DataConfig, SyntheticDataset, with_frontend_stubs
@@ -73,10 +74,11 @@ def main() -> None:
             params, opt_state = tree["params"], tree["opt"]
             print(f"[train] resumed from step {start}")
 
-    with jax.sharding.set_mesh(mesh):
-        step_fn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
-                          out_shardings=bundle.out_shardings,
-                          donate_argnames=bundle.donate_argnames)
+    with use_mesh(mesh):
+        step_fn = jit_sharded(bundle.fn, mesh,
+                              in_shardings=bundle.in_shardings,
+                              out_shardings=bundle.out_shardings,
+                              donate_argnames=bundle.donate_argnames)
         t0 = time.time()
         for step in range(start, args.steps):
             batch = {k: jnp.asarray(v) for k, v in

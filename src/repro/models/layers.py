@@ -204,8 +204,11 @@ def attn_forward(
     if impl in ("pallas", "pallas_interpret") and kv_override is None and causal and window == 0:
         from repro.kernels import ops as kops
 
+        # "pallas" = auto (compat picks Mosaic on TPU / interpret on CPU);
+        # "pallas_interpret" pins interpret mode for bit-exact test sweeps
         out = kops.flash_attention(
-            q, k, v, causal=True, interpret=(impl == "pallas_interpret")
+            q, k, v, causal=True,
+            interpret=True if impl == "pallas_interpret" else None,
         )
     elif impl in ("blockwise", "blockwise_u") and kv_override is None and causal:
         q = _maybe_seq_shard(q, cfg)
@@ -269,8 +272,9 @@ def attn_decode(
         from repro.kernels import ops as kops
 
         valid = jnp.minimum(pos + 1, M)
-        out = kops.decode_attention(q, cache_k, cache_v, valid,
-                                    interpret=(impl == "pallas_interpret"))
+        out = kops.decode_attention(
+            q, cache_k, cache_v, valid,
+            interpret=True if impl == "pallas_interpret" else None)
     else:
         scores = _gqa_scores(q, cache_k, n_rep) / jnp.sqrt(hd).astype(jnp.float32)
         ik = jax.lax.broadcasted_iota(jnp.int32, (b, 1, M), 2)

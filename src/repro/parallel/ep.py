@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.moe import _router, aux_load_balance_loss
 from repro.sharding import dp_axes
 
@@ -142,8 +143,8 @@ def moe_ep_gather(p: Dict[str, Any], x: jax.Array, cfg
         return y, aux
 
     args = (x, p["router"], p["w1"], p["w2"]) + ((p["w3"],) if has_w3 else ())
-    return jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(*args)
+    return shard_map(local, mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False)(*args)
 
 
 def moe_ep_shard_map(p: Dict[str, Any], x: jax.Array, cfg
@@ -222,5 +223,5 @@ def moe_ep_shard_map(p: Dict[str, Any], x: jax.Array, cfg
         return y, aux
 
     args = (x, p["router"], p["w1"], p["w2"]) + ((p["w3"],) if has_w3 else ())
-    return jax.shard_map(local, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(*args)
+    return shard_map(local, mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False)(*args)

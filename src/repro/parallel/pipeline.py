@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
                    stage_params: Any, x: jax.Array, mesh: Mesh,
@@ -71,8 +73,8 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
             jnp.where(sidx == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
         return outs.reshape(b, *x_l.shape[1:])
 
-    return jax.shard_map(run, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(stage_params, x)
+    return shard_map(run, mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_vma=False)(stage_params, x)
 
 
 def stack_stage_params(layer_params: Any, n_stages: int) -> Any:

@@ -1,0 +1,258 @@
+"""repro.compat — the version-portable JAX substrate layer.
+
+Two halves:
+  * unit tests that every seam (shard_map / use_mesh / mosaic_params /
+    jit_sharded / capability probes) RESOLVES and WORKS on the installed
+    JAX, whatever its version;
+  * a source-scan regression test enforcing the seam's one rule: nothing
+    under src/repro/ outside compat/ (and nothing under tools/) may
+    reference the version-sensitive spellings directly.
+"""
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# -- resolution --------------------------------------------------------------
+
+
+def test_describe_reports_every_seam():
+    d = compat.describe()
+    assert d["jax_version"] == jax.__version__
+    assert "shard_map" in d["shard_map"]
+    assert d["use_mesh"].startswith("jax.sharding.")
+    assert isinstance(d["pallas_available"], bool)
+    assert d["best_kernel_path"] in ("pallas_tpu", "pallas_interpret", "xla")
+
+
+def test_shard_map_resolves_and_runs():
+    mesh = jax.make_mesh((1,), ("x",))
+    f = compat.shard_map(lambda a: a * 2.0, mesh, in_specs=P(),
+                         out_specs=P())
+    np.testing.assert_allclose(np.asarray(f(jnp.ones(4))), 2.0)
+
+
+def test_shard_map_accepts_check_vma_spelling():
+    """check_vma must be translated to whatever this JAX calls it."""
+    mesh = jax.make_mesh((1,), ("x",))
+    for flag in (False, True):
+        f = compat.shard_map(lambda a: a + 1.0, mesh, in_specs=P(),
+                             out_specs=P(), check_vma=flag)
+        np.testing.assert_allclose(np.asarray(f(jnp.zeros(2))), 1.0)
+
+
+def test_use_mesh_context_manager():
+    mesh = jax.make_mesh((1,), ("x",))
+    with compat.use_mesh(mesh) as m:
+        assert m is mesh
+        # re-entrancy: nested contexts must not blow up
+        with compat.use_mesh(mesh):
+            pass
+    assert compat.use_mesh_source().startswith("jax.sharding.")
+
+
+def test_use_mesh_enables_sharded_jit():
+    mesh = jax.make_mesh((1,), ("x",))
+    sh = NamedSharding(mesh, P("x"))
+    with compat.use_mesh(mesh):
+        out = jax.jit(lambda a: a * 3.0, in_shardings=sh,
+                      out_shardings=sh)(jnp.ones(8))
+    np.testing.assert_allclose(np.asarray(out), 3.0)
+
+
+def test_mosaic_params_resolves_on_installed_jax():
+    got = compat.mosaic_params(
+        dimension_semantics=("parallel", "arbitrary"))
+    if compat.pallas_available():
+        assert set(got) == {"compiler_params"}
+        assert type(got["compiler_params"]).__name__.endswith("CompilerParams")
+        assert compat.compiler_params_source() is not None
+    else:
+        assert got == {}
+
+
+def test_mosaic_params_drops_unknown_fields():
+    """Field drift must degrade to 'unset', never TypeError."""
+    got = compat.mosaic_params(
+        dimension_semantics=("parallel",),
+        definitely_not_a_real_mosaic_field_xyz=1)
+    if got:
+        cp = got["compiler_params"]
+        assert not hasattr(cp, "definitely_not_a_real_mosaic_field_xyz")
+
+
+def test_mosaic_params_accepted_by_pallas_call():
+    if not compat.pallas_available():
+        pytest.skip("pallas unavailable on this JAX")
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2.0
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        interpret=True,
+        **compat.mosaic_params(dimension_semantics=()),
+    )(jnp.ones((8, 128), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), 2.0)
+
+
+# -- capability probes -------------------------------------------------------
+
+
+def test_capability_probes_are_consistent():
+    assert isinstance(compat.has_tpu(), bool)
+    assert isinstance(compat.pallas_available(), bool)
+    if "REPRO_PALLAS_INTERPRET" not in os.environ:
+        assert compat.pallas_interpret_default() == (not compat.has_tpu())
+    path = compat.best_kernel_path()
+    if not compat.pallas_available():
+        assert path == "xla"
+    elif compat.has_tpu():
+        assert path == "pallas_tpu"
+    else:
+        assert path == "pallas_interpret"
+
+
+def test_resolve_interpret_tristate():
+    assert compat.resolve_interpret(True) is True
+    assert compat.resolve_interpret(False) is False
+    assert compat.resolve_interpret(None) == compat.pallas_interpret_default()
+
+
+def test_pallas_interpret_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert compat.pallas_interpret_default() is True
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert compat.pallas_interpret_default() is False
+
+
+# -- jit over PartitionSpec pytrees ------------------------------------------
+
+
+def test_resolve_shardings_binds_specs_and_keeps_none():
+    mesh = jax.make_mesh((1,), ("x",))
+    tree = ({"w": P("x"), "b": P()}, None)
+    got = compat.resolve_shardings(mesh, tree)
+    assert isinstance(got[0]["w"], NamedSharding)
+    assert got[0]["w"].spec == P("x")
+    assert got[1] is None
+    already = NamedSharding(mesh, P())
+    assert compat.resolve_shardings(mesh, already) is already
+
+
+def test_jit_sharded_runs_with_spec_pytrees():
+    mesh = jax.make_mesh((1,), ("x",))
+
+    def step(params, batch):
+        return {"w": params["w"] + batch.sum()}, None
+
+    with compat.use_mesh(mesh):
+        jf = compat.jit_sharded(step, mesh,
+                                in_shardings=({"w": P()}, P("x")),
+                                out_shardings=({"w": P()}, None))
+        out, _ = jf({"w": jnp.zeros(3)}, jnp.ones(4))
+    np.testing.assert_allclose(np.asarray(out["w"]), 4.0)
+
+
+# -- pure-XLA fallback tier --------------------------------------------------
+
+
+def test_kernel_ops_xla_fallback_matches_ref(monkeypatch):
+    """The `pallas unavailable` tier of every kernel wrapper must produce
+    ref numerics.  Unreachable on a pin where pallas imports, so force it:
+    the wrappers look up ``pallas_available`` at trace time."""
+    from repro.kernels import ops, ref
+
+    monkeypatch.setattr(ops, "pallas_available", lambda: False)
+    # odd shapes unused elsewhere so the jit caches can't serve a trace
+    # made while pallas_available was still True
+    ks = jax.random.split(jax.random.PRNGKey(42), 5)
+
+    q = jax.random.normal(ks[0], (1, 56, 6, 24))
+    k = jax.random.normal(ks[1], (1, 56, 3, 24))
+    v = jax.random.normal(ks[2], (1, 56, 3, 24))
+    got = ops.flash_attention(q, k, v)
+    want = jnp.swapaxes(ref.flash_attention_ref(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=True), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+    qd = jax.random.normal(ks[0], (2, 1, 6, 24))
+    ck = jax.random.normal(ks[1], (2, 40, 3, 24))
+    cv = jax.random.normal(ks[2], (2, 40, 3, 24))
+    lengths = jnp.asarray([13, 40], jnp.int32)
+    got = ops.decode_attention(qd, ck, cv, lengths)
+    want = ref.decode_attention_ref(qd[:, 0], jnp.swapaxes(ck, 1, 2),
+                                    jnp.swapaxes(cv, 1, 2), lengths)[:, None]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+    dA = jax.nn.sigmoid(jax.random.normal(ks[0], (1, 20, 6, 5)) + 2.0)
+    dBx = jax.random.normal(ks[1], (1, 20, 6, 5)) * 0.1
+    C = jax.random.normal(ks[2], (1, 20, 5))
+    y_got, h_got = ops.ssm_scan(dA, dBx, C, chunk=8)
+    y_want, h_want = ref.ssm_scan_ref(dA, dBx, C)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                               rtol=2e-4, atol=2e-5)
+
+    delta = jax.nn.softplus(jax.random.normal(ks[0], (1, 20, 6)))
+    B = jax.random.normal(ks[1], (1, 20, 5))
+    x = jax.random.normal(ks[3], (1, 20, 6))
+    A = -jnp.exp(jax.random.normal(ks[4], (6, 5)))
+    y_got, h_got = ops.ssm_scan_fused(delta, B, C, x, A, chunk=8)
+    y_want, h_want = ref.ssm_scan_ref(*ref.ssm_discretize(delta, B, x, A), C)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                               rtol=2e-4, atol=2e-5)
+
+
+# -- source-scan regression --------------------------------------------------
+
+# every documented spelling of the version-sensitive APIs, old and new:
+# shard_map (both locations), the mesh context (both spellings), and the
+# Pallas compiler-params classes
+BANNED = re.compile(r"jax\.shard_map|jax\.experimental\.shard_map"
+                    r"|set_mesh|jax\.sharding\.use_mesh|CompilerParams")
+
+
+def _scan(root, skip_dir=None):
+    hits = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        if skip_dir and os.path.abspath(dirpath).startswith(skip_dir):
+            continue
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path, encoding="utf-8") as f:
+                for lineno, line in enumerate(f, 1):
+                    if BANNED.search(line):
+                        hits.append(f"{os.path.relpath(path, ROOT)}:"
+                                    f"{lineno}: {line.strip()}")
+    return hits
+
+
+def test_no_direct_version_sensitive_jax_apis_outside_compat():
+    """repro.compat is the single entry point for version-sensitive JAX
+    APIs; any direct reference elsewhere re-litters the tree with the
+    exact churn this layer exists to absorb."""
+    hits = _scan(os.path.join(ROOT, "src", "repro"),
+                 skip_dir=os.path.join(ROOT, "src", "repro", "compat"))
+    hits += _scan(os.path.join(ROOT, "tools"))
+    assert not hits, ("direct version-sensitive JAX API use — route through "
+                      "repro.compat:\n" + "\n".join(hits))

@@ -5,6 +5,10 @@ import string
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -96,8 +96,9 @@ def check_compressed_mean():
         return compressed_mean(x, e, "dp")
 
     from jax.sharding import PartitionSpec as P
-    mean, new_err = jax.jit(jax.shard_map(
-        f, mesh=mesh, in_specs=(P("dp"), P("dp")),
+    from repro.compat import shard_map
+    mean, new_err = jax.jit(shard_map(
+        f, mesh, in_specs=(P("dp"), P("dp")),
         out_specs=(P("dp"), P("dp")), check_vma=False))(xs, errs)
     exact = jnp.mean(xs, axis=0)
     got = np.asarray(mean)[0]  # every shard holds the same mean
@@ -111,6 +112,7 @@ def check_compressed_mean():
 
 def check_sharded_train_step():
     """pjit train step on a (2,4) mesh for three families."""
+    from repro.compat import jit_sharded, use_mesh
     from repro.configs.base import ShapeConfig, get_smoke_config
     from repro.data import DataConfig, SyntheticDataset, with_frontend_stubs
     from repro.steps import make_train_step
@@ -132,10 +134,10 @@ def check_sharded_train_step():
         params = init_params(jax.random.PRNGKey(0), defs)
         from repro.optim import adamw_init
         opt = adamw_init(params)
-        with jax.sharding.set_mesh(mesh):
-            jf = jax.jit(bundle.fn,
-                         in_shardings=bundle.in_shardings,
-                         out_shardings=bundle.out_shardings)
+        with use_mesh(mesh):
+            jf = jit_sharded(bundle.fn, mesh,
+                             in_shardings=bundle.in_shardings,
+                             out_shardings=bundle.out_shardings)
             new_p, new_o, metrics = jf(params, opt, batch)
             loss = float(metrics["loss"])
         assert np.isfinite(loss), (arch, loss)

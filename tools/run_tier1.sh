@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the EXACT command from ROADMAP.md, with the
+# PYTHONPATH the tree expects, so local runs and CI cannot drift.
+# Usage: tools/run_tier1.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
