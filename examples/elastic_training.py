@@ -68,14 +68,13 @@ def main() -> None:
         # -- 3: speculative execution ---------------------------------------
         env.clusters["slurm"].default_duration = 8.0  # slurm = straggler
         sched = LoadAwareScheduler(
-            env.directory, env.secrets, env.adapters,
+            env.bridge,
             [Candidate(URLS[k], IMAGES[k], f"{k}-secret")
              for k in ("slurm", "lsf", "ray")])
         base = env.make_spec("slurm", script="the payload",
                              updateinterval=0.05)
         t0 = time.time()
-        winner = sched.submit_speculative(env.operator, "spec", base, n=2,
-                                          timeout=60)
+        winner = sched.submit_speculative("spec", base, n=2, timeout=60)
         print(f"3.  speculative winner: {winner.spec.resourceURL} "
               f"in {time.time()-t0:.2f}s (straggler was killed)")
         assert winner.status.state == DONE

@@ -23,7 +23,7 @@ def main() -> None:
         for _ in range(10):
             env.clusters["slurm"].submit("hog", {"WallSeconds": "10"}, {})
         sched = LoadAwareScheduler(
-            env.directory, env.secrets, env.adapters,
+            env.bridge,
             [Candidate(URLS[k], IMAGES[k], f"{k}-secret")
              for k in ("slurm", "lsf", "ray")])
         print("\nqueue loads:")

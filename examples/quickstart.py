@@ -1,10 +1,8 @@
 """Quickstart: submit a job to a simulated SLURM cluster through the Bridge
-Operator, exactly like the paper's Fig. 1 yaml, and watch it complete.
+client facade, exactly like the paper's Fig. 1 yaml, and watch it complete.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import time
-
 from repro.core import BridgeEnvironment
 
 
@@ -24,17 +22,11 @@ def main() -> None:
             },
             updateinterval=0.05,
         )
-        env.submit("slurmjob-test", spec)
+        handle = env.bridge.submit("slurmjob-test", spec)
         print("BridgeJob created; operator reconciling...")
-        last = ""
-        while True:
-            job = env.registry.get("slurmjob-test")
-            if job.status.state != last:
-                last = job.status.state
-                print(f"  status={last:10s} remote_id={job.status.job_id!r}")
-            if job.status.terminal():
-                break
-            time.sleep(0.02)
+        for status in handle.watch(timeout=60):
+            print(f"  status={status.state:10s} remote_id={status.job_id!r}")
+        job = handle.job()
         print(f"final: {job.status.state}, "
               f"ran {job.status.end_time - job.status.start_time:.2f}s "
               f"on the external resource")

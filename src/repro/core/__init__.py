@@ -1,7 +1,10 @@
 """The paper's primary contribution: the Bridge Operator control plane.
 
 Public surface:
-  BridgeJob / BridgeJobSpec        — the CRD analogue (resource.py)
+  BridgeJob / BridgeJobSpec        — the versioned CRD analogue (resource.py)
+  convert / ConversionError         — v1alpha1 <-> v1beta1 conversion layer
+  Bridge / JobHandle                — the one client facade (api.py)
+  Capability                        — typed adapter capabilities (backends/base.py)
   ResourceRegistry                  — declarative store + watch (registry.py)
   StateStore / ConfigMap            — the ConfigMap analogue (statestore.py)
   ObjectStore                       — S3 analogue (objectstore.py)
@@ -11,17 +14,21 @@ Public surface:
   LoadAwareScheduler                — paper §7 future work (scheduler.py)
   BridgeEnvironment                 — cluster-in-a-box wiring (cluster.py)
 """
-from repro.core.resource import (BridgeJob, BridgeJobSpec, BridgeJobStatus,
-                                 JobData, S3Storage, ValidationError,
+from repro.core.resource import (API_V1ALPHA1, API_V1BETA1, API_VERSIONS,
+                                 ArraySpec, BridgeJob, BridgeJobSpec,
+                                 BridgeJobStatus, ConversionError, JobData,
+                                 RetryPolicy, S3Storage, ValidationError,
                                  PENDING, SUBMITTED, RUNNING, DONE, FAILED,
                                  KILLED, UNKNOWN, TERMINAL_STATES,
-                                 load_bridgejob)
+                                 convert, load_bridgejob)
 from repro.core.registry import ResourceRegistry
 from repro.core.statestore import ConfigMap, StateStore
 from repro.core.objectstore import NoSuchKey, ObjectStore
 from repro.core.secrets import SecretNotFound, SecretStore
 from repro.core.rest import (FaultProfile, ResourceManagerDirectory,
                              RestClient, RestServer, TransportError)
+from repro.core.backends.base import Capability, resolve_adapter
+from repro.core.api import Bridge, JobHandle
 from repro.core.controller import ControllerPod
 from repro.core.operator import BridgeOperator, default_adapters
 from repro.core.scheduler import Candidate, LoadAwareScheduler

@@ -1,0 +1,192 @@
+"""``Bridge`` — the one client facade over the whole control plane.
+
+Before this module existed, every consumer (tests, examples, the scheduler,
+the pipeline engine) hand-assembled registry + statestore + secrets +
+objectstore + directory.  ``Bridge`` wires them once and exposes the verbs a
+client actually needs:
+
+    bridge = Bridge.from_env(env)            # or Bridge(registry=..., ...)
+    handle = bridge.submit("train", spec)    # spec, v1alpha1 dict, or v1beta1 dict
+    for status in handle.watch():            # status stream until terminal
+        ...
+    job = handle.wait(timeout=60)
+    handle.cancel()
+    files = handle.outputs()                 # S3-uploaded outputs, by name
+
+The facade is deliberately operator-free: it only talks to the declarative
+stores (create/patch CRs, read status, fetch objects), exactly like kubectl.
+Whatever reconciler is running — the in-process ``BridgeOperator`` or a
+future distributed one — clients are unchanged.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Iterator, Mapping, Optional, Type
+
+from repro.core.backends import base as B
+from repro.core.objectstore import ObjectStore
+from repro.core.registry import ResourceRegistry
+from repro.core.resource import (BridgeJob, BridgeJobSpec, BridgeJobStatus,
+                                 spec_from_dict)
+from repro.core.rest import ResourceManagerDirectory
+from repro.core.secrets import SecretStore
+from repro.core.statestore import StateStore
+
+
+@dataclass(frozen=True)
+class JobHandle:
+    """A client-side reference to one BridgeJob CR (array or single)."""
+    bridge: "Bridge"
+    name: str
+    namespace: str = "default"
+
+    def job(self) -> Optional[BridgeJob]:
+        return self.bridge.registry.get(self.name, self.namespace)
+
+    def status(self) -> BridgeJobStatus:
+        job = self.job()
+        if job is None:
+            raise KeyError(f"BridgeJob {self.namespace}/{self.name} not found")
+        return job.status
+
+    def wait(self, timeout: float = 30.0) -> BridgeJob:
+        return self.bridge.wait(self.name, self.namespace, timeout=timeout)
+
+    def watch(self, timeout: float = 30.0,
+              poll: float = 0.01) -> Iterator[BridgeJobStatus]:
+        return self.bridge.watch(self.name, self.namespace,
+                                 timeout=timeout, poll=poll)
+
+    def cancel(self) -> None:
+        self.bridge.cancel(self.name, self.namespace)
+
+    def outputs(self) -> Dict[str, bytes]:
+        return self.bridge.outputs(self.name, self.namespace)
+
+    def delete(self) -> None:
+        self.bridge.delete(self.name, self.namespace)
+
+
+class Bridge:
+    """One object that wires the control-plane stores together, once."""
+
+    def __init__(self, registry: ResourceRegistry, statestore: StateStore,
+                 secrets: SecretStore, objectstore: ObjectStore,
+                 directory: ResourceManagerDirectory,
+                 adapters: Optional[Mapping[str, Type[B.ResourceAdapter]]] = None):
+        if adapters is None:
+            from repro.core.operator import default_adapters
+            adapters = default_adapters()
+        self.registry = registry
+        self.statestore = statestore
+        self.secrets = secrets
+        self.s3 = objectstore
+        self.directory = directory
+        self.adapters: Dict[str, Type[B.ResourceAdapter]] = dict(adapters)
+
+    @classmethod
+    def from_env(cls, env) -> "Bridge":
+        """Wrap an already-wired ``BridgeEnvironment``."""
+        return cls(env.registry, env.statestore, env.secrets, env.s3,
+                   env.directory, env.adapters)
+
+    # -- the client verbs --------------------------------------------------
+
+    def submit(self, name: str, spec, namespace: str = "default") -> JobHandle:
+        """Create a BridgeJob CR.  ``spec`` may be a ``BridgeJobSpec`` or a
+        spec dict in either API version (the conversion layer normalizes)."""
+        if isinstance(spec, dict):
+            if "spec" in spec or "apiVersion" in spec:  # a full CR document
+                doc = dict(spec)
+                doc.setdefault("metadata", {"name": name,
+                                            "namespace": namespace})
+                job = BridgeJob.from_dict(doc)
+                job.name, job.namespace = name, namespace
+                spec = job.spec
+            else:
+                spec = spec_from_dict(spec)
+        self.registry.create(BridgeJob(name=name, spec=spec,
+                                       namespace=namespace))
+        return JobHandle(self, name, namespace)
+
+    def handle(self, name: str, namespace: str = "default") -> JobHandle:
+        return JobHandle(self, name, namespace)
+
+    def wait(self, name: str, namespace: str = "default",
+             timeout: float = 30.0) -> BridgeJob:
+        """Block until the job reaches a terminal state."""
+        deadline = time.time() + timeout
+        job = None
+        while time.time() < deadline:
+            job = self.registry.get(name, namespace)
+            if job is not None and job.status.terminal():
+                return job
+            time.sleep(0.01)
+        raise TimeoutError(
+            f"BridgeJob {namespace}/{name} not terminal after {timeout}s "
+            f"(state={job.status.state if job else '?'})")
+
+    def watch(self, name: str, namespace: str = "default",
+              timeout: float = 30.0,
+              poll: float = 0.01) -> Iterator[BridgeJobStatus]:
+        """Yield a status snapshot on every observed change, ending with the
+        terminal one (kubectl get -w analogue)."""
+        deadline = time.time() + timeout
+        last: Optional[tuple] = None
+        while time.time() < deadline:
+            job = self.registry.get(name, namespace)
+            if job is not None:
+                key = (job.status.state, job.status.message,
+                       job.status.job_id, tuple(sorted(
+                           job.status.index_states.items())))
+                if key != last:
+                    last = key
+                    yield job.status
+                if job.status.terminal():
+                    return
+            time.sleep(poll)
+        raise TimeoutError(f"watch on {namespace}/{name} timed out")
+
+    def cancel(self, name: str, namespace: str = "default") -> None:
+        """User-facing kill signal: update the CR (paper §5.1)."""
+        import dataclasses
+
+        self.registry.update_spec(
+            name, lambda s: dataclasses.replace(s, kill=True), namespace)
+
+    def delete(self, name: str, namespace: str = "default") -> None:
+        self.registry.delete(name, namespace)
+
+    def outputs(self, name: str, namespace: str = "default") -> Dict[str, bytes]:
+        """Fetch the job's S3-uploaded outputs, keyed by object key."""
+        try:
+            cm = self.statestore.get(f"{namespace}/{name}-bridge-cm").data
+        except KeyError:
+            return {}
+        out: Dict[str, bytes] = {}
+        refs = [r for r in cm.get("outputs", "").split(",") if r]
+        for key in [k for k in cm if k.startswith("results_location")]:
+            if cm[key]:
+                refs.append(cm[key])
+        for ref in refs:
+            bucket, key = ObjectStore.parse_ref(ref)
+            out[key] = self.s3.get(bucket, key)
+        return out
+
+    # -- capability + adapter plumbing (scheduler, tooling) ----------------
+
+    def adapter_type(self, image: str) -> Type[B.ResourceAdapter]:
+        return B.resolve_adapter(self.adapters, image)
+
+    def capabilities(self, image: str) -> FrozenSet[B.Capability]:
+        """The typed capability set the controller image advertises."""
+        return self.adapter_type(image).capabilities
+
+    def connect_adapter(self, resourceURL: str, image: str,
+                        resourcesecret: str) -> B.ResourceAdapter:
+        """Instantiate the adapter a controller pod for this target would
+        use: mount the secret, connect, resolve by image."""
+        token = self.secrets.mount(resourcesecret).get("token", "")
+        client = self.directory.connect(resourceURL, token)
+        return self.adapter_type(image)(client)

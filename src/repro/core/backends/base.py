@@ -11,10 +11,12 @@ Canonical internal states (each dialect maps to its own vocabulary):
 """
 from __future__ import annotations
 
+import enum
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import (Any, Callable, Dict, FrozenSet, List, Mapping, Optional,
+                    Type)
 
 QUEUED = "QUEUED"
 RUNNING = "RUNNING"
@@ -61,7 +63,10 @@ def sleep_payload(job: ClusterJob, cluster: "SimulatedCluster") -> int:
         if job._cancel.is_set():
             return -1
         time.sleep(min(0.005, max(deadline - time.time(), 0)))
-    if job.properties.get("FailMe", "") == "true":
+    # FailMe as a property fails the whole submission; as a param it fails
+    # one array index (params are the per-index channel)
+    if (job.properties.get("FailMe", "") == "true"
+            or job.params.get("FailMe", "") == "true"):
         job.reason = "job script exited non-zero (FailMe)"
         return 1
     out_name = job.properties.get("OutputFileName", "job.out")
@@ -74,28 +79,68 @@ def sleep_payload(job: ClusterJob, cluster: "SimulatedCluster") -> int:
     return 0
 
 
+class Capability(enum.Enum):
+    """Typed adapter capabilities: what a backend's API genuinely offers.
+
+    Consumers (operator, controller pod, scheduler, ``Bridge`` facade) consult
+    ``adapter.capabilities`` instead of try/except-probing optional verbs.
+    Every adapter declares honestly — a missing capability means the remote
+    API has no such endpoint, not that we didn't wire it.
+    """
+    CANCEL = "cancel"                # can cancel a running job
+    CANCEL_QUEUED = "cancel_queued"  # can cancel a job still in the queue
+    UPLOAD = "upload"                # can stage files onto the resource
+    DOWNLOAD = "download"            # can fetch arbitrary output files
+    LOGS = "logs"                    # can fetch per-job logs (ray idiom)
+    QUEUE_LOAD = "queue_load"        # exposes queue depth/slots for scheduling
+    NATIVE_ARRAYS = "native_arrays"  # one submission fans out N indices
+
+
 class ResourceAdapter:
     """The contract every controller-pod implementation obeys (paper §5.1:
     "to support a new resource type, the only thing that is required is the
     implementation of the corresponding controller, based on very simple
     rules imposed by the operator").
 
-    An adapter owns a ``RestClient`` and translates the five bridge verbs
-    into the manager's REST dialect.  Status is reported in the CANONICAL
-    vocabulary above; the adapter maps dialect states back to it.
+    An adapter owns a ``RestClient`` and translates the bridge verbs into the
+    manager's REST dialect.  Status is reported in the CANONICAL vocabulary
+    above; the adapter maps dialect states back to it.  ``capabilities``
+    advertises which optional verbs the dialect really has; callers must not
+    invoke a verb the adapter does not declare.
     """
 
     #: docker-image prefix this adapter serves ("slurmpod", "lsfpod", ...)
     image: str = ""
+    #: honest declaration of what the remote API supports
+    capabilities: FrozenSet[Capability] = frozenset({Capability.CANCEL})
 
     def __init__(self, client) -> None:
         self.client = client
+
+    @classmethod
+    def supports(cls, cap: Capability) -> bool:
+        return cap in cls.capabilities
 
     # every verb may raise TransportError (network) — callers must handle it
     def submit(self, script: str, properties: Dict[str, str],
                params: Dict[str, str]) -> str:
         """Returns the remote job id, or raises SubmitError."""
         raise NotImplementedError
+
+    def submit_array(self, script: str, properties: Dict[str, str],
+                     params_by_index: List[Dict[str, str]]) -> List[str]:
+        """Native array fan-out: ONE submission call -> one id per index.
+        Only valid when ``Capability.NATIVE_ARRAYS`` is declared; callers
+        without it fan out via repeated ``submit()``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not declare NATIVE_ARRAYS")
+
+    def resubmit_index(self, script: str, properties: Dict[str, str],
+                       params: Dict[str, str], index: int) -> str:
+        """Resubmit ONE array index (the retry path).  Dialects with native
+        arrays override this to restamp their own index marker so a retried
+        index sees the same params as the original run."""
+        return self.submit(script, properties, params)
 
     def status(self, job_id: str) -> Dict[str, Any]:
         """Returns {'state': CANONICAL, 'start_time', 'end_time', 'reason'}."""
@@ -105,15 +150,36 @@ class ResourceAdapter:
         raise NotImplementedError
 
     def upload(self, name: str, data: bytes) -> bool:
-        """Stage a file onto the resource. False if the API lacks upload."""
+        """Stage a file onto the resource (requires Capability.UPLOAD)."""
         return False
 
     def download(self, name: str) -> Optional[bytes]:
-        """Fetch an output file. None if unsupported/missing."""
+        """Fetch an output file (requires Capability.DOWNLOAD)."""
+        return None
+
+    def download_logs(self, job_id: str) -> Optional[bytes]:
+        """Fetch per-job logs (requires Capability.LOGS)."""
         return None
 
     def queue_load(self) -> Optional[Dict[str, int]]:
+        """Queue depth/slots (requires Capability.QUEUE_LOAD)."""
         return None
+
+
+def resolve_adapter(adapters: Mapping[str, Type[ResourceAdapter]],
+                    image: str) -> Type[ResourceAdapter]:
+    """Adapter lookup by controller image ("slurmpod:0.1" -> SlurmAdapter).
+
+    The single place the image-tag convention lives; every consumer
+    (controller pod, scheduler, Bridge facade) resolves through here and gets
+    the same error for an unknown image.
+    """
+    base_image = image.split(":")[0]
+    try:
+        return adapters[base_image]
+    except KeyError:
+        raise KeyError(
+            f"no controller implementation for image {image!r}") from None
 
 
 class SubmitError(RuntimeError):
@@ -197,6 +263,8 @@ class SimulatedCluster:
     def _schedule_loop(self) -> None:
         while not self._stop.is_set():
             with self._lock:
+                # reap finished workers — the list must not grow with job count
+                self._threads = [t for t in self._threads if t.is_alive()]
                 running = sum(1 for j in self.jobs.values() if j.state == RUNNING)
                 free = self.slots - running
                 to_start = [j for j in sorted(self.jobs.values(),

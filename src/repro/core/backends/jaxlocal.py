@@ -36,6 +36,8 @@ from repro.core.rest import FaultProfile, RestServer
 
 class JaxLocalAdapter(SlurmAdapter):
     image = "jaxpod"
+    # same dialect as slurmrestd, so the same capability set (incl. arrays)
+    capabilities = SlurmAdapter.capabilities
 
 
 def train_job(spec: Dict[str, Any], store: ObjectStore,

@@ -93,6 +93,12 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 
 class LSFAdapter(B.ResourceAdapter):
     image = "lsfpod"
+    # Application Center API: full file staging, no native job arrays —
+    # array CRs fan out via repeated submit()
+    capabilities = frozenset({
+        B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
+        B.Capability.UPLOAD, B.Capability.DOWNLOAD, B.Capability.QUEUE_LOAD,
+    })
 
     def submit(self, script, properties, params) -> str:
         body = dict(properties or {})

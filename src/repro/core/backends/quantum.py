@@ -80,6 +80,11 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 
 class QuantumAdapter(B.ResourceAdapter):
     image = "quantumpod"
+    # results are PUSHED to object storage by the service — no file verbs
+    capabilities = frozenset({
+        B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
+        B.Capability.QUEUE_LOAD,
+    })
 
     def submit(self, script, properties, params) -> str:
         r = self.client.post("/runtime/jobs", {"program": script,

@@ -82,6 +82,11 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 
 class RayAdapter(B.ResourceAdapter):
     image = "raypod"
+    # Ray Jobs expose logs, not arbitrary files; no native arrays
+    capabilities = frozenset({
+        B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
+        B.Capability.LOGS, B.Capability.QUEUE_LOAD,
+    })
 
     def __init__(self, client, submission_id: str = "") -> None:
         super().__init__(client)
@@ -110,12 +115,6 @@ class RayAdapter(B.ResourceAdapter):
 
     def cancel(self, job_id: str) -> None:
         self.client.post(f"/api/jobs/{job_id}/stop")
-
-    def download(self, name: str) -> Optional[bytes]:
-        # Ray jobs expose logs, not arbitrary files
-        if name != "logs":
-            return None
-        return None  # resolved per-job by the controller via job_id
 
     def download_logs(self, job_id: str) -> Optional[bytes]:
         r = self.client.get(f"/api/jobs/{job_id}/logs")

@@ -30,6 +30,22 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         body = body or {}
         if "script" not in body:
             return HttpResponse(400, {"error": "no script"})
+        # sbatch --array analogue: one request fans out N tasks, each a full
+        # job with SLURM_ARRAY_TASK_ID and optional per-index params
+        n = int(body.get("array_size", 0) or 0)
+        if n > 1:
+            per_index = body.get("params_by_index") or []
+            task_ids = []
+            for i in range(n):
+                params = dict(body.get("params", {}))
+                if i < len(per_index):
+                    params.update(per_index[i])
+                params.setdefault("SLURM_ARRAY_TASK_ID", str(i))
+                job = cluster.submit(body["script"], body.get("job", {}),
+                                     params)
+                task_ids.append(int(job.id))
+            return HttpResponse(200, {"job_id": task_ids[0],
+                                      "task_ids": task_ids})
         job = cluster.submit(body["script"], body.get("job", {}),
                              body.get("params", {}))
         return HttpResponse(200, {"job_id": int(job.id)})
@@ -67,6 +83,12 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 
 class SlurmAdapter(B.ResourceAdapter):
     image = "slurmpod"
+    # Slurm REST 21.08: no file staging (paper §5.2), but sbatch arrays and
+    # scancel-of-pending are native
+    capabilities = frozenset({
+        B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
+        B.Capability.QUEUE_LOAD, B.Capability.NATIVE_ARRAYS,
+    })
 
     def submit(self, script, properties, params) -> str:
         r = self.client.post("/slurm/v0.0.37/job/submit",
@@ -74,6 +96,21 @@ class SlurmAdapter(B.ResourceAdapter):
         if not r.ok:
             raise B.SubmitError(f"slurm submit: HTTP {r.status} {r.json}")
         return str(r.json["job_id"])
+
+    def submit_array(self, script, properties, params_by_index) -> list:
+        r = self.client.post("/slurm/v0.0.37/job/submit",
+                             {"script": script, "job": properties,
+                              "array_size": len(params_by_index),
+                              "params_by_index": params_by_index})
+        if not r.ok:
+            raise B.SubmitError(f"slurm array submit: HTTP {r.status} {r.json}")
+        return [str(t) for t in r.json["task_ids"]]
+
+    def resubmit_index(self, script, properties, params, index) -> str:
+        # keep the retried index indistinguishable from its original run
+        params = dict(params)
+        params.setdefault("SLURM_ARRAY_TASK_ID", str(index))
+        return self.submit(script, properties, params)
 
     def status(self, job_id: str) -> Dict[str, Any]:
         r = self.client.get(f"/slurm/v0.0.37/job/{job_id}")
@@ -90,8 +127,6 @@ class SlurmAdapter(B.ResourceAdapter):
 
     def cancel(self, job_id: str) -> None:
         self.client.delete(f"/slurm/v0.0.37/job/{job_id}")
-
-    # Slurm REST 21.08: no file staging (paper §5.2) — inherit False/None.
 
     def queue_load(self) -> Optional[Dict[str, int]]:
         r = self.client.get("/slurm/v0.0.37/partitions")

@@ -11,6 +11,7 @@ import dataclasses
 import tempfile
 from typing import Dict, Optional
 
+from repro.core.api import Bridge
 from repro.core.backends import base as B
 from repro.core.backends import jaxlocal as JX
 from repro.core.backends import lsf as LSFB
@@ -20,7 +21,8 @@ from repro.core.backends import slurm as SLB
 from repro.core.objectstore import ObjectStore
 from repro.core.operator import BridgeOperator, default_adapters
 from repro.core.registry import ResourceRegistry
-from repro.core.resource import BridgeJob, BridgeJobSpec, JobData, S3Storage
+from repro.core.resource import (ArraySpec, BridgeJob, BridgeJobSpec, JobData,
+                                 RetryPolicy, S3Storage)
 from repro.core.rest import FaultProfile, ResourceManagerDirectory
 from repro.core.secrets import SecretStore
 from repro.core.statestore import StateStore
@@ -90,6 +92,8 @@ class BridgeEnvironment:
         self.operator = BridgeOperator(
             self.registry, self.statestore, self.secrets, self.s3,
             self.directory, self.adapters, **(operator_kwargs or {}))
+        # the one client facade every consumer goes through
+        self.bridge = Bridge.from_env(self)
 
     # -- convenience -----------------------------------------------------------
 
@@ -113,8 +117,13 @@ class BridgeEnvironment:
                   jobparams: Optional[Dict[str, str]] = None,
                   additionaldata: str = "", updateinterval: float = 0.02,
                   uploadfiles: str = "", uploadbucket: str = "",
-                  kill: bool = False, unknown_after: int = 5) -> BridgeJobSpec:
-        """Spec targeting one of the five built-in backends."""
+                  kill: bool = False, unknown_after: int = 5,
+                  array: Optional[ArraySpec] = None,
+                  retry: Optional[RetryPolicy] = None,
+                  ttl_seconds_after_finished: Optional[float] = None,
+                  dependencies: Optional[list] = None) -> BridgeJobSpec:
+        """Spec targeting one of the five built-in backends.  The last four
+        kwargs are v1beta1 features; omitting them yields a v1alpha1 spec."""
         s3 = None
         if scriptlocation == "s3" or uploadfiles or additionaldata:
             s3 = S3Storage(s3secret="s3-secret", endpoint=self.s3.endpoint,
@@ -126,9 +135,14 @@ class BridgeEnvironment:
                             additionaldata=additionaldata,
                             jobparams=dict(jobparams or {})),
             jobproperties=dict(jobproperties or {}), s3storage=s3,
-            kill=kill, unknown_after=unknown_after)
+            kill=kill, unknown_after=unknown_after,
+            array=array, retry=retry,
+            ttl_seconds_after_finished=ttl_seconds_after_finished,
+            dependencies=list(dependencies or []))
 
     def submit(self, name: str, spec: BridgeJobSpec,
                namespace: str = "default") -> BridgeJob:
-        return self.registry.create(BridgeJob(name=name, spec=spec,
-                                              namespace=namespace))
+        """Create the CR through the facade; returns the stored CR (use
+        ``env.bridge.submit`` directly when you want the ``JobHandle``)."""
+        handle = self.bridge.submit(name, spec, namespace=namespace)
+        return handle.job()

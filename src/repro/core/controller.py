@@ -102,10 +102,7 @@ class ControllerPod:
             time.sleep(min(self.min_sleep, max(deadline - time.time(), 0)))
 
     def _adapter_for(self, image: str, client) -> B.ResourceAdapter:
-        base_image = image.split(":")[0]
-        if base_image not in self.adapters:
-            raise KeyError(f"no controller implementation for image {image!r}")
-        return self.adapters[base_image](client)
+        return B.resolve_adapter(self.adapters, image)(client)
 
     # -- paper Fig. 2: main --------------------------------------------------
 
@@ -131,32 +128,96 @@ class ControllerPod:
         client = self.directory.connect(url, token)
         adapter = self._adapter_for(image, client)
 
-        job_id = cm_data.get("id", "")
-        if not job_id:
-            job_id = self._submit(adapter, cm_data)
-            if not job_id:
+        # v1beta1 job arrays: the config map carries the fan-out count; a
+        # single v1alpha1 job is the count=1 degenerate case of the same path
+        count = max(int(cm_data.get("array_count", "1") or "1"), 1)
+        ids = [s for s in cm_data.get("id", "").split(",") if s]
+        if len(ids) < count:
+            ids = self._submit(adapter, cm_data, count, ids)
+            if not ids:
                 return  # FAILED already recorded; Fig. 2 klog.Exit path
         else:
             # paper: "Job has ID in ConfigMap. Handling state."
             pass
-        self._monitor(adapter, job_id, poll, cm_data)
+        self._monitor(adapter, ids, poll, cm_data)
 
-    def _submit(self, adapter: B.ResourceAdapter, cm_data: Dict[str, str]) -> str:
+    def _index_params(self, cm_data: Dict[str, str], index: int,
+                      count: int) -> Dict[str, str]:
+        """Per-index job params: base jobparams overlaid with the array's
+        indexed_params[i], plus the injected BRIDGE_ARRAY_INDEX."""
+        params = json.loads(cm_data.get("jobparams", "{}"))
+        indexed = json.loads(cm_data.get("indexed_params", "[]") or "[]")
+        if index < len(indexed):
+            params.update(indexed[index])
+        if count > 1:
+            params.setdefault("BRIDGE_ARRAY_INDEX", str(index))
+        return params
+
+    def _submit(self, adapter: B.ResourceAdapter, cm_data: Dict[str, str],
+                count: int = 1, ids: Optional[list] = None) -> list:
         self._checkpoint()
-        try:
-            script = self._fetch_script(cm_data)
-            self._stage_additional_data(adapter, cm_data)
-            properties = json.loads(cm_data.get("jobproperties", "{}"))
-            params = json.loads(cm_data.get("jobparams", "{}"))
-            job_id = adapter.submit(script, properties, params)
-        except (B.SubmitError, TransportError, NoSuchKey, KeyError, ValueError) as e:
-            self.cm.update({"jobStatus": FAILED,
-                            "message": f"Failed to submit a job to HPC resource: {e}"})
-            self._exit(1)
-            return ""
-        self.cm.update({"id": job_id, "jobStatus": SUBMITTED,
+        ids = list(ids or [])
+        retry_limit = int(cm_data.get("retry_limit", "0") or 0)
+        backoff = float(cm_data.get("retry_backoff", "0") or 0)
+        # persisted so a restarted pod never re-spends the submit budget
+        attempt = int(cm_data.get("submit_attempts", "0") or 0)
+        while True:
+            if self.cm.get("kill", "false") == "true":
+                self._abort_partial(adapter, ids)
+                self.cm.update({"jobStatus": KILLED,
+                                "message": "killed before submission"})
+                self._exit(1)
+                return []
+            try:
+                script = self._fetch_script(cm_data)
+                self._stage_additional_data(adapter, cm_data)
+                properties = json.loads(cm_data.get("jobproperties", "{}"))
+                if (count > 1 and not ids
+                        and adapter.supports(B.Capability.NATIVE_ARRAYS)):
+                    # native fan-out: one submission call, N remote indices
+                    ids = adapter.submit_array(
+                        script, properties,
+                        [self._index_params(cm_data, i, count)
+                         for i in range(count)])
+                    self.cm.update({"id": ",".join(ids)})
+                else:
+                    # facade-side fan-out: one submit per index, flushed
+                    # incrementally so a pod killed mid-fan-out resumes at
+                    # the next unsubmitted index instead of duplicating
+                    while len(ids) < count:
+                        self._checkpoint()
+                        jid = adapter.submit(
+                            script, properties,
+                            self._index_params(cm_data, len(ids), count))
+                        ids.append(jid)
+                        self.cm.update({"id": ",".join(ids)})
+                break
+            except (B.SubmitError, TransportError, NoSuchKey, KeyError,
+                    ValueError) as e:
+                attempt += 1
+                if attempt > retry_limit:
+                    # don't orphan indices already fanned out this CR
+                    self._abort_partial(adapter, ids)
+                    self.cm.update(
+                        {"jobStatus": FAILED,
+                         "message": f"Failed to submit a job to HPC resource: {e}"})
+                    self._exit(1)
+                    return []
+                self.cm.update({"submit_attempts": str(attempt)})
+                self._sleep(backoff or self.min_sleep)
+        self.cm.update({"id": ",".join(ids), "jobStatus": SUBMITTED,
                         "submit_time": str(time.time()), "message": ""})
-        return job_id
+        return ids
+
+    def _abort_partial(self, adapter: B.ResourceAdapter, ids: list) -> None:
+        """Best-effort cancel of indices submitted before an aborted fan-out."""
+        if not ids or not adapter.supports(B.Capability.CANCEL):
+            return
+        for jid in ids:
+            try:
+                adapter.cancel(jid)
+            except (TransportError, B.SubmitError):
+                pass
 
     def _fetch_script(self, cm_data: Dict[str, str]) -> str:
         loc = cm_data.get("scriptlocation", "inline")
@@ -172,29 +233,49 @@ class ControllerPod:
 
     def _stage_additional_data(self, adapter: B.ResourceAdapter,
                                cm_data: Dict[str, str]) -> None:
-        """Upload extra input files (s3 -> resource) where the API allows."""
+        """Upload extra input files (s3 -> resource) where the API allows.
+
+        The adapter's declared capabilities decide the path — no probing:
+        without ``Capability.UPLOAD`` (e.g. slurmrestd) the job script must
+        fetch from S3 itself, recorded for observability.
+        """
         refs = [r for r in cm_data.get("additionaldata", "").split(",") if r]
+        can_upload = adapter.supports(B.Capability.UPLOAD)
         for ref in refs:
             bucket, key = ObjectStore.parse_ref(ref)
-            data = self.s3.get(bucket, key)
             name = key.split("/")[-1]
-            if not adapter.upload(name, data):
-                # API without upload (e.g. slurmrestd): the job script must
-                # fetch from S3 itself; record for observability.
+            if not can_upload:
                 self.cm.update({"staging": f"unsupported:{name}"})
+                continue
+            if not adapter.upload(name, self.s3.get(bucket, key)):
+                self.cm.update({"staging": f"failed:{name}"})
 
     # -- paper Fig. 3: monitor ------------------------------------------------
 
-    def _monitor(self, adapter: B.ResourceAdapter, job_id: str, poll: float,
+    def _monitor(self, adapter: B.ResourceAdapter, ids: list, poll: float,
                  cm_data: Dict[str, str]) -> None:
+        """Poll every remote index, mirror aggregate + per-index state into
+        the config map, honour kill and the spec retry policy.
+
+        Aggregate semantics: DONE only when every index completed; any KILLED
+        propagates KILLED; a FAILED index is resubmitted while the retry
+        budget lasts and propagates FAILED once it is exhausted.
+        """
+        count = len(ids)
         unknown_after = int(cm_data.get("unknown_after", "5"))
+        retry_limit = int(cm_data.get("retry_limit", "0") or 0)
+        backoff = float(cm_data.get("retry_backoff", "0") or 0)
+        # per-index resubmission counts survive pod restarts via the cm
+        attempts: Dict[str, int] = {
+            k: int(v) for k, v in
+            json.loads(cm_data.get("retry_attempts", "{}") or "{}").items()}
         consecutive_failures = 0
-        kill_sent = False
+        kill_sent: set = set()
         while True:
             self._sleep(poll)
             cm_now = self.cm.data  # Fig. 3: "Get current config map"
             try:
-                info = adapter.status(job_id)
+                infos = [adapter.status(jid) for jid in ids]
                 consecutive_failures = 0
             except (TransportError, B.SubmitError) as e:
                 consecutive_failures += 1
@@ -204,34 +285,110 @@ class ControllerPod:
                                     "message": f"resource unreachable: {e}"})
                 continue
 
-            state = _CANON_TO_BRIDGE[info["state"]]
-            updates = {"jobStatus": state, "message": info.get("reason", "") or ""}
-            if info.get("start_time"):
-                updates["start_time"] = str(info["start_time"])
-            if info.get("end_time"):
-                updates["end_time"] = str(info["end_time"])
-            if info.get("results_location"):
-                updates["results_location"] = info["results_location"]
+            states = [_CANON_TO_BRIDGE[info["state"]] for info in infos]
+            kill_requested = cm_now.get("kill", "false") == "true"
+
+            # spec.retry: resubmit FAILED indices while budget remains
+            # (a kill supersedes retries — never resubmit a killed CR)
+            if retry_limit and not kill_requested:
+                for i, st in enumerate(states):
+                    used = attempts.get(str(i), 0)
+                    if st != FAILED or used >= retry_limit:
+                        continue
+                    attempts[str(i)] = used + 1
+                    if backoff:
+                        self._sleep(backoff)
+                    try:
+                        # arrays go through resubmit_index so native dialects
+                        # can restamp their index marker; single jobs resubmit
+                        # plainly
+                        resubmit = (adapter.resubmit_index if count > 1
+                                    else lambda s, p, q, _i: adapter.submit(s, p, q))
+                        new_id = resubmit(
+                            self._fetch_script(cm_now),
+                            json.loads(cm_now.get("jobproperties", "{}")),
+                            self._index_params(cm_now, i, count), i)
+                    except (B.SubmitError, TransportError, NoSuchKey,
+                            KeyError, ValueError):
+                        # budget consumed; surface FAILED when exhausted
+                        self.cm.update(
+                            {"retry_attempts": json.dumps(attempts)})
+                        continue
+                    ids[i] = new_id
+                    states[i] = SUBMITTED
+                    self.cm.update({"id": ",".join(ids),
+                                    "retry_attempts": json.dumps(attempts)})
+
+            def exhausted(i: int) -> bool:
+                # a kill cancels the remaining budget — FAILED is final then
+                return kill_requested or attempts.get(str(i), 0) >= retry_limit
+
+            finished = all(
+                st in (DONE, KILLED) or (st == FAILED and exhausted(i))
+                for i, st in enumerate(states))
+            if finished:
+                if all(st == DONE for st in states):
+                    agg = DONE
+                elif any(st == KILLED for st in states):
+                    agg = KILLED
+                else:
+                    agg = FAILED
+            elif any(st == RUNNING for st in states):
+                agg = RUNNING
+            else:
+                agg = SUBMITTED
+
+            updates = {"jobStatus": agg,
+                       "message": self._aggregate_message(states, infos)}
+            if count > 1:
+                updates["index_states"] = json.dumps(
+                    {str(i): st for i, st in enumerate(states)})
+            starts = [i.get("start_time") for i in infos if i.get("start_time")]
+            ends = [i.get("end_time") for i in infos if i.get("end_time")]
+            if starts:
+                updates["start_time"] = str(min(starts))
+            if ends and (count == 1 or finished):
+                updates["end_time"] = str(max(ends))
+            for i, info in enumerate(infos):
+                if info.get("results_location"):
+                    key = ("results_location" if count == 1
+                           else f"results_location_{i}")
+                    updates[key] = info["results_location"]
             self.cm.update(updates)
 
-            if cm_now.get("kill", "false") == "true" and not kill_sent:
-                try:
-                    adapter.cancel(job_id)
-                    kill_sent = True
-                except TransportError:
-                    pass  # retry next poll
+            if kill_requested and adapter.supports(B.Capability.CANCEL):
+                can_cancel_queued = adapter.supports(B.Capability.CANCEL_QUEUED)
+                for jid, st in zip(ids, states):
+                    if jid in kill_sent or st in (DONE, FAILED, KILLED):
+                        continue
+                    if st == SUBMITTED and not can_cancel_queued:
+                        continue  # dialect can't kill queued jobs; wait for RUNNING
+                    try:
+                        adapter.cancel(jid)
+                        kill_sent.add(jid)
+                    except TransportError:
+                        pass  # retry next poll
 
-            if state == DONE:
-                self._finalize_outputs(adapter, job_id, cm_now)
-                self._exit(0)
-                return
-            if state in (FAILED, KILLED):
-                self._exit(1)
+            if finished:
+                if agg == DONE:
+                    self._finalize_outputs(adapter, ids, cm_now)
+                    self._exit(0)
+                else:
+                    self._exit(1)
                 return
 
-    def _finalize_outputs(self, adapter: B.ResourceAdapter, job_id: str,
+    @staticmethod
+    def _aggregate_message(states: list, infos: list) -> str:
+        if len(states) == 1:
+            return infos[0].get("reason", "") or ""
+        parts = [f"[{i}] {info.get('reason', '')}"
+                 for i, info in enumerate(infos) if info.get("reason")]
+        return "; ".join(parts)
+
+    def _finalize_outputs(self, adapter: B.ResourceAdapter, ids: list,
                           cm_data: Dict[str, str]) -> None:
-        """Download outputs from the resource; upload to S3 if configured."""
+        """Download outputs from the resource; upload to S3 if configured.
+        Array indices land under ``<pod>/<index>/`` prefixes."""
         self._checkpoint()
         props = json.loads(cm_data.get("jobproperties", "{}"))
         bucket = cm_data.get("s3uploadbucket", "")
@@ -239,16 +396,22 @@ class ControllerPod:
         for key in ("OutputFileName", "ErrorFileName"):
             if props.get(key) and props[key] not in names:
                 names.append(props[key])
+        can_download = adapter.supports(B.Capability.DOWNLOAD)
+        can_logs = adapter.supports(B.Capability.LOGS)
+        if not names or not (can_download or can_logs):
+            return
         uploaded = []
-        for name in names:
-            data = adapter.download(name)
-            if data is None and hasattr(adapter, "download_logs"):
-                data = adapter.download_logs(job_id)  # ray idiom
-            if data is None:
-                continue
-            if bucket:
-                self.s3.put(bucket, f"{self.name}/{name}", data)
-                uploaded.append(f"{bucket}:{self.name}/{name}")
+        for idx, jid in enumerate(ids):
+            prefix = self.name if len(ids) == 1 else f"{self.name}/{idx}"
+            for name in names:
+                data = adapter.download(name) if can_download else None
+                if data is None and can_logs:
+                    data = adapter.download_logs(jid)  # ray idiom
+                if data is None:
+                    continue
+                if bucket:
+                    self.s3.put(bucket, f"{prefix}/{name}", data)
+                    uploaded.append(f"{bucket}:{prefix}/{name}")
         if uploaded:
             self.cm.update({"outputs": ",".join(uploaded)})
 

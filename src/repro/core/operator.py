@@ -31,8 +31,9 @@ from repro.core.backends import base as B
 from repro.core.controller import ControllerPod
 from repro.core.objectstore import ObjectStore
 from repro.core.registry import ResourceRegistry
-from repro.core.resource import (ALL_STATES, BridgeJob, PENDING, RUNNING,
-                                 SUBMITTED, TERMINAL_STATES, UNKNOWN)
+from repro.core.resource import (ALL_STATES, BridgeJob, DONE, FAILED, KILLED,
+                                 PENDING, RUNNING, SUBMITTED, TERMINAL_STATES,
+                                 UNKNOWN)
 from repro.core.rest import ResourceManagerDirectory
 from repro.core.secrets import SecretStore
 from repro.core.statestore import StateStore
@@ -72,6 +73,8 @@ class BridgeOperator:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.RLock()
+        # v1beta1 ttlSecondsAfterFinished: uid -> first-seen-terminal time
+        self._terminal_at: Dict[str, float] = {}
 
     # -- lifecycle --------------------------------------------------------
 
@@ -126,12 +129,47 @@ class BridgeOperator:
 
     def _ensure_started(self, job: BridgeJob) -> None:
         with self._lock:
-            if job.uid in self.pods or job.deleted:
+            if job.uid in self.pods or job.deleted or job.status.terminal():
+                return
+            if job.spec.kill:
+                # killed while no pod exists (e.g. dependency-gated): there is
+                # no config map to carry the signal, so settle the CR directly
+                self.registry.update_status(
+                    job.name, job.namespace, state=KILLED,
+                    message="killed before the controller pod was created")
+                return
+            if not self._dependencies_ready(job):
                 return
             cm = self.statestore.get_or_create(
                 self.cm_name(job), self._cm_payload(job))
             self.registry.update_status(job.name, job.namespace, state=PENDING)
             self._spawn_pod(job)
+
+    def _dependencies_ready(self, job: BridgeJob) -> bool:
+        """v1beta1 spec.dependencies: gate pod creation on sibling CRs.
+
+        The job waits (PENDING) until every dependency is DONE; a FAILED or
+        KILLED dependency fails the dependent without ever submitting it.
+        """
+        blocking = None
+        for dep in job.spec.dependencies:
+            d = self.registry.get(dep, job.namespace)
+            if d is not None and d.status.state == DONE:
+                continue
+            if d is not None and d.status.state in (FAILED, KILLED):
+                self.registry.update_status(
+                    job.name, job.namespace, state=FAILED,
+                    message=f"dependency {dep!r} ended {d.status.state}")
+                return False
+            blocking = (f"waiting for dependency {dep!r} "
+                        f"({d.status.state if d else 'absent'})")
+            break
+        if blocking is None:
+            return True
+        if (job.status.state, job.status.message) != (PENDING, blocking):
+            self.registry.update_status(job.name, job.namespace,
+                                        state=PENDING, message=blocking)
+        return False
 
     def _cm_payload(self, job: BridgeJob) -> Dict[str, str]:
         """Operator 'populates the configuration map with the parameters
@@ -158,6 +196,12 @@ class BridgeOperator:
             data["s3secret"] = s.s3storage.s3secret
             data["s3uploadfiles"] = s.s3storage.uploadfiles
             data["s3uploadbucket"] = s.s3storage.uploadbucket
+        if s.array and (s.array.count > 1 or s.array.indexed_params):
+            data["array_count"] = str(s.array.count)
+            data["indexed_params"] = json.dumps(s.array.indexed_params)
+        if s.retry and (s.retry.limit or s.retry.backoff_seconds):
+            data["retry_limit"] = str(s.retry.limit)
+            data["retry_backoff"] = str(s.retry.backoff_seconds)
         return data
 
     def _spawn_pod(self, job: BridgeJob) -> None:
@@ -179,10 +223,28 @@ class BridgeOperator:
             pod = self.pods.get(job.uid)
             if pod is None:
                 self._ensure_started(job)
+                self._maybe_ttl_gc(job)
                 continue
             self._mirror_status(job)
             if not pod.alive():
                 self._handle_pod_exit(job, pod)
+            self._maybe_ttl_gc(job)
+
+    def _maybe_ttl_gc(self, job: BridgeJob) -> None:
+        """v1beta1 ttlSecondsAfterFinished: auto-delete terminal CRs."""
+        ttl = job.spec.ttl_seconds_after_finished
+        if ttl is None or not job.status.terminal():
+            return
+        first_seen = self._terminal_at.setdefault(job.uid, time.time())
+        if time.time() - first_seen < ttl:
+            return
+        # hold the GC while a live sibling still depends on this CR — deleting
+        # it would leave the dependent waiting on an absent job forever
+        for other in self.registry.list(job.namespace):
+            if (not other.deleted and not other.status.terminal()
+                    and job.name in other.spec.dependencies):
+                return
+        self.registry.delete(job.name, job.namespace)
 
     def _mirror_status(self, job: BridgeJob) -> None:
         try:
@@ -198,11 +260,9 @@ class BridgeOperator:
             fields["start_time"] = float(data["start_time"])
         if data.get("end_time"):
             fields["end_time"] = float(data["end_time"])
-        if (job.status.state, job.status.message, job.status.job_id,
-                job.status.start_time, job.status.end_time) != (
-                fields["state"], fields["message"], fields["job_id"],
-                fields.get("start_time", job.status.start_time),
-                fields.get("end_time", job.status.end_time)):
+        if data.get("index_states"):
+            fields["index_states"] = json.loads(data["index_states"])
+        if any(getattr(job.status, k) != v for k, v in fields.items()):
             self.registry.update_status(job.name, job.namespace, **fields)
 
     def _handle_pod_exit(self, job: BridgeJob, pod: ControllerPod) -> None:
@@ -228,6 +288,7 @@ class BridgeOperator:
         """CR deletion cleans up all associated resources (paper §5.1)."""
         with self._lock:
             pod = self.pods.pop(job.uid, None)
+            self._terminal_at.pop(job.uid, None)
         if pod is not None:
             pod.kill_pod()
         self.statestore.delete(self.cm_name(job))

@@ -1,9 +1,9 @@
-"""BridgeJob — the paper's Custom Resource (CRD analogue).
+"""BridgeJob — the paper's Custom Resource (CRD analogue), in two API versions.
 
-Mirrors the ``BridgeJob`` yaml of paper Fig. 1:
+``v1alpha1`` mirrors the ``BridgeJob`` yaml of paper Fig. 1:
 
     kind: BridgeJob
-    apiVersion: bridgeoperator.ibm.com/v1alpha1
+    apiVersion: bridgeoperator.repro/v1alpha1
     metadata: {name: slurmjob-test}
     spec:
       resourceURL: http://my-slurm-cluster@hpc.com
@@ -15,18 +15,39 @@ Mirrors the ``BridgeJob`` yaml of paper Fig. 1:
       jobproperties: {...}
       s3storage: {s3secret: ..., endpoint: ..., secure: ...}
 
+``v1beta1`` is a strict superset adding:
+
+    spec:
+      array: {count: 4, indexed_params: [{...}, ...]}   # one CR -> N remote jobs
+      retry: {limit: 2, backoff_seconds: 0.0}           # per-index resubmission
+      ttlSecondsAfterFinished: 30                       # auto-GC the CR
+      dependencies: [other-job, ...]                    # gate on sibling CRs
+
+``convert()`` is the conversion-webhook analogue: it moves a full CR dict
+between versions.  Every v1alpha1 document upgrades losslessly; downgrading a
+v1beta1 document that uses beta-only features raises ``ConversionError``.
+
 The spec is declarative; the operator reconciles it.  Status carries the
-paper's terminal states DONE/KILLED/FAILED/UNKNOWN plus start/end times.
+paper's terminal states DONE/KILLED/FAILED/UNKNOWN plus start/end times and,
+for job arrays, the per-index state map.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-API_VERSION = "bridgeoperator.repro/v1alpha1"
+API_V1ALPHA1 = "bridgeoperator.repro/v1alpha1"
+API_V1BETA1 = "bridgeoperator.repro/v1beta1"
+API_VERSIONS = (API_V1ALPHA1, API_V1BETA1)
+API_VERSION = API_V1ALPHA1  # seed-era alias; v1alpha1 remains fully served
 KIND = "BridgeJob"
+
+# spec keys that exist only in v1beta1 (the conversion layer gates on these)
+BETA_ONLY_SPEC_KEYS = ("array", "retry", "ttlSecondsAfterFinished",
+                       "dependencies")
 
 # Lifecycle states (paper §5.1 + DESIGN.md §8).
 PENDING = "PENDING"
@@ -45,6 +66,10 @@ SCRIPT_LOCATIONS = ("inline", "s3", "remote")
 
 class ValidationError(ValueError):
     pass
+
+
+class ConversionError(ValidationError):
+    """A document cannot be represented in the requested API version."""
 
 
 @dataclass(frozen=True)
@@ -68,6 +93,38 @@ class S3Storage:
 
 
 @dataclass(frozen=True)
+class ArraySpec:
+    """spec.array (v1beta1) — one CR fans out ``count`` remote jobs.
+
+    ``indexed_params[i]`` overlays ``jobdata.jobparams`` for index ``i``; the
+    controller additionally injects ``BRIDGE_ARRAY_INDEX`` per index.
+    """
+    count: int = 1
+    indexed_params: List[Dict[str, str]] = field(default_factory=list)
+
+    def validate(self) -> None:
+        if self.count < 1:
+            raise ValidationError("spec.array.count must be >= 1")
+        if self.indexed_params and len(self.indexed_params) != self.count:
+            raise ValidationError(
+                f"spec.array.indexed_params has {len(self.indexed_params)} "
+                f"entries for count={self.count}")
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """spec.retry (v1beta1) — per-index resubmission on FAILED."""
+    limit: int = 0               # extra submissions allowed after a failure
+    backoff_seconds: float = 0.0
+
+    def validate(self) -> None:
+        if self.limit < 0:
+            raise ValidationError("spec.retry.limit must be >= 0")
+        if self.backoff_seconds < 0:
+            raise ValidationError("spec.retry.backoff_seconds must be >= 0")
+
+
+@dataclass(frozen=True)
 class BridgeJobSpec:
     resourceURL: str
     image: str                     # controller-pod image == backend kind ("slurmpod:0.1")
@@ -81,6 +138,20 @@ class BridgeJobSpec:
     kill: bool = False
     # UNKNOWN after this many consecutive unreachable polls (DESIGN.md §8)
     unknown_after: int = 5
+    # -- v1beta1 additions (all default to "absent" == v1alpha1 semantics) --
+    array: Optional[ArraySpec] = None
+    retry: Optional[RetryPolicy] = None
+    ttl_seconds_after_finished: Optional[float] = None
+    dependencies: List[str] = field(default_factory=list)
+
+    def uses_beta_features(self) -> bool:
+        """True iff this spec cannot be expressed in v1alpha1."""
+        return bool((self.array and (self.array.count > 1
+                                     or self.array.indexed_params))
+                    or (self.retry and (self.retry.limit
+                                        or self.retry.backoff_seconds))
+                    or self.ttl_seconds_after_finished is not None
+                    or self.dependencies)
 
     def validate(self) -> None:
         if not self.resourceURL:
@@ -102,16 +173,29 @@ class BridgeJobSpec:
                 raise ValidationError("s3 jobscript must be 'bucket:key'")
         if self.s3storage and self.s3storage.uploadfiles and not self.s3storage.uploadbucket:
             raise ValidationError("s3storage.uploadfiles requires uploadbucket")
+        if self.array is not None:
+            self.array.validate()
+        if self.retry is not None:
+            self.retry.validate()
+        if (self.ttl_seconds_after_finished is not None
+                and self.ttl_seconds_after_finished < 0):
+            raise ValidationError("spec.ttlSecondsAfterFinished must be >= 0")
+        for dep in self.dependencies:
+            if not dep or not isinstance(dep, str):
+                raise ValidationError(
+                    f"spec.dependencies entries must be job names, got {dep!r}")
 
 
 @dataclass
 class BridgeJobStatus:
     state: str = PENDING
     message: str = ""
-    job_id: str = ""               # remote job id (mirrored from the config map)
+    job_id: str = ""               # remote job id(s) (mirrored from the config map)
     start_time: Optional[float] = None
     end_time: Optional[float] = None
     restarts: int = 0              # controller-pod restarts performed by the operator
+    # v1beta1 job arrays: per-index bridge state ("0" -> DONE, ...)
+    index_states: Dict[str, str] = field(default_factory=dict)
 
     def terminal(self) -> bool:
         return self.state in TERMINAL_STATES
@@ -134,12 +218,17 @@ class BridgeJob:
 
     # -- dict round-trip (yaml-equivalent; json keeps the container offline) --
 
-    def to_dict(self) -> Dict[str, Any]:
+    def to_dict(self, version: Optional[str] = None) -> Dict[str, Any]:
+        """Serialize at ``version``.  Default: v1alpha1 when the spec uses no
+        beta features (seed behaviour), else v1beta1."""
+        if version is None:
+            version = (API_V1BETA1 if self.spec.uses_beta_features()
+                       else API_V1ALPHA1)
         d = {
-            "apiVersion": API_VERSION,
+            "apiVersion": version,
             "kind": KIND,
             "metadata": {"name": self.name, "namespace": self.namespace},
-            "spec": _spec_to_dict(self.spec),
+            "spec": _spec_to_dict(self.spec, version),
             "status": dataclasses.asdict(self.status),
         }
         return d
@@ -148,6 +237,7 @@ class BridgeJob:
     def from_dict(d: Dict[str, Any]) -> "BridgeJob":
         if d.get("kind", KIND) != KIND:
             raise ValidationError(f"kind {d.get('kind')!r} != {KIND}")
+        d = convert(d, API_V1BETA1)  # hub version: parse everything as beta
         meta = d.get("metadata", {})
         spec = spec_from_dict(d.get("spec", {}))
         job = BridgeJob(name=meta.get("name", ""), spec=spec,
@@ -158,7 +248,13 @@ class BridgeJob:
         return job
 
 
-def _spec_to_dict(s: BridgeJobSpec) -> Dict[str, Any]:
+def _spec_to_dict(s: BridgeJobSpec, version: str = API_V1BETA1) -> Dict[str, Any]:
+    if version not in API_VERSIONS:
+        raise ConversionError(f"unknown apiVersion {version!r}")
+    if version == API_V1ALPHA1 and s.uses_beta_features():
+        raise ConversionError(
+            "spec uses v1beta1 features (array/retry/ttl/dependencies) and "
+            "cannot be serialized as v1alpha1")
     d: Dict[str, Any] = {
         "resourceURL": s.resourceURL,
         "image": s.image,
@@ -172,12 +268,26 @@ def _spec_to_dict(s: BridgeJobSpec) -> Dict[str, Any]:
     }
     if s.s3storage is not None:
         d["s3storage"] = dataclasses.asdict(s.s3storage)
+    if version == API_V1BETA1:
+        # beta keys are emitted only when non-default, so a round-trip through
+        # v1beta1 reproduces a v1alpha1 document bit-for-bit
+        if s.array and (s.array.count > 1 or s.array.indexed_params):
+            d["array"] = dataclasses.asdict(s.array)
+        if s.retry and (s.retry.limit or s.retry.backoff_seconds):
+            d["retry"] = dataclasses.asdict(s.retry)
+        if s.ttl_seconds_after_finished is not None:
+            d["ttlSecondsAfterFinished"] = s.ttl_seconds_after_finished
+        if s.dependencies:
+            d["dependencies"] = list(s.dependencies)
     return d
 
 
 def spec_from_dict(d: Dict[str, Any]) -> BridgeJobSpec:
     jd = d.get("jobdata", {})
     s3 = d.get("s3storage")
+    arr = d.get("array")
+    retry = d.get("retry")
+    ttl = d.get("ttlSecondsAfterFinished")
     spec = BridgeJobSpec(
         resourceURL=d.get("resourceURL", ""),
         image=d.get("image", ""),
@@ -201,10 +311,74 @@ def spec_from_dict(d: Dict[str, Any]) -> BridgeJobSpec:
         ),
         kill=bool(d.get("kill", False)),
         unknown_after=int(d.get("unknown_after", 5)),
+        array=None if arr is None else ArraySpec(
+            count=int(arr.get("count", 1)),
+            indexed_params=[dict(p) for p in arr.get("indexed_params", [])],
+        ),
+        retry=None if retry is None else RetryPolicy(
+            limit=int(retry.get("limit", 0)),
+            backoff_seconds=float(retry.get("backoff_seconds", 0.0)),
+        ),
+        ttl_seconds_after_finished=None if ttl is None else float(ttl),
+        dependencies=list(d.get("dependencies", [])),
     )
     return spec
 
 
+# ---------------------------------------------------------------------------
+# Conversion layer (the conversion-webhook analogue)
+# ---------------------------------------------------------------------------
+
+
+def convert(doc: Dict[str, Any], to_version: str) -> Dict[str, Any]:
+    """Convert a full CR document between API versions.
+
+    v1alpha1 -> v1beta1 is always lossless (the beta schema is a superset and
+    beta defaults are exactly the alpha semantics).  v1beta1 -> v1alpha1
+    raises ``ConversionError`` when the document uses beta-only features.
+    The input is never mutated.
+    """
+    frm = doc.get("apiVersion", API_V1ALPHA1)
+    if frm not in API_VERSIONS:
+        raise ConversionError(f"unknown apiVersion {frm!r}")
+    if to_version not in API_VERSIONS:
+        raise ConversionError(f"unknown target apiVersion {to_version!r}")
+    out = copy.deepcopy(doc)
+    spec = out.get("spec", {})
+    if frm == API_V1ALPHA1:
+        stray = [k for k in BETA_ONLY_SPEC_KEYS if k in spec]
+        if stray:
+            raise ValidationError(
+                f"v1alpha1 spec carries v1beta1-only fields {stray}")
+    if to_version == API_V1ALPHA1 and frm == API_V1BETA1:
+        lossy = [k for k in BETA_ONLY_SPEC_KEYS
+                 if not _beta_key_is_default(spec, k)]
+        if lossy:
+            raise ConversionError(
+                f"cannot downgrade to v1alpha1: spec fields {lossy} have no "
+                f"v1alpha1 representation")
+        for k in BETA_ONLY_SPEC_KEYS:
+            spec.pop(k, None)
+    out["apiVersion"] = to_version
+    return out
+
+
+def _beta_key_is_default(spec: Dict[str, Any], key: str) -> bool:
+    if key not in spec:
+        return True
+    v = spec[key]
+    if key == "array":
+        return not v or (int(v.get("count", 1)) <= 1
+                         and not v.get("indexed_params"))
+    if key == "retry":
+        return not v or (not v.get("limit") and not v.get("backoff_seconds"))
+    if key == "ttlSecondsAfterFinished":
+        return v is None
+    if key == "dependencies":
+        return not v
+    return False
+
+
 def load_bridgejob(text: str) -> BridgeJob:
-    """Parse a BridgeJob from its JSON serialization (yaml stand-in)."""
+    """Parse a BridgeJob (either API version) from its JSON serialization."""
     return BridgeJob.from_dict(json.loads(text))

@@ -9,19 +9,21 @@ manager's queue via the SAME HTTP surface the bridge uses, scores load, and
 picks a target.  Also provides speculative (straggler-mitigation) execution:
 launch the same payload on the two least-loaded resources, keep the first
 finisher, kill the other.
+
+The scheduler is a pure ``Bridge`` client: it asks the facade for adapter
+capabilities (only ``QUEUE_LOAD``-capable targets are schedulable) and
+submits/cancels through it — no hand-wired directory/secrets/adapters.
 """
 from __future__ import annotations
 
 import dataclasses
-import threading
 import time
-from typing import Dict, List, Mapping, Optional, Tuple, Type
+from typing import List, Optional, Tuple
 
-from repro.core.backends import base as B
-from repro.core.registry import ResourceRegistry
-from repro.core.resource import BridgeJob, BridgeJobSpec, DONE, KILLED
-from repro.core.rest import ResourceManagerDirectory, TransportError
-from repro.core.secrets import SecretStore
+from repro.core.api import Bridge, JobHandle
+from repro.core.backends.base import Capability
+from repro.core.resource import BridgeJob, BridgeJobSpec, DONE
+from repro.core.rest import TransportError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,20 +35,18 @@ class Candidate:
 
 
 class LoadAwareScheduler:
-    def __init__(self, directory: ResourceManagerDirectory, secrets: SecretStore,
-                 adapters: Mapping[str, Type[B.ResourceAdapter]],
-                 candidates: List[Candidate]):
-        self.directory = directory
-        self.secrets = secrets
-        self.adapters = dict(adapters)
+    def __init__(self, bridge: Bridge, candidates: List[Candidate]):
+        self.bridge = bridge
         self.candidates = list(candidates)
 
     def load_of(self, cand: Candidate) -> Optional[float]:
-        """Normalized load: (queued + running) / slots.  None if unreachable."""
+        """Normalized load: (queued + running) / slots.  None if the backend
+        does not advertise QUEUE_LOAD or is unreachable."""
         try:
-            token = self.secrets.mount(cand.resourcesecret).get("token", "")
-            client = self.directory.connect(cand.resourceURL, token)
-            adapter = self.adapters[cand.image.split(":")[0]](client)
+            if Capability.QUEUE_LOAD not in self.bridge.capabilities(cand.image):
+                return None
+            adapter = self.bridge.connect_adapter(
+                cand.resourceURL, cand.image, cand.resourcesecret)
             q = adapter.queue_load()
         except (TransportError, KeyError):
             return None
@@ -76,9 +76,14 @@ class LoadAwareScheduler:
                                    image=best.image,
                                    resourcesecret=best.resourcesecret)
 
+    def submit_placed(self, name: str, spec: BridgeJobSpec,
+                      namespace: str = "default") -> JobHandle:
+        """Place + submit in one step through the facade."""
+        return self.bridge.submit(name, self.place(spec), namespace=namespace)
+
     # -- speculative execution (straggler mitigation) ------------------------
 
-    def submit_speculative(self, operator, base_name: str, spec: BridgeJobSpec,
+    def submit_speculative(self, base_name: str, spec: BridgeJobSpec,
                            n: int = 2, namespace: str = "default",
                            timeout: float = 60.0) -> BridgeJob:
         """Run the payload on the ``n`` least-loaded resources; return the
@@ -86,34 +91,32 @@ class LoadAwareScheduler:
         ranked = self.rank()
         if not ranked:
             raise RuntimeError("no reachable candidate resource")
-        names = []
+        handles: List[JobHandle] = []
         for i, (_, cand) in enumerate(ranked[:n]):
             s = dataclasses.replace(spec, resourceURL=cand.resourceURL,
                                     image=cand.image,
                                     resourcesecret=cand.resourcesecret)
-            name = f"{base_name}-spec{i}"
-            operator.registry.create(BridgeJob(name=name, spec=s,
-                                               namespace=namespace))
-            names.append(name)
+            handles.append(self.bridge.submit(f"{base_name}-spec{i}", s,
+                                              namespace=namespace))
         deadline = time.time() + timeout
         winner: Optional[BridgeJob] = None
         while time.time() < deadline and winner is None:
-            done = [operator.registry.get(n_, namespace) for n_ in names]
-            for job in done:
+            jobs = [h.job() for h in handles]
+            for job in jobs:
                 if job and job.status.state == DONE:
                     winner = job
                     break
             if all(j and j.status.terminal() and j.status.state != DONE
-                   for j in done):
+                   for j in jobs):
                 raise RuntimeError(
                     f"all speculative replicas failed: "
-                    f"{[(j.name, j.status.state) for j in done]}")
+                    f"{[(j.name, j.status.state) for j in jobs]}")
             time.sleep(0.01)
         if winner is None:
             raise TimeoutError("speculative execution timed out")
-        for n_ in names:  # kill the stragglers
-            if n_ != winner.name:
-                job = operator.registry.get(n_, namespace)
+        for h in handles:  # kill the stragglers
+            if h.name != winner.name:
+                job = h.job()
                 if job and not job.status.terminal():
-                    operator.kill(n_, namespace)
+                    h.cancel()
         return winner

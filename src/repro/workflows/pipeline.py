@@ -23,8 +23,6 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.controller import ControllerPod
-from repro.core.operator import default_adapters
-from repro.core.resource import DONE, FAILED, KILLED
 
 
 class PipelineError(RuntimeError):
@@ -116,15 +114,18 @@ class Pipeline:
 # ---------------------------------------------------------------------------
 
 
-def bridge_pipeline(env, jobname: str, *, resourceURL: str, resourcesecret: str,
+def bridge_pipeline(bridge, jobname: str, *, resourceURL: str, resourcesecret: str,
                     script: str, scriptlocation: str, docker: str,
                     additionaldata: str = "", jobproperties: Optional[Dict] = None,
                     jobparams: Optional[Dict] = None, s3uploadfiles: str = "",
                     s3uploadbucket: str = "", updateinterval: float = 0.02,
                     namespace: str = "default", pod_retries: int = 2) -> Pipeline:
-    """Build the createop -> invokeop -> cleanop pipeline against a
-    ``BridgeEnvironment`` (same parameter list as the paper's
-    ``bridgepipeline`` python function, modulo s3 endpoint bundling)."""
+    """Build the createop -> invokeop -> cleanop pipeline against a ``Bridge``
+    facade (same parameter list as the paper's ``bridgepipeline`` python
+    function, modulo s3 endpoint bundling).  A ``BridgeEnvironment`` is also
+    accepted; its facade is used."""
+    env = bridge
+    bridge = getattr(env, "bridge", env)  # BridgeEnvironment -> its facade
     pipe = Pipeline(f"bridge-{jobname}")
     cm_name = f"{namespace}/{jobname}-bridge-cm"
 
@@ -141,15 +142,16 @@ def bridge_pipeline(env, jobname: str, *, resourceURL: str, resourcesecret: str,
             "kill": "false", "message": "",
             "s3uploadfiles": s3uploadfiles, "s3uploadbucket": s3uploadbucket,
         }
-        env.statestore.get_or_create(cm_name, data)
+        bridge.statestore.get_or_create(cm_name, data)
         return cm_name
 
     def invokeop(ctx):
-        cm = env.statestore.get(cm_name)
+        cm = bridge.statestore.get(cm_name)
         pod = ControllerPod(
             name=f"{namespace}/{jobname}-pod", configmap=cm,
-            secrets=env.secrets, objectstore=env.s3, directory=env.directory,
-            adapters=env.adapters, min_sleep=0.002)
+            secrets=bridge.secrets, objectstore=bridge.s3,
+            directory=bridge.directory, adapters=bridge.adapters,
+            min_sleep=0.002)
         pod.start()
         pod.join(timeout=60)
         status = cm.data.get("jobStatus", "")
@@ -160,7 +162,7 @@ def bridge_pipeline(env, jobname: str, *, resourceURL: str, resourcesecret: str,
                 "outputs": cm.data.get("outputs", "")}
 
     def cleanop(ctx):
-        env.statestore.delete(cm_name)
+        bridge.statestore.delete(cm_name)
         return "cleaned"
 
     create = pipe.add(PipelineOp("createop", createop))

@@ -1,0 +1,504 @@
+"""The v1beta1 API redesign: versioned CRD + conversion, typed adapter
+capabilities, job arrays, retry/TTL/dependencies, and the ``Bridge`` facade.
+"""
+import json
+import time
+
+import pytest
+
+from repro.core import (API_V1ALPHA1, API_V1BETA1, ArraySpec, Bridge,
+                        BridgeEnvironment, BridgeJob, Capability,
+                        ConversionError, DONE, FAILED, KILLED, PENDING,
+                        RetryPolicy, ValidationError, convert,
+                        resolve_adapter)
+
+
+@pytest.fixture(scope="module")
+def env():
+    with BridgeEnvironment(default_duration=0.05) as e:
+        yield e
+
+
+@pytest.fixture()
+def fresh_env():
+    with BridgeEnvironment(default_duration=0.05) as e:
+        yield e
+
+
+# ---------------------------------------------------------------------------
+# conversion layer
+# ---------------------------------------------------------------------------
+
+
+def _alpha_docs(env):
+    """v1alpha1 documents covering every spec shape the seed tests/examples
+    use: plain, s3 script, staging + upload, params, kill, unknown_after."""
+    specs = [
+        env.make_spec("slurm", script="run"),
+        env.make_spec("slurm", script="b:k.sh", scriptlocation="s3"),
+        env.make_spec("lsf", script="analyse", additionaldata="inputs:d.csv",
+                      jobproperties={"OutputFileName": "o.txt"},
+                      uploadfiles="o.txt", uploadbucket="outputs"),
+        env.make_spec("quantum", script="OPENQASM 3;",
+                      jobproperties={"shots": "2048"}),
+        env.make_spec("ray", script="python t.py",
+                      jobparams={"k": "v"}, unknown_after=7),
+        env.make_spec("jaxlocal", script="{}", kill=True),
+    ]
+    return [BridgeJob(name=f"cr-{i}", spec=s).to_dict(API_V1ALPHA1)
+            for i, s in enumerate(specs)]
+
+
+def test_v1alpha1_roundtrip_bit_for_bit(env):
+    for doc in _alpha_docs(env):
+        up = convert(doc, API_V1BETA1)
+        assert up["apiVersion"] == API_V1BETA1
+        down = convert(up, API_V1ALPHA1)
+        assert json.dumps(down, sort_keys=True) == json.dumps(doc, sort_keys=True)
+        # both versions parse to the same internal object
+        assert BridgeJob.from_dict(up).spec == BridgeJob.from_dict(doc).spec
+
+
+def test_lossy_downgrade_rejected(env):
+    spec = env.make_spec("slurm", script="x",
+                         array=ArraySpec(count=3), retry=RetryPolicy(limit=2))
+    doc = BridgeJob(name="arr", spec=spec).to_dict()
+    assert doc["apiVersion"] == API_V1BETA1
+    with pytest.raises(ConversionError, match="cannot downgrade"):
+        convert(doc, API_V1ALPHA1)
+    with pytest.raises(ConversionError):
+        BridgeJob(name="arr", spec=spec).to_dict(API_V1ALPHA1)
+
+
+def test_alpha_doc_with_beta_fields_rejected(env):
+    doc = BridgeJob(name="j", spec=env.make_spec("slurm", script="x")).to_dict()
+    doc["spec"]["array"] = {"count": 4}
+    with pytest.raises(ValidationError, match="v1beta1-only"):
+        BridgeJob.from_dict(doc)
+
+
+def test_array_spec_validation(env):
+    with pytest.raises(ValidationError, match="count"):
+        env.make_spec("slurm", script="x", array=ArraySpec(count=0)).validate()
+    with pytest.raises(ValidationError, match="indexed_params"):
+        env.make_spec("slurm", script="x", array=ArraySpec(
+            count=3, indexed_params=[{}])).validate()
+
+
+# ---------------------------------------------------------------------------
+# typed capabilities
+# ---------------------------------------------------------------------------
+
+
+def test_capability_matrix(env):
+    caps = {kind: env.bridge.capabilities(image)
+            for kind, image in (("slurm", "slurmpod:0.1"),
+                                ("lsf", "lsfpod:0.1"),
+                                ("quantum", "quantumpod:0.1"),
+                                ("ray", "raypod:0.1"),
+                                ("jaxlocal", "jaxpod:0.1"))}
+    # slurmrestd 21.08: arrays yes, file staging no (paper §5.2)
+    assert Capability.NATIVE_ARRAYS in caps["slurm"]
+    assert Capability.UPLOAD not in caps["slurm"]
+    # LSF Application Center: staging yes, native arrays no
+    assert {Capability.UPLOAD, Capability.DOWNLOAD} <= caps["lsf"]
+    assert Capability.NATIVE_ARRAYS not in caps["lsf"]
+    # ray: logs, not arbitrary files
+    assert Capability.LOGS in caps["ray"]
+    assert Capability.DOWNLOAD not in caps["ray"]
+    # quantum results land in object storage, no file verbs at all
+    assert not {Capability.UPLOAD, Capability.DOWNLOAD} & caps["quantum"]
+    # jaxlocal speaks the slurm dialect
+    assert caps["jaxlocal"] == caps["slurm"]
+    for c in caps.values():
+        assert {Capability.CANCEL, Capability.CANCEL_QUEUED,
+                Capability.QUEUE_LOAD} <= c
+
+
+def test_adapter_lookup_uniform_error(env):
+    with pytest.raises(KeyError, match="no controller implementation"):
+        resolve_adapter(env.adapters, "nosuchpod:9.9")
+    with pytest.raises(KeyError, match="no controller implementation"):
+        env.bridge.capabilities("nosuchpod:9.9")
+
+
+# ---------------------------------------------------------------------------
+# job arrays: one CR -> N remote jobs, on two different backends
+# ---------------------------------------------------------------------------
+
+
+def test_job_array_native_slurm(env):
+    """slurm declares NATIVE_ARRAYS: ONE submission call fans out 4 tasks."""
+    spec = env.make_spec(
+        "slurm", script="member", updateinterval=0.02,
+        array=ArraySpec(count=4,
+                        indexed_params=[{"IDX": str(i)} for i in range(4)]))
+    handle = env.bridge.submit("arr-slurm", spec)
+    job = handle.wait(timeout=30)
+    assert job.status.state == DONE
+    assert job.status.index_states == {str(i): DONE for i in range(4)}
+    ids = job.status.job_id.split(",")
+    assert len(ids) == 4
+    members = [env.clusters["slurm"].jobs[i] for i in ids]
+    assert sorted(m.params["IDX"] for m in members) == ["0", "1", "2", "3"]
+    # the slurm dialect stamped its native array marker on every task
+    assert all("SLURM_ARRAY_TASK_ID" in m.params for m in members)
+
+
+def test_job_array_facade_fanout_lsf(env):
+    """lsf has no native arrays: the controller fans out via N submits."""
+    spec = env.make_spec(
+        "lsf", script="member", updateinterval=0.02,
+        array=ArraySpec(count=4,
+                        indexed_params=[{"IDX": str(i)} for i in range(4)]))
+    handle = env.bridge.submit("arr-lsf", spec)
+    job = handle.wait(timeout=30)
+    assert job.status.state == DONE
+    assert job.status.index_states == {str(i): DONE for i in range(4)}
+    ids = job.status.job_id.split(",")
+    assert len(ids) == 4
+    members = [env.clusters["lsf"].jobs[i] for i in ids]
+    assert sorted(m.params["IDX"] for m in members) == ["0", "1", "2", "3"]
+    # facade-side fan-out injects the bridge's own index marker
+    assert all("BRIDGE_ARRAY_INDEX" in m.params for m in members)
+
+
+def test_array_failed_index_fails_aggregate(env):
+    """DONE only when ALL indices complete; one failure -> FAILED, and the
+    per-index map shows exactly which index died."""
+    spec = env.make_spec(
+        "slurm", script="member", updateinterval=0.02,
+        array=ArraySpec(count=3,
+                        indexed_params=[{}, {"FailMe": "true"}, {}]))
+    job = env.bridge.submit("arr-fail", spec).wait(timeout=30)
+    assert job.status.state == FAILED
+    assert job.status.index_states["1"] == FAILED
+    assert job.status.index_states["0"] == DONE
+    assert job.status.index_states["2"] == DONE
+    assert "[1]" in job.status.message
+
+
+def test_array_kill_cancels_every_index(env):
+    spec = env.make_spec(
+        "lsf", script="sleepy", updateinterval=0.02,
+        jobproperties={"WallSeconds": "10"}, array=ArraySpec(count=2))
+    handle = env.bridge.submit("arr-kill", spec)
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        if len(handle.status().job_id.split(",")) == 2:
+            break
+        time.sleep(0.01)
+    handle.cancel()
+    job = handle.wait(timeout=30)
+    assert job.status.state == KILLED
+    assert set(job.status.index_states.values()) == {KILLED}
+
+
+# ---------------------------------------------------------------------------
+# retry / dependencies / TTL policies
+# ---------------------------------------------------------------------------
+
+
+def test_retry_resubmits_failed_index(env):
+    """A persistently failing job is resubmitted ``limit`` times, then the
+    FAILED state propagates; every attempt is a distinct remote job."""
+    spec = env.make_spec("slurm", script="will-fail", updateinterval=0.02,
+                         jobparams={"FailMe": "true"},
+                         retry=RetryPolicy(limit=1))
+    job = env.bridge.submit("retryjob", spec).wait(timeout=30)
+    assert job.status.state == FAILED
+    cm = env.statestore.get("default/retryjob-bridge-cm")
+    assert json.loads(cm.get("retry_attempts")) == {"0": 1}
+    attempts = [j for j in env.clusters["slurm"].jobs.values()
+                if j.script == "will-fail"]
+    assert len(attempts) == 2  # original + one resubmission
+
+
+def test_retry_recovers_from_transient_submit_failure(env):
+    """Submission retry: the script appears in S3 between attempts."""
+    spec = env.make_spec("slurm", script="late:script.sh", scriptlocation="s3",
+                         updateinterval=0.02,
+                         retry=RetryPolicy(limit=20, backoff_seconds=0.05))
+    handle = env.bridge.submit("latescript", spec)
+    time.sleep(0.15)
+    env.s3.put("late", "script.sh", b"#!/bin/bash\ntrue\n")
+    job = handle.wait(timeout=30)
+    assert job.status.state == DONE
+
+
+def test_count1_array_params_not_dropped(env):
+    """A degenerate count=1 array with indexed_params is still a beta spec:
+    serialized as v1beta1 and its overlay params reach the remote job."""
+    spec = env.make_spec("slurm", script="one", updateinterval=0.02,
+                         array=ArraySpec(count=1, indexed_params=[{"K": "V"}]))
+    assert BridgeJob(name="a1", spec=spec).to_dict()["apiVersion"] == API_V1BETA1
+    job = env.bridge.submit("arr-one", spec).wait(timeout=30)
+    assert job.status.state == DONE
+    assert env.clusters["slurm"].jobs[job.status.job_id].params["K"] == "V"
+
+
+def test_kill_cancels_remaining_retry_budget(env):
+    """A killed CR must reach a terminal state even with retry budget left —
+    the kill supersedes resubmission."""
+    spec = env.make_spec("slurm", script="fail-forever", updateinterval=0.02,
+                         jobparams={"FailMe": "true"},
+                         retry=RetryPolicy(limit=10_000))
+    handle = env.bridge.submit("retry-kill", spec)
+    deadline = time.time() + 10
+    while time.time() < deadline and not handle.status().job_id:
+        time.sleep(0.01)
+    handle.cancel()
+    job = handle.wait(timeout=30)  # would TimeoutError if retries kept going
+    assert job.status.state in (FAILED, KILLED)
+
+
+def test_kill_during_submit_retry(env):
+    """Cancelling a CR stuck in submission retries stops it from ever
+    submitting once the blocker clears."""
+    spec = env.make_spec("slurm", script="never:appears.sh",
+                         scriptlocation="s3", updateinterval=0.02,
+                         retry=RetryPolicy(limit=10_000,
+                                           backoff_seconds=0.05))
+    handle = env.bridge.submit("submit-kill", spec)
+    time.sleep(0.15)
+    handle.cancel()
+    job = handle.wait(timeout=30)
+    assert job.status.state == KILLED
+    assert job.status.job_id == ""
+    assert not any(j.script == "never:appears.sh"
+                   for j in env.clusters["slurm"].jobs.values())
+
+
+def test_dependencies_gate_submission(env):
+    first = env.make_spec("slurm", script="first", updateinterval=0.02,
+                          jobproperties={"WallSeconds": "0.4"})
+    second = env.make_spec("lsf", script="second", updateinterval=0.02,
+                           dependencies=["dep-first"])
+    h2 = env.bridge.submit("dep-second", second)
+    time.sleep(0.2)  # no dependency exists yet -> must be held back
+    assert h2.status().state == PENDING
+    assert "waiting for dependency" in h2.status().message
+    assert h2.status().job_id == ""
+    env.bridge.submit("dep-first", first)
+    job2 = h2.wait(timeout=30)
+    job1 = env.bridge.handle("dep-first").job()
+    assert job1.status.state == DONE and job2.status.state == DONE
+    # the dependent was only ever submitted AFTER the dependency finished
+    dep_end = job1.status.end_time
+    started = min(j.submit_time for j in env.clusters["lsf"].jobs.values()
+                  if j.script == "second")
+    assert started >= dep_end
+
+
+def test_failed_dependency_fails_dependent(env):
+    bad = env.make_spec("slurm", script="doomed", updateinterval=0.02,
+                        jobproperties={"FailMe": "true"})
+    child = env.make_spec("slurm", script="never-runs", updateinterval=0.02,
+                          dependencies=["dep-bad"])
+    env.bridge.submit("dep-bad", bad)
+    h = env.bridge.submit("dep-child", child)
+    job = h.wait(timeout=30)
+    assert job.status.state == FAILED
+    assert "dependency 'dep-bad' ended FAILED" in job.status.message
+    assert job.status.job_id == ""  # never submitted remotely
+    assert not any(j.script == "never-runs"
+                   for j in env.clusters["slurm"].jobs.values())
+
+
+def test_cancel_reaches_dependency_gated_job(env):
+    """A job held PENDING on an absent dependency must still be killable."""
+    spec = env.make_spec("slurm", script="held", updateinterval=0.02,
+                         dependencies=["never-created"])
+    handle = env.bridge.submit("gated-kill", spec)
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        if "waiting for dependency" in handle.status().message:
+            break
+        time.sleep(0.01)
+    handle.cancel()
+    job = handle.wait(timeout=30)
+    assert job.status.state == KILLED
+    assert job.status.job_id == ""  # never submitted remotely
+
+
+def test_native_array_retry_keeps_index_marker(env):
+    """A retried index of a slurm native array carries the same
+    SLURM_ARRAY_TASK_ID as its original run."""
+    spec = env.make_spec(
+        "slurm", script="marker", updateinterval=0.02,
+        array=ArraySpec(count=3,
+                        indexed_params=[{}, {"FailMe": "true"}, {}]),
+        retry=RetryPolicy(limit=1))
+    job = env.bridge.submit("arr-remark", spec).wait(timeout=30)
+    assert job.status.state == FAILED  # index 1 fails both attempts
+    attempts = [j for j in env.clusters["slurm"].jobs.values()
+                if j.script == "marker"]
+    assert len(attempts) == 4  # 3 original + 1 retry of index 1
+    assert all(j.params.get("SLURM_ARRAY_TASK_ID") for j in attempts)
+    assert sum(1 for j in attempts
+               if j.params["SLURM_ARRAY_TASK_ID"] == "1") == 2
+
+
+def test_partial_fanout_abort_cancels_submitted_indices(env):
+    """If fan-out fails permanently mid-array, already-submitted indices are
+    cancelled instead of running orphaned."""
+    from repro.core.backends import base as B
+    from repro.core.controller import ControllerPod
+    from repro.core import URLS
+
+    submitted, cancelled = [], []
+
+    class FlakyAdapter(B.ResourceAdapter):
+        image = "flakypod"
+        capabilities = frozenset({B.Capability.CANCEL,
+                                  B.Capability.CANCEL_QUEUED})
+
+        def submit(self, script, properties, params):
+            if len(submitted) == 1:  # second index hits a quota error
+                raise B.SubmitError("quota exceeded")
+            jid = f"fk-{len(submitted)}"
+            submitted.append(jid)
+            return jid
+
+        def cancel(self, job_id):
+            cancelled.append(job_id)
+
+    cm = env.statestore.create("default/flaky-cm", {
+        "resourceURL": URLS["slurm"], "image": "flakypod:0.1",
+        "resourcesecret": "slurm-secret", "updateinterval": "0.01",
+        "jobscript": "x", "scriptlocation": "inline", "additionaldata": "",
+        "jobproperties": "{}", "jobparams": "{}", "unknown_after": "5",
+        "id": "", "jobStatus": "PENDING", "kill": "false", "message": "",
+        "array_count": "3", "indexed_params": "[]",
+    })
+    pod = ControllerPod(name="default/flaky-pod", configmap=cm,
+                        secrets=env.secrets, objectstore=env.s3,
+                        directory=env.directory,
+                        adapters={"flakypod": FlakyAdapter}, min_sleep=0.002)
+    pod.start()
+    pod.join(timeout=10)
+    assert pod.exit_code == 1
+    assert cm.get("jobStatus") == FAILED
+    assert cancelled == ["fk-0"], "the fanned-out index must be cancelled"
+    env.statestore.delete("default/flaky-cm")
+
+
+def test_ttl_garbage_collects_cr(fresh_env):
+    env = fresh_env
+    spec = env.make_spec("slurm", script="x", updateinterval=0.02,
+                         ttl_seconds_after_finished=0.3)
+    handle = env.bridge.submit("ttljob", spec)
+    job = handle.wait(timeout=30)
+    assert job.status.state == DONE
+    deadline = time.time() + 10
+    while time.time() < deadline and handle.job() is not None:
+        time.sleep(0.02)
+    assert handle.job() is None, "TTL should auto-delete the CR"
+    assert not env.statestore.exists("default/ttljob-bridge-cm")
+
+
+# ---------------------------------------------------------------------------
+# the Bridge facade: kill-while-QUEUED, pod-restart-resume, watch, outputs
+# ---------------------------------------------------------------------------
+
+
+def test_kill_while_queued_via_bridge(fresh_env):
+    """Cancel a job that never left the remote queue (CANCEL_QUEUED path)."""
+    env = fresh_env
+    # saturate every slurm slot so the bridged job stays QUEUED
+    for _ in range(env.clusters["slurm"].slots):
+        env.clusters["slurm"].submit("hog", {"WallSeconds": "10"}, {})
+    handle = env.bridge.submit("queued-kill", env.make_spec(
+        "slurm", script="starved", updateinterval=0.02,
+        jobproperties={"WallSeconds": "5"}))
+    deadline = time.time() + 10
+    while time.time() < deadline and not handle.status().job_id:
+        time.sleep(0.01)
+    remote = env.clusters["slurm"].jobs[handle.status().job_id]
+    assert remote.state == "QUEUED"
+    handle.cancel()
+    job = handle.wait(timeout=30)
+    assert job.status.state == KILLED
+    assert remote.start_time is None, "job must have been killed in-queue"
+
+
+def test_pod_restart_resume_via_bridge(fresh_env):
+    """Operator restarts a killed pod; the new pod resumes from the config
+    map and never resubmits — observed purely through the facade."""
+    env = fresh_env
+    handle = env.bridge.submit("resume", env.make_spec(
+        "slurm", script="long", updateinterval=0.02,
+        jobproperties={"WallSeconds": "1.0"}))
+    deadline = time.time() + 10
+    while time.time() < deadline and not handle.status().job_id:
+        time.sleep(0.005)
+    first_id = handle.status().job_id
+    assert first_id
+    env.operator.pods["default/resume"].kill_pod()
+    job = handle.wait(timeout=30)
+    assert job.status.state == DONE
+    assert job.status.restarts >= 1
+    assert job.status.job_id == first_id, "restarted pod must NOT resubmit"
+    assert len(env.clusters["slurm"].jobs) == 1
+
+
+def test_watch_streams_status_changes(env):
+    handle = env.bridge.submit("watchme", env.make_spec(
+        "slurm", script="w", updateinterval=0.02,
+        jobproperties={"WallSeconds": "0.3"}))
+    states = [s.state for s in handle.watch(timeout=30)]
+    assert states[-1] == DONE
+    assert states[0] != DONE  # saw it in flight
+    assert states == sorted(set(states), key=states.index)  # no duplicates
+
+
+def test_outputs_via_bridge(env):
+    handle = env.bridge.submit("outjob", env.make_spec(
+        "lsf", script="produce", updateinterval=0.02,
+        jobproperties={"OutputFileName": "res.out"},
+        uploadfiles="res.out", uploadbucket="outbkt"))
+    assert handle.wait(timeout=30).status.state == DONE
+    outs = handle.outputs()
+    assert len(outs) == 1
+    (key, data), = outs.items()
+    assert key.endswith("res.out") and b"ok" in data
+
+
+def test_bridge_submit_accepts_versioned_documents(env):
+    """The facade takes a raw CR document in either API version."""
+    doc = {
+        "apiVersion": API_V1BETA1, "kind": "BridgeJob",
+        "spec": {
+            "resourceURL": "https://slurm.hpc.example.com",
+            "image": "slurmpod:0.1", "resourcesecret": "slurm-secret",
+            "updateinterval": 0.02,
+            "jobdata": {"jobscript": "from-doc", "scriptlocation": "inline"},
+            "array": {"count": 2},
+        },
+    }
+    job = env.bridge.submit("from-doc", doc).wait(timeout=30)
+    assert job.status.state == DONE
+    assert len(job.status.job_id.split(",")) == 2
+
+
+# ---------------------------------------------------------------------------
+# satellite: SimulatedCluster thread reaping
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_reaps_finished_worker_threads():
+    from repro.core.backends.base import SimulatedCluster, TERMINAL
+
+    cluster = SimulatedCluster("reap", slots=4, default_duration=0.01)
+    try:
+        jobs = [cluster.submit("t", {}, {}) for _ in range(12)]
+        deadline = time.time() + 10
+        while time.time() < deadline:
+            if (all(j.state in TERMINAL for j in jobs)
+                    and len(cluster._threads) == 0):
+                break
+            time.sleep(0.01)
+        assert all(j.state in TERMINAL for j in jobs)
+        assert len(cluster._threads) == 0, "terminal threads must be reaped"
+    finally:
+        cluster.shutdown()

@@ -19,8 +19,8 @@ def _candidates():
 
 
 def _sched(env):
-    return LoadAwareScheduler(env.directory, env.secrets, env.adapters,
-                              _candidates())
+    # the scheduler is a pure Bridge client now — one facade, no hand-wiring
+    return LoadAwareScheduler(env.bridge, _candidates())
 
 
 def test_pick_least_loaded(env):
@@ -57,8 +57,7 @@ def test_speculative_execution_straggler_mitigation(env):
     # make slurm slow (straggler) but still reachable
     env.clusters["slurm"].default_duration = 5.0
     spec = env.make_spec("slurm", script="payload", updateinterval=0.02)
-    winner = sched.submit_speculative(env.operator, "spec-job", spec, n=2,
-                                      timeout=30)
+    winner = sched.submit_speculative("spec-job", spec, n=2, timeout=30)
     assert winner.status.state == DONE
     # loser was killed (or still being killed) — eventually terminal
     others = [j for j in env.registry.list() if j.name != winner.name
