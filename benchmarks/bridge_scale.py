@@ -1,0 +1,221 @@
+#!/usr/bin/env python
+"""Control-plane scale benchmark: pod-per-cr vs multiplexed.
+
+Measures, for {1, 64, 256}-index SLURM arrays and for {1, 16, 64} concurrent
+CRs, in BOTH operator modes:
+
+  * monitor thread count (peak)   — pod-per-cr grows with CR count,
+                                    multiplexed stays at the pool size
+  * REST requests (total + /tick) — batched BATCH_STATUS polling vs the
+                                    per-index baseline
+  * config-map flushes            — write-coalesced store + monitor diff vs
+                                    the always-write baseline
+  * CR-create -> DONE wall time   — the single-job case guards against a
+                                    latency regression
+
+Baselines are the SAME code with the optimisation switched off (an adapter
+withholding Capability.BATCH_STATUS; StateStore(coalesce=False) plus
+JobProtocol.COALESCE_WRITES=False), so every delta is attributable.
+
+Emits BENCH_bridge_scale.json (committed at the repo root; CI uploads the
+--smoke variant as an artifact).  See docs/perf.md for the methodology and
+the resulting before/after table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (ArraySpec, BATCH_STATUS_CHUNK, BridgeEnvironment,
+                        DONE)
+from repro.core.backends import base as B
+from repro.core.backends.slurm import SlurmAdapter
+from repro.core.controller import JobProtocol
+
+MODES = ("pod-per-cr", "multiplexed")
+
+
+class PerIndexSlurmAdapter(SlurmAdapter):
+    """Baseline adapter: same dialect, BATCH_STATUS withheld, so the monitor
+    polls one request per index per tick (the pre-optimisation shape)."""
+    capabilities = SlurmAdapter.capabilities - {B.Capability.BATCH_STATUS}
+
+
+def _monitor_threads() -> int:
+    """Threads doing monitor work: controller pods + runtime pool workers."""
+    return sum(1 for t in threading.enumerate()
+               if t.name.startswith(("pod-", "bridge-monitor")))
+
+
+def run_case(mode: str, count: int = 1, crs: int = 1, *, batched: bool = True,
+             coalesced: bool = True, duration: float = 0.3,
+             interval: float = 0.02, label: str = "") -> dict:
+    """One measured scenario: ``crs`` CRs of ``count``-index SLURM arrays,
+    run to DONE under ``mode``."""
+    prev_coalesce = JobProtocol.COALESCE_WRITES  # process-wide switch
+    JobProtocol.COALESCE_WRITES = coalesced
+    env = BridgeEnvironment(slots=max(count, crs, 4),
+                            default_duration=duration,
+                            operator_kwargs={"mode": mode})
+    try:
+        if not batched:
+            env.operator.adapters[PerIndexSlurmAdapter.image] = \
+                PerIndexSlurmAdapter
+        env.statestore.coalesce = coalesced
+        env.start()
+        srv = env.servers["slurm"]
+        req0, flush0 = srv.request_count, env.statestore.flush_count
+        t0 = time.time()
+        handles = [env.bridge.submit(f"bench-{i}", env.make_spec(
+            "slurm", script="bench", updateinterval=interval,
+            jobproperties={"WallSeconds": str(duration)},
+            array=ArraySpec(count=count) if count > 1 else None))
+            for i in range(crs)]
+        peak_threads = 0
+        pending = list(handles)
+        deadline = t0 + 300
+        while pending and time.time() < deadline:
+            peak_threads = max(peak_threads, _monitor_threads())
+            pending = [h for h in pending
+                       if not (h.job() and h.job().status.terminal())]
+            time.sleep(0.01)
+        elapsed = time.time() - t0
+        states = [h.job().status.state for h in handles]
+        if not all(s == DONE for s in states):
+            raise RuntimeError(f"benchmark jobs did not all finish: {states}")
+        requests = srv.request_count - req0
+        flushes = env.statestore.flush_count - flush0
+        ticks = max(elapsed / interval, 1.0)
+        return {
+            "label": label or f"{mode}/{count}ix{crs}cr",
+            "mode": mode, "array_count": count, "crs": crs,
+            "batched_status": batched, "coalesced_writes": coalesced,
+            "wall_time_s": round(elapsed, 3),
+            "rest_requests": requests,
+            "rest_requests_per_tick": round(requests / ticks, 2),
+            "cm_flushes": flushes,
+            "monitor_threads_peak": peak_threads,
+            "ticks_est": round(ticks, 1),
+        }
+    finally:
+        env.stop()
+        JobProtocol.COALESCE_WRITES = prev_coalesce
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small, fast variant for CI (same schema)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_bridge_scale.json"))
+    args = ap.parse_args()
+
+    if args.smoke:
+        counts, cr_counts = [1, 16], [1, 8]
+        array_dur, interval, cr_dur, single_repeats = 0.5, 0.01, 0.2, 1
+    else:
+        counts, cr_counts = [1, 64, 256], [1, 16, 64]
+        # jobs long enough that the run is dominated by steady-state RUNNING
+        # ticks (the hot path being optimised), not the start/end ramps
+        array_dur, interval, cr_dur, single_repeats = 4.0, 0.01, 0.3, 9
+    baseline_count = counts[-1]
+
+    results = {"smoke": args.smoke,
+               "config": {"interval": interval, "array_duration_s": array_dur,
+                          "batch_status_chunk": BATCH_STATUS_CHUNK},
+               "array_scaling": [], "baselines": [], "cr_scaling": [],
+               "single_job": []}
+
+    print("== array scaling (one CR, N indices) ==")
+    for mode in MODES:
+        for count in counts:
+            r = run_case(mode, count=count, duration=array_dur,
+                         interval=interval)
+            results["array_scaling"].append(r)
+            print(f"  {r['label']:<24} wall={r['wall_time_s']:>6.2f}s "
+                  f"req/tick={r['rest_requests_per_tick']:>8.2f} "
+                  f"flushes={r['cm_flushes']:>4} "
+                  f"threads={r['monitor_threads_peak']}")
+
+    print("== baselines (optimisations off, multiplexed mode) ==")
+    for kwargs, label in ((dict(batched=False), "per-index-status"),
+                          (dict(coalesced=False), "always-write-store")):
+        r = run_case("multiplexed", count=baseline_count, duration=array_dur,
+                     interval=interval, label=f"{label}/{baseline_count}ix",
+                     **kwargs)
+        results["baselines"].append(r)
+        print(f"  {r['label']:<24} wall={r['wall_time_s']:>6.2f}s "
+              f"req/tick={r['rest_requests_per_tick']:>8.2f} "
+              f"flushes={r['cm_flushes']:>4}")
+
+    print("== CR scaling (N CRs, single jobs) — thread growth ==")
+    for mode in MODES:
+        for crs in cr_counts:
+            r = run_case(mode, crs=crs, duration=cr_dur)
+            results["cr_scaling"].append(r)
+            print(f"  {r['label']:<24} threads={r['monitor_threads_peak']:>3} "
+                  f"wall={r['wall_time_s']:>6.2f}s")
+
+    print("== single-job wall time (latency regression guard) ==")
+    for mode in MODES:
+        walls = [run_case(mode, count=1, duration=0.1)["wall_time_s"]
+                 for _ in range(single_repeats)]
+        results["single_job"].append(
+            {"mode": mode, "wall_time_s_median": statistics.median(walls),
+             "wall_time_s_all": walls})
+        print(f"  {mode:<14} median={statistics.median(walls):.3f}s")
+
+    def _find(rows, **match):
+        for r in rows:
+            if all(r.get(k) == v for k, v in match.items()):
+                return r
+        raise KeyError(match)
+
+    batched = _find(results["array_scaling"], mode="multiplexed",
+                    array_count=baseline_count)
+    per_index = _find(results["baselines"], batched_status=False)
+    always = _find(results["baselines"], coalesced_writes=False)
+    mux_threads = [r["monitor_threads_peak"] for r in results["cr_scaling"]
+                   if r["mode"] == "multiplexed"]
+    results["headline"] = {
+        "array_count": baseline_count,
+        "rest_requests_per_tick_batched": batched["rest_requests_per_tick"],
+        "rest_requests_per_tick_per_index": per_index["rest_requests_per_tick"],
+        "rest_request_reduction_x": round(
+            per_index["rest_requests_per_tick"]
+            / max(batched["rest_requests_per_tick"], 1e-9), 1),
+        "cm_flushes_coalesced": batched["cm_flushes"],
+        "cm_flushes_always_write": always["cm_flushes"],
+        "cm_flush_reduction_x": round(
+            always["cm_flushes"] / max(batched["cm_flushes"], 1), 1),
+        "multiplexed_threads_by_cr_count": dict(zip(
+            [str(c) for c in cr_counts], mux_threads)),
+        "single_job_wall_s": {r["mode"]: r["wall_time_s_median"]
+                              for r in results["single_job"]},
+    }
+
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    h = results["headline"]
+    print(f"\nheadline @ {baseline_count} indices: "
+          f"req/tick {h['rest_requests_per_tick_per_index']} -> "
+          f"{h['rest_requests_per_tick_batched']} "
+          f"({h['rest_request_reduction_x']}x), "
+          f"flushes {h['cm_flushes_always_write']} -> "
+          f"{h['cm_flushes_coalesced']} ({h['cm_flush_reduction_x']}x), "
+          f"mux threads {h['multiplexed_threads_by_cr_count']}")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,7 +9,8 @@ Public surface:
   StateStore / ConfigMap            — the ConfigMap analogue (statestore.py)
   ObjectStore                       — S3 analogue (objectstore.py)
   SecretStore                       — secret mounts (secrets.py)
-  ControllerPod                     — paper Figs. 2-3 (controller.py)
+  ControllerPod / JobProtocol       — paper Figs. 2-3 (controller.py)
+  MonitorRuntime / MonitorTask      — multiplexed monitor pool (monitor.py)
   BridgeOperator                    — the reconciler (operator.py)
   LoadAwareScheduler                — paper §7 future work (scheduler.py)
   BridgeEnvironment                 — cluster-in-a-box wiring (cluster.py)
@@ -27,9 +28,11 @@ from repro.core.objectstore import NoSuchKey, ObjectStore
 from repro.core.secrets import SecretNotFound, SecretStore
 from repro.core.rest import (FaultProfile, ResourceManagerDirectory,
                              RestClient, RestServer, TransportError)
-from repro.core.backends.base import Capability, resolve_adapter
+from repro.core.backends.base import (BATCH_STATUS_CHUNK, Capability,
+                                      resolve_adapter)
 from repro.core.api import Bridge, JobHandle
-from repro.core.controller import ControllerPod
+from repro.core.controller import ControllerPod, JobProtocol
+from repro.core.monitor import MonitorRuntime, MonitorTask
 from repro.core.operator import BridgeOperator, default_adapters
 from repro.core.scheduler import Candidate, LoadAwareScheduler
 from repro.core.cluster import IMAGES, TOKENS, URLS, BridgeEnvironment

@@ -79,6 +79,12 @@ def sleep_payload(job: ClusterJob, cluster: "SimulatedCluster") -> int:
     return 0
 
 
+# max ids per BATCH_STATUS request (squeue -j takes a bounded id list; real
+# REST dialects cap URL length) — callers chunk, so a 256-index array costs
+# ceil(256/64)=4 requests per poll tick instead of 256
+BATCH_STATUS_CHUNK = 64
+
+
 class Capability(enum.Enum):
     """Typed adapter capabilities: what a backend's API genuinely offers.
 
@@ -94,6 +100,7 @@ class Capability(enum.Enum):
     LOGS = "logs"                    # can fetch per-job logs (ray idiom)
     QUEUE_LOAD = "queue_load"        # exposes queue depth/slots for scheduling
     NATIVE_ARRAYS = "native_arrays"  # one submission fans out N indices
+    BATCH_STATUS = "batch_status"    # one request polls many ids (squeue -j)
 
 
 class ResourceAdapter:
@@ -145,6 +152,15 @@ class ResourceAdapter:
     def status(self, job_id: str) -> Dict[str, Any]:
         """Returns {'state': CANONICAL, 'start_time', 'end_time', 'reason'}."""
         raise NotImplementedError
+
+    def status_batch(self, job_ids: List[str]) -> List[Dict[str, Any]]:
+        """ONE request answering ``status()`` for many ids, results aligned
+        with ``job_ids`` (an id the manager no longer knows still yields an
+        entry, with the dialect's job-vanished semantics).  Only valid when
+        ``Capability.BATCH_STATUS`` is declared; callers without it poll
+        per-id.  Callers chunk to ``BATCH_STATUS_CHUNK`` ids per request."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not declare BATCH_STATUS")
 
     def cancel(self, job_id: str) -> None:
         raise NotImplementedError

@@ -36,7 +36,8 @@ from repro.core.rest import FaultProfile, RestServer
 
 class JaxLocalAdapter(SlurmAdapter):
     image = "jaxpod"
-    # same dialect as slurmrestd, so the same capability set (incl. arrays)
+    # same dialect as slurmrestd, so the same capability set (incl. arrays
+    # and squeue-style BATCH_STATUS — the batch route comes with the server)
     capabilities = SlurmAdapter.capabilities
 
 

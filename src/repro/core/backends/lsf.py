@@ -46,17 +46,33 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         return HttpResponse(200, {"jobId": job.id,
                                   "message": f"Job <{job.id}> is submitted to queue."})
 
+    def _job_record(job: B.ClusterJob) -> dict:
+        reason = job.reason or ("TERM_OWNER: killed by owner"
+                                if job.state == B.CANCELLED else "")
+        return {
+            "jobId": job.id, "status": _STATE_TO_LSF[job.state],
+            "startTime": job.start_time, "endTime": job.end_time,
+            "exitReason": reason,
+        }
+
     def jobinfo(groups, _body) -> HttpResponse:
         job = cluster.get(groups["id"])
         if job is None:
             return HttpResponse(404, {"error": "Job not found"})
-        reason = job.reason or ("TERM_OWNER: killed by owner"
-                                if job.state == B.CANCELLED else "")
-        return HttpResponse(200, {
-            "jobId": job.id, "status": _STATE_TO_LSF[job.state],
-            "startTime": job.start_time, "endTime": job.end_time,
-            "exitReason": reason,
-        })
+        return HttpResponse(200, _job_record(job))
+
+    def jobsinfo(groups, _body) -> HttpResponse:
+        # bjobs id1 id2 ... analogue: one request answers many ids; an id
+        # mbatchd no longer knows yields a record with status=null
+        ids = [s for s in groups.get("ids", "").split(",") if s]
+        if not ids:
+            return HttpResponse(400, {"error": "ids query param required"})
+        records = []
+        for jid in ids:
+            job = cluster.get(jid)
+            records.append(_job_record(job) if job is not None
+                           else {"jobId": jid, "status": None})
+        return HttpResponse(200, {"jobs": records})
 
     def kill(groups, _body) -> HttpResponse:
         ok = cluster.cancel(groups["id"])
@@ -83,6 +99,7 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         return HttpResponse(200, {"queues": [dict(name="normal", **load)]})
 
     srv.route("POST", "/platform/ws/jobs/submit", submit)
+    srv.route("GET", "/platform/ws/jobs", jobsinfo)
     srv.route("GET", "/platform/ws/jobs/{id}", jobinfo)
     srv.route("POST", "/platform/ws/jobs/{id}/kill", kill)
     srv.route("PUT", "/platform/ws/files/{name}", upload)
@@ -93,11 +110,13 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 
 class LSFAdapter(B.ResourceAdapter):
     image = "lsfpod"
-    # Application Center API: full file staging, no native job arrays —
-    # array CRs fan out via repeated submit()
+    # Application Center API: full file staging and bjobs-style multi-id
+    # status, but no native job arrays — array CRs fan out via repeated
+    # submit()
     capabilities = frozenset({
         B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
         B.Capability.UPLOAD, B.Capability.DOWNLOAD, B.Capability.QUEUE_LOAD,
+        B.Capability.BATCH_STATUS,
     })
 
     def submit(self, script, properties, params) -> str:
@@ -109,16 +128,29 @@ class LSFAdapter(B.ResourceAdapter):
             raise B.SubmitError(f"lsf submit: HTTP {r.status} {r.json}")
         return str(r.json["jobId"])
 
+    @staticmethod
+    def _record_to_info(j: Dict[str, Any]) -> Dict[str, Any]:
+        if j.get("status") is None:
+            return {"state": B.FAILED, "reason": "job not found in mbatchd"}
+        return {"state": _lsf_to_state(j["status"], j.get("exitReason", "")),
+                "start_time": j.get("startTime"), "end_time": j.get("endTime"),
+                "reason": j.get("exitReason", "")}
+
     def status(self, job_id: str) -> Dict[str, Any]:
         r = self.client.get(f"/platform/ws/jobs/{job_id}")
         if r.status == 404:
             return {"state": B.FAILED, "reason": "job not found in mbatchd"}
         if not r.ok:
             raise B.SubmitError(f"lsf status: HTTP {r.status}")
-        j = r.json
-        return {"state": _lsf_to_state(j["status"], j.get("exitReason", "")),
-                "start_time": j.get("startTime"), "end_time": j.get("endTime"),
-                "reason": j.get("exitReason", "")}
+        return self._record_to_info(r.json)
+
+    def status_batch(self, job_ids) -> list:
+        r = self.client.get("/platform/ws/jobs?ids=" + ",".join(job_ids))
+        if not r.ok:
+            raise B.SubmitError(f"lsf batch status: HTTP {r.status}")
+        by_id = {str(j["jobId"]): j for j in r.json["jobs"]}
+        return [self._record_to_info(by_id.get(str(jid), {}))
+                for jid in job_ids]
 
     def cancel(self, job_id: str) -> None:
         self.client.post(f"/platform/ws/jobs/{job_id}/kill")

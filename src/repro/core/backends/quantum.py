@@ -80,7 +80,9 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 
 class QuantumAdapter(B.ResourceAdapter):
     image = "quantumpod"
-    # results are PUSHED to object storage by the service — no file verbs
+    # results are PUSHED to object storage by the service — no file verbs;
+    # the Runtime API is strictly one-job-per-request, so no BATCH_STATUS
+    # either (the monitor falls back to per-id polling)
     capabilities = frozenset({
         B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
         B.Capability.QUEUE_LOAD,

@@ -82,7 +82,9 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 
 class RayAdapter(B.ResourceAdapter):
     image = "raypod"
-    # Ray Jobs expose logs, not arbitrary files; no native arrays
+    # Ray Jobs expose logs, not arbitrary files; no native arrays, and the
+    # Jobs API has no multi-id status endpoint (no BATCH_STATUS — the
+    # monitor falls back to per-id polling)
     capabilities = frozenset({
         B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
         B.Capability.LOGS, B.Capability.QUEUE_LOAD,

@@ -50,17 +50,33 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
                              body.get("params", {}))
         return HttpResponse(200, {"job_id": int(job.id)})
 
-    def get_job(groups, _body) -> HttpResponse:
-        job = cluster.get(groups["id"])
-        if job is None:
-            return HttpResponse(404, {"error": "job not found"})
+    def _job_record(job: B.ClusterJob) -> dict:
         s = job.snapshot()
-        return HttpResponse(200, {"jobs": [{
+        return {
             "job_id": int(job.id),
             "job_state": _STATE_TO_SLURM[job.state],
             "start_time": s["start_time"], "end_time": s["end_time"],
             "exit_code": s["exit_code"], "state_reason": s["reason"],
-        }]})
+        }
+
+    def get_job(groups, _body) -> HttpResponse:
+        job = cluster.get(groups["id"])
+        if job is None:
+            return HttpResponse(404, {"error": "job not found"})
+        return HttpResponse(200, {"jobs": [_job_record(job)]})
+
+    def get_jobs(groups, _body) -> HttpResponse:
+        # squeue -j id1,id2 analogue: one request answers many ids; an id
+        # slurmctld no longer knows yields a record with job_state=null
+        ids = [s for s in groups.get("ids", "").split(",") if s]
+        if not ids:
+            return HttpResponse(400, {"error": "ids query param required"})
+        records = []
+        for jid in ids:
+            job = cluster.get(jid)
+            records.append(_job_record(job) if job is not None
+                           else {"job_id": jid, "job_state": None})
+        return HttpResponse(200, {"jobs": records})
 
     def cancel(groups, _body) -> HttpResponse:
         ok = cluster.cancel(groups["id"])
@@ -74,6 +90,7 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         return HttpResponse(200, {"partitions": [dict(name="batch", **load)]})
 
     srv.route("POST", "/slurm/v0.0.37/job/submit", submit)
+    srv.route("GET", "/slurm/v0.0.37/jobs", get_jobs)
     srv.route("GET", "/slurm/v0.0.37/job/{id}", get_job)
     srv.route("DELETE", "/slurm/v0.0.37/job/{id}", cancel)
     srv.route("GET", "/slurm/v0.0.37/ping", ping)
@@ -83,11 +100,12 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 
 class SlurmAdapter(B.ResourceAdapter):
     image = "slurmpod"
-    # Slurm REST 21.08: no file staging (paper §5.2), but sbatch arrays and
-    # scancel-of-pending are native
+    # Slurm REST 21.08: no file staging (paper §5.2), but sbatch arrays,
+    # scancel-of-pending, and squeue-style multi-id status are native
     capabilities = frozenset({
         B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
         B.Capability.QUEUE_LOAD, B.Capability.NATIVE_ARRAYS,
+        B.Capability.BATCH_STATUS,
     })
 
     def submit(self, script, properties, params) -> str:
@@ -112,18 +130,32 @@ class SlurmAdapter(B.ResourceAdapter):
         params.setdefault("SLURM_ARRAY_TASK_ID", str(index))
         return self.submit(script, properties, params)
 
+    @staticmethod
+    def _record_to_info(j: Dict[str, Any]) -> Dict[str, Any]:
+        if j.get("job_state") is None:
+            return {"state": B.FAILED, "reason": "job vanished from slurmctld"}
+        return {
+            "state": _SLURM_TO_STATE.get(j["job_state"], B.FAILED),
+            "start_time": j.get("start_time"), "end_time": j.get("end_time"),
+            "reason": j.get("state_reason", ""),
+        }
+
     def status(self, job_id: str) -> Dict[str, Any]:
         r = self.client.get(f"/slurm/v0.0.37/job/{job_id}")
         if r.status == 404:
             return {"state": B.FAILED, "reason": "job vanished from slurmctld"}
         if not r.ok:
             raise B.SubmitError(f"slurm status: HTTP {r.status}")
-        j = r.json["jobs"][0]
-        return {
-            "state": _SLURM_TO_STATE.get(j["job_state"], B.FAILED),
-            "start_time": j.get("start_time"), "end_time": j.get("end_time"),
-            "reason": j.get("state_reason", ""),
-        }
+        return self._record_to_info(r.json["jobs"][0])
+
+    def status_batch(self, job_ids) -> list:
+        r = self.client.get("/slurm/v0.0.37/jobs?ids=" + ",".join(job_ids))
+        if not r.ok:
+            raise B.SubmitError(f"slurm batch status: HTTP {r.status}")
+        by_id = {str(j["job_id"]): j for j in r.json["jobs"]}
+        # align with the request order; an id the server skipped == vanished
+        return [self._record_to_info(by_id.get(str(jid), {}))
+                for jid in job_ids]
 
     def cancel(self, job_id: str) -> None:
         self.client.delete(f"/slurm/v0.0.37/job/{job_id}")

@@ -17,13 +17,28 @@ One pod per remote job.  The pod:
 Pod death is simulated by ``kill_pod()``: the thread aborts at the next
 action boundary WITHOUT flushing anything — only config-map state survives,
 which is precisely the failure mode the paper's design addresses.
+
+The protocol itself lives in ``JobProtocol`` so it has two drivers: this
+thread-per-CR pod (the paper-faithful shape) and the multiplexed
+``MonitorRuntime`` (core/monitor.py), where a small fixed worker pool steps
+many jobs' state machines off a poll-deadline heap.  ``JobProtocol.tick()``
+is ONE iteration of the Fig.-3 monitor loop; the driver owns the inter-tick
+wait.  Two per-tick I/O optimisations live here as well:
+
+  * batched status — adapters declaring ``Capability.BATCH_STATUS`` are
+    polled with one ``status_batch()`` request per ``BATCH_STATUS_CHUNK``
+    ids instead of one request per index (with per-id fallback otherwise);
+  * write-coalescing — the monitor diffs its computed updates against the
+    last-written snapshot, so a steady-state RUNNING tick performs zero
+    config-map writes (the state store additionally skips flushes for
+    value-identical updates).
 """
 from __future__ import annotations
 
 import json
 import threading
 import time
-from typing import Any, Dict, Mapping, Optional, Type
+from typing import Any, Callable, Dict, List, Mapping, Optional, Type
 
 from repro.core.backends import base as B
 from repro.core.objectstore import NoSuchKey, ObjectStore
@@ -47,17 +62,40 @@ class PodKilled(BaseException):
     """Out-of-band pod termination (node failure / eviction)."""
 
 
-class ControllerPod:
-    # pod phases (Kubernetes-like)
-    PENDING = "Pending"
-    RUNNING_PHASE = "Running"
-    SUCCEEDED = "Succeeded"
-    FAILED_PHASE = "Failed"
-    KILLED_PHASE = "Killed"   # external kill (node loss) — operator restarts
+def killable_sleep(killed: threading.Event, name: str, seconds: float,
+                   min_sleep: float = 0.005) -> None:
+    """Checkpointed, interruptible wait shared by both protocol drivers
+    (ControllerPod thread, MonitorTask worker): raises PodKilled mid-wait so
+    kills take effect at ``min_sleep`` granularity."""
+    deadline = time.time() + seconds
+    while time.time() < deadline:
+        if killed.is_set():
+            raise PodKilled(name)
+        time.sleep(min(min_sleep, max(deadline - time.time(), 0)))
+
+
+class JobProtocol:
+    """The Figs. 2-3 bridge protocol for ONE BridgeJob, structured as
+    ``start()`` (connect + submit-if-no-id) plus repeated ``tick()`` calls
+    (one monitor iteration each) so any driver can own the pacing.
+
+    ``checkpoint`` is called at every action boundary and must raise
+    ``PodKilled`` when the driver wants the protocol to die unflushed;
+    ``sleep`` is the (checkpointed, interruptible) wait used for retry
+    backoff inside a step.
+    """
+
+    # benchmark-baseline switch, PROCESS-WIDE: False restores the
+    # pre-optimisation write-every-tick monitor (pair with
+    # StateStore(coalesce=False)).  Not production config — flip it only in
+    # single-environment measurement code, saving/restoring the prior value.
+    COALESCE_WRITES = True
 
     def __init__(self, name: str, configmap: ConfigMap, secrets: SecretStore,
                  objectstore: ObjectStore, directory: ResourceManagerDirectory,
                  adapters: Mapping[str, Type[B.ResourceAdapter]],
+                 checkpoint: Callable[[], None],
+                 sleep: Callable[[float], None],
                  min_sleep: float = 0.005):
         self.name = name
         self.cm = configmap
@@ -66,67 +104,39 @@ class ControllerPod:
         self.directory = directory
         self.adapters = dict(adapters)
         self.min_sleep = min_sleep
-        self.phase = self.PENDING
+        self._checkpoint = checkpoint
+        self._sleep = sleep
         self.exit_code: Optional[int] = None
-        self.error: str = ""
-        self._killed = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name=f"pod-{name}")
+        self.poll: float = 0.0
+        # monitor state (populated by start(), survives across ticks)
+        self._adapter: Optional[B.ResourceAdapter] = None
+        self._ids: List[str] = []
+        self._count = 1
+        self._unknown_after = 5
+        self._retry_limit = 0
+        self._backoff = 0.0
+        self._attempts: Dict[str, int] = {}
+        self._consecutive_failures = 0
+        self._kill_sent: set = set()
+        # last monitor-written snapshot, for write-coalescing
+        self._last_pushed: Dict[str, str] = {}
 
-    # -- lifecycle --------------------------------------------------------
+    # -- paper Fig. 2: main ----------------------------------------------
 
-    def start(self) -> None:
-        self._thread.start()
-
-    def kill_pod(self) -> None:
-        """Simulate pod/node failure: abort without flushing state."""
-        self._killed.set()
-
-    def alive(self) -> bool:
-        return self._thread.is_alive()
-
-    def join(self, timeout: Optional[float] = None) -> None:
-        self._thread.join(timeout)
-
-    # -- internals ----------------------------------------------------------
-
-    def _checkpoint(self) -> None:
-        """Action boundary: a killed pod dies here, state unflushed."""
-        if self._killed.is_set():
-            raise PodKilled(self.name)
-
-    def _sleep(self, seconds: float) -> None:
-        deadline = time.time() + seconds
-        while time.time() < deadline:
-            self._checkpoint()
-            time.sleep(min(self.min_sleep, max(deadline - time.time(), 0)))
-
-    def _adapter_for(self, image: str, client) -> B.ResourceAdapter:
-        return B.resolve_adapter(self.adapters, image)(client)
-
-    # -- paper Fig. 2: main --------------------------------------------------
-
-    def _run(self) -> None:
-        self.phase = self.RUNNING_PHASE
-        try:
-            self._main()
-        except PodKilled:
-            self.phase = self.KILLED_PHASE
-        except Exception as e:  # pod crash (bug/unhandled) — operator restarts
-            self.error = f"{type(e).__name__}: {e}"
-            self.phase = self.KILLED_PHASE
-
-    def _main(self) -> None:
+    def start(self) -> bool:
+        """Connect and ensure the remote job(s) exist.  Returns False when
+        the protocol already exited (submission failed or was killed —
+        ``exit_code`` is set); True when monitoring should begin."""
         cm_data = self.cm.data
         url = cm_data["resourceURL"]
         image = cm_data["image"]
-        poll = float(cm_data.get("updateinterval", "20"))
+        self.poll = float(cm_data.get("updateinterval", "20"))
 
         # credentials from the mounted secret (never from the spec/config map)
         secret = self.secrets.mount(cm_data["resourcesecret"])
         token = secret.get("token", "")
         client = self.directory.connect(url, token)
-        adapter = self._adapter_for(image, client)
+        adapter = B.resolve_adapter(self.adapters, image)(client)
 
         # v1beta1 job arrays: the config map carries the fan-out count; a
         # single v1alpha1 job is the count=1 degenerate case of the same path
@@ -135,11 +145,21 @@ class ControllerPod:
         if len(ids) < count:
             ids = self._submit(adapter, cm_data, count, ids)
             if not ids:
-                return  # FAILED already recorded; Fig. 2 klog.Exit path
+                return False  # FAILED already recorded; Fig. 2 klog.Exit path
         else:
             # paper: "Job has ID in ConfigMap. Handling state."
             pass
-        self._monitor(adapter, ids, poll, cm_data)
+        self._adapter = adapter
+        self._ids = ids
+        self._count = len(ids)
+        self._unknown_after = int(cm_data.get("unknown_after", "5"))
+        self._retry_limit = int(cm_data.get("retry_limit", "0") or 0)
+        self._backoff = float(cm_data.get("retry_backoff", "0") or 0)
+        # per-index resubmission counts survive pod restarts via the cm
+        self._attempts = {
+            k: int(v) for k, v in
+            json.loads(cm_data.get("retry_attempts", "{}") or "{}").items()}
+        return True
 
     def _index_params(self, cm_data: Dict[str, str], index: int,
                       count: int) -> Dict[str, str]:
@@ -250,132 +270,142 @@ class ControllerPod:
             if not adapter.upload(name, self.s3.get(bucket, key)):
                 self.cm.update({"staging": f"failed:{name}"})
 
-    # -- paper Fig. 3: monitor ------------------------------------------------
+    # -- paper Fig. 3: monitor ---------------------------------------------
 
-    def _monitor(self, adapter: B.ResourceAdapter, ids: list, poll: float,
-                 cm_data: Dict[str, str]) -> None:
-        """Poll every remote index, mirror aggregate + per-index state into
-        the config map, honour kill and the spec retry policy.
+    def _push(self, updates: Dict[str, Any]) -> None:
+        """Monitor-side write coalescing: only keys whose value actually
+        changed since the last monitor write reach the config map, so a
+        steady-state tick costs zero store operations."""
+        if not self.COALESCE_WRITES:
+            self.cm.update({k: str(v) for k, v in updates.items()})
+            return
+        changed = {k: str(v) for k, v in updates.items()
+                   if self._last_pushed.get(k) != str(v)}
+        if changed:
+            self.cm.update(changed)
+            self._last_pushed.update(changed)
 
-        Aggregate semantics: DONE only when every index completed; any KILLED
-        propagates KILLED; a FAILED index is resubmitted while the retry
-        budget lasts and propagates FAILED once it is exhausted.
-        """
-        count = len(ids)
-        unknown_after = int(cm_data.get("unknown_after", "5"))
-        retry_limit = int(cm_data.get("retry_limit", "0") or 0)
-        backoff = float(cm_data.get("retry_backoff", "0") or 0)
-        # per-index resubmission counts survive pod restarts via the cm
-        attempts: Dict[str, int] = {
-            k: int(v) for k, v in
-            json.loads(cm_data.get("retry_attempts", "{}") or "{}").items()}
-        consecutive_failures = 0
-        kill_sent: set = set()
-        while True:
-            self._sleep(poll)
-            cm_now = self.cm.data  # Fig. 3: "Get current config map"
-            try:
-                infos = [adapter.status(jid) for jid in ids]
-                consecutive_failures = 0
-            except (TransportError, B.SubmitError) as e:
-                consecutive_failures += 1
-                if consecutive_failures >= unknown_after:
-                    # black-box honesty: unreachable != dead
-                    self.cm.update({"jobStatus": UNKNOWN,
-                                    "message": f"resource unreachable: {e}"})
-                continue
+    def _poll_statuses(self, adapter: B.ResourceAdapter,
+                       ids: List[str]) -> List[Dict[str, Any]]:
+        """One tick's worth of remote status: batched (chunked) when the
+        dialect declares BATCH_STATUS, per-id otherwise."""
+        if len(ids) > 1 and adapter.supports(B.Capability.BATCH_STATUS):
+            infos: List[Dict[str, Any]] = []
+            for i in range(0, len(ids), B.BATCH_STATUS_CHUNK):
+                infos.extend(
+                    adapter.status_batch(ids[i:i + B.BATCH_STATUS_CHUNK]))
+            return infos
+        return [adapter.status(jid) for jid in ids]
 
-            states = [_CANON_TO_BRIDGE[info["state"]] for info in infos]
-            kill_requested = cm_now.get("kill", "false") == "true"
+    def tick(self) -> bool:
+        """ONE Fig.-3 monitor iteration.  Returns True when the protocol
+        finished (``exit_code`` is set); the driver waits ``poll`` seconds
+        between calls."""
+        adapter, ids, count = self._adapter, self._ids, self._count
+        cm_now = self.cm.data  # Fig. 3: "Get current config map"
+        try:
+            infos = self._poll_statuses(adapter, ids)
+            self._consecutive_failures = 0
+        except (TransportError, B.SubmitError) as e:
+            self._consecutive_failures += 1
+            if self._consecutive_failures >= self._unknown_after:
+                # black-box honesty: unreachable != dead
+                self._push({"jobStatus": UNKNOWN,
+                            "message": f"resource unreachable: {e}"})
+            return False
 
-            # spec.retry: resubmit FAILED indices while budget remains
-            # (a kill supersedes retries — never resubmit a killed CR)
-            if retry_limit and not kill_requested:
-                for i, st in enumerate(states):
-                    used = attempts.get(str(i), 0)
-                    if st != FAILED or used >= retry_limit:
-                        continue
-                    attempts[str(i)] = used + 1
-                    if backoff:
-                        self._sleep(backoff)
-                    try:
-                        # arrays go through resubmit_index so native dialects
-                        # can restamp their index marker; single jobs resubmit
-                        # plainly
-                        resubmit = (adapter.resubmit_index if count > 1
-                                    else lambda s, p, q, _i: adapter.submit(s, p, q))
-                        new_id = resubmit(
-                            self._fetch_script(cm_now),
-                            json.loads(cm_now.get("jobproperties", "{}")),
-                            self._index_params(cm_now, i, count), i)
-                    except (B.SubmitError, TransportError, NoSuchKey,
-                            KeyError, ValueError):
-                        # budget consumed; surface FAILED when exhausted
-                        self.cm.update(
-                            {"retry_attempts": json.dumps(attempts)})
-                        continue
-                    ids[i] = new_id
-                    states[i] = SUBMITTED
-                    self.cm.update({"id": ",".join(ids),
-                                    "retry_attempts": json.dumps(attempts)})
+        states = [_CANON_TO_BRIDGE[info["state"]] for info in infos]
+        kill_requested = cm_now.get("kill", "false") == "true"
+        retry_limit, attempts = self._retry_limit, self._attempts
 
-            def exhausted(i: int) -> bool:
-                # a kill cancels the remaining budget — FAILED is final then
-                return kill_requested or attempts.get(str(i), 0) >= retry_limit
+        # spec.retry: resubmit FAILED indices while budget remains
+        # (a kill supersedes retries — never resubmit a killed CR)
+        if retry_limit and not kill_requested:
+            for i, st in enumerate(states):
+                used = attempts.get(str(i), 0)
+                if st != FAILED or used >= retry_limit:
+                    continue
+                attempts[str(i)] = used + 1
+                if self._backoff:
+                    self._sleep(self._backoff)
+                try:
+                    # arrays go through resubmit_index so native dialects
+                    # can restamp their index marker; single jobs resubmit
+                    # plainly
+                    resubmit = (adapter.resubmit_index if count > 1
+                                else lambda s, p, q, _i: adapter.submit(s, p, q))
+                    new_id = resubmit(
+                        self._fetch_script(cm_now),
+                        json.loads(cm_now.get("jobproperties", "{}")),
+                        self._index_params(cm_now, i, count), i)
+                except (B.SubmitError, TransportError, NoSuchKey,
+                        KeyError, ValueError):
+                    # budget consumed; surface FAILED when exhausted
+                    self._push({"retry_attempts": json.dumps(attempts)})
+                    continue
+                ids[i] = new_id
+                states[i] = SUBMITTED
+                self._push({"id": ",".join(ids),
+                            "retry_attempts": json.dumps(attempts)})
 
-            finished = all(
-                st in (DONE, KILLED) or (st == FAILED and exhausted(i))
-                for i, st in enumerate(states))
-            if finished:
-                if all(st == DONE for st in states):
-                    agg = DONE
-                elif any(st == KILLED for st in states):
-                    agg = KILLED
-                else:
-                    agg = FAILED
-            elif any(st == RUNNING for st in states):
-                agg = RUNNING
+        def exhausted(i: int) -> bool:
+            # a kill cancels the remaining budget — FAILED is final then
+            return kill_requested or attempts.get(str(i), 0) >= retry_limit
+
+        finished = all(
+            st in (DONE, KILLED) or (st == FAILED and exhausted(i))
+            for i, st in enumerate(states))
+        if finished:
+            if all(st == DONE for st in states):
+                agg = DONE
+            elif any(st == KILLED for st in states):
+                agg = KILLED
             else:
-                agg = SUBMITTED
+                agg = FAILED
+        elif any(st == RUNNING for st in states):
+            agg = RUNNING
+        else:
+            agg = SUBMITTED
 
-            updates = {"jobStatus": agg,
-                       "message": self._aggregate_message(states, infos)}
-            if count > 1:
-                updates["index_states"] = json.dumps(
-                    {str(i): st for i, st in enumerate(states)})
-            starts = [i.get("start_time") for i in infos if i.get("start_time")]
-            ends = [i.get("end_time") for i in infos if i.get("end_time")]
-            if starts:
-                updates["start_time"] = str(min(starts))
-            if ends and (count == 1 or finished):
-                updates["end_time"] = str(max(ends))
-            for i, info in enumerate(infos):
-                if info.get("results_location"):
-                    key = ("results_location" if count == 1
-                           else f"results_location_{i}")
-                    updates[key] = info["results_location"]
-            self.cm.update(updates)
+        updates = {"jobStatus": agg,
+                   "message": self._aggregate_message(states, infos)}
+        if count > 1:
+            updates["index_states"] = json.dumps(
+                {str(i): st for i, st in enumerate(states)})
+        starts = [i.get("start_time") for i in infos if i.get("start_time")]
+        ends = [i.get("end_time") for i in infos if i.get("end_time")]
+        if starts:
+            updates["start_time"] = str(min(starts))
+        if ends and (count == 1 or finished):
+            updates["end_time"] = str(max(ends))
+        for i, info in enumerate(infos):
+            if info.get("results_location"):
+                key = ("results_location" if count == 1
+                       else f"results_location_{i}")
+                updates[key] = info["results_location"]
+        self._push(updates)
 
-            if kill_requested and adapter.supports(B.Capability.CANCEL):
-                can_cancel_queued = adapter.supports(B.Capability.CANCEL_QUEUED)
-                for jid, st in zip(ids, states):
-                    if jid in kill_sent or st in (DONE, FAILED, KILLED):
-                        continue
-                    if st == SUBMITTED and not can_cancel_queued:
-                        continue  # dialect can't kill queued jobs; wait for RUNNING
-                    try:
-                        adapter.cancel(jid)
-                        kill_sent.add(jid)
-                    except TransportError:
-                        pass  # retry next poll
+        if kill_requested and adapter.supports(B.Capability.CANCEL):
+            can_cancel_queued = adapter.supports(B.Capability.CANCEL_QUEUED)
+            for jid, st in zip(ids, states):
+                if jid in self._kill_sent or st in (DONE, FAILED, KILLED):
+                    continue
+                if st == SUBMITTED and not can_cancel_queued:
+                    continue  # dialect can't kill queued jobs; wait for RUNNING
+                try:
+                    adapter.cancel(jid)
+                    self._kill_sent.add(jid)
+                except TransportError:
+                    pass  # retry next poll
 
-            if finished:
-                if agg == DONE:
-                    self._finalize_outputs(adapter, ids, cm_now)
-                    self._exit(0)
-                else:
-                    self._exit(1)
-                return
+        if finished:
+            if agg == DONE:
+                self._finalize_outputs(adapter, ids, cm_now)
+                self._exit(0)
+            else:
+                self._exit(1)
+            return True
+        return False
 
     @staticmethod
     def _aggregate_message(states: list, infos: list) -> str:
@@ -414,6 +444,82 @@ class ControllerPod:
                     uploaded.append(f"{bucket}:{prefix}/{name}")
         if uploaded:
             self.cm.update({"outputs": ",".join(uploaded)})
+
+    def _exit(self, code: int) -> None:
+        self.exit_code = code
+
+
+class ControllerPod:
+    # pod phases (Kubernetes-like)
+    PENDING = "Pending"
+    RUNNING_PHASE = "Running"
+    SUCCEEDED = "Succeeded"
+    FAILED_PHASE = "Failed"
+    KILLED_PHASE = "Killed"   # external kill (node loss) — operator restarts
+
+    def __init__(self, name: str, configmap: ConfigMap, secrets: SecretStore,
+                 objectstore: ObjectStore, directory: ResourceManagerDirectory,
+                 adapters: Mapping[str, Type[B.ResourceAdapter]],
+                 min_sleep: float = 0.005):
+        self.name = name
+        self.cm = configmap
+        self.min_sleep = min_sleep
+        self.phase = self.PENDING
+        self.exit_code: Optional[int] = None
+        self.error: str = ""
+        self._killed = threading.Event()
+        self._proto = JobProtocol(
+            name, configmap, secrets, objectstore, directory, adapters,
+            checkpoint=self._checkpoint, sleep=self._sleep,
+            min_sleep=min_sleep)
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"pod-{name}")
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def kill_pod(self) -> None:
+        """Simulate pod/node failure: abort without flushing state."""
+        self._killed.set()
+
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)
+
+    # -- internals ----------------------------------------------------------
+
+    def _checkpoint(self) -> None:
+        """Action boundary: a killed pod dies here, state unflushed."""
+        if self._killed.is_set():
+            raise PodKilled(self.name)
+
+    def _sleep(self, seconds: float) -> None:
+        killable_sleep(self._killed, self.name, seconds, self.min_sleep)
+
+    def _run(self) -> None:
+        self.phase = self.RUNNING_PHASE
+        try:
+            self._main()
+        except PodKilled:
+            self.phase = self.KILLED_PHASE
+        except Exception as e:  # pod crash (bug/unhandled) — operator restarts
+            self.error = f"{type(e).__name__}: {e}"
+            self.phase = self.KILLED_PHASE
+
+    def _main(self) -> None:
+        proto = self._proto
+        if not proto.start():
+            self._exit(proto.exit_code)
+            return
+        while True:
+            self._sleep(proto.poll)
+            if proto.tick():
+                self._exit(proto.exit_code)
+                return
 
     def _exit(self, code: int) -> None:
         self.exit_code = code

@@ -1,0 +1,227 @@
+"""MonitorRuntime — the multiplexed control plane (ROADMAP "batch reconcile").
+
+The paper's design (§5.1, Figs. 2-3) is one controller pod per remote job;
+the thread-per-CR ``ControllerPod`` mirrors it literally, which costs N
+threads for N CRs.  Related systems multiplex instead — the Flux Operator
+drives whole job ensembles through a single reconciler, and HPK funnels many
+cloud-native workloads through one HPC-side agent — and this runtime makes
+the same move: a SMALL FIXED pool of worker threads steps many jobs'
+``JobProtocol`` state machines (controller.py) off a poll-deadline heap.
+
+Semantics are identical to pod-per-CR by construction: the same protocol
+object runs the same Fig.-2 submit-if-no-id and Fig.-3 monitor tick, the
+config map stays the only durable state, and ``MonitorTask`` exposes the
+same surface the operator already manages (``kill_pod``/``alive``/``phase``/
+``error``/``exit_code``), so restart, kill, and resume flow through
+unchanged.  ``kill_pod()`` still means "node failure": the task dies at its
+next action boundary without flushing, and a replacement task resumes from
+the config map without resubmitting.
+
+What changes is the cost model: monitor threads = pool size (not CR count),
+and one poll tick costs one heap pop + one (batched) status request instead
+of a per-CR wakeup — see benchmarks/bridge_scale.py and docs/perf.md.
+
+Known tradeoff: IN-STEP waits (submit retries, spec.retry backoff) block a
+pool worker for their duration — only the inter-tick wait is heap-scheduled.
+Workloads configuring long ``retry.backoff_seconds`` should size
+``monitor_workers`` for the expected number of simultaneously-backing-off
+jobs, or use ``mode="pod-per-cr"`` where one job can only ever stall its
+own thread.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import List, Mapping, Optional, Tuple, Type
+
+from repro.core.backends import base as B
+from repro.core.controller import (ControllerPod, JobProtocol, PodKilled,
+                                   killable_sleep)
+from repro.core.objectstore import ObjectStore
+from repro.core.rest import ResourceManagerDirectory
+from repro.core.secrets import SecretStore
+from repro.core.statestore import ConfigMap
+
+
+class MonitorTask:
+    """One job's seat in the runtime: a virtual controller pod.
+
+    Drop-in for ``ControllerPod`` from the operator's point of view — same
+    phases, same kill/alive/join surface — but stepped by the runtime's
+    worker pool instead of owning a thread.
+    """
+
+    def __init__(self, runtime: "MonitorRuntime", name: str,
+                 configmap: ConfigMap, secrets: SecretStore,
+                 objectstore: ObjectStore,
+                 directory: ResourceManagerDirectory,
+                 adapters: Mapping[str, Type[B.ResourceAdapter]],
+                 min_sleep: float = 0.005):
+        self.name = name
+        self.cm = configmap
+        self.min_sleep = min_sleep
+        self.phase = ControllerPod.PENDING
+        self.exit_code: Optional[int] = None
+        self.error: str = ""
+        self._runtime = runtime
+        self._killed = threading.Event()
+        self._done = threading.Event()
+        self._started = False
+        # serializes steps: the kill_pod() wake-up entry must never declare
+        # the task dead while another worker is still mid-step (the operator
+        # would restart a replacement against a config map the stale step
+        # can still write — the double-submission ControllerPod's
+        # thread-liveness semantics rule out)
+        self._step_lock = threading.Lock()
+        self._proto = JobProtocol(
+            name, configmap, secrets, objectstore, directory, adapters,
+            checkpoint=self._checkpoint, sleep=self._sleep,
+            min_sleep=min_sleep)
+
+    # -- the ControllerPod surface the operator manages -------------------
+
+    def kill_pod(self) -> None:
+        """Simulate pod/node failure: die at the next action boundary,
+        nothing flushed.  Rescheduled immediately so the death is observed
+        (and the operator can restart) without waiting a full poll period."""
+        self._killed.set()
+        self._runtime.schedule(self, 0.0)
+
+    def alive(self) -> bool:
+        return not self._done.is_set()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._done.wait(timeout)
+
+    # -- protocol hooks ----------------------------------------------------
+
+    def _checkpoint(self) -> None:
+        if self._killed.is_set():
+            raise PodKilled(self.name)
+
+    def _sleep(self, seconds: float) -> None:
+        """In-step backoff (submit/retry): blocks one pool worker, bounded
+        by the spec's backoff — the inter-tick wait is the heap's job."""
+        killable_sleep(self._killed, self.name, seconds, self.min_sleep)
+
+    # -- stepping (runtime workers only) -----------------------------------
+
+    def _step(self) -> Optional[float]:
+        """Advance the protocol by one action.  Returns the delay until the
+        next step, or None when this task is finished for good."""
+        if not self._step_lock.acquire(blocking=False):
+            # another worker is mid-step (a kill_pod() wake-up racing a
+            # running tick): retry shortly rather than stepping concurrently
+            return self.min_sleep
+        try:
+            if self._done.is_set():
+                return None  # e.g. the kill_pod() wake-up entry of a dead task
+            try:
+                self._checkpoint()
+                if not self._started:
+                    self._started = True
+                    self.phase = ControllerPod.RUNNING_PHASE
+                    if not self._proto.start():
+                        self._finish()
+                        return None
+                    return self._proto.poll
+                if self._proto.tick():
+                    self._finish()
+                    return None
+                return self._proto.poll
+            except PodKilled:
+                self.phase = ControllerPod.KILLED_PHASE
+                self._done.set()
+                return None
+            except Exception as e:  # task crash — the operator restarts it
+                self.error = f"{type(e).__name__}: {e}"
+                self.phase = ControllerPod.KILLED_PHASE
+                self._done.set()
+                return None
+        finally:
+            self._step_lock.release()
+
+    def _finish(self) -> None:
+        self.exit_code = self._proto.exit_code
+        self.phase = (ControllerPod.SUCCEEDED if self.exit_code == 0
+                      else ControllerPod.FAILED_PHASE)
+        self._done.set()
+
+
+class MonitorRuntime:
+    """Fixed worker pool + poll-deadline heap driving many MonitorTasks."""
+
+    def __init__(self, workers: int = 4, name: str = "bridge-monitor"):
+        self.workers = workers
+        self.name = name
+        self._heap: List[Tuple[float, int, MonitorTask]] = []
+        self._seq = itertools.count()
+        self._cv = threading.Condition()
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "MonitorRuntime":
+        if self._threads:
+            return self
+        self._stop.clear()
+        for i in range(self.workers):
+            t = threading.Thread(target=self._worker, daemon=True,
+                                 name=f"{self.name}-w{i}")
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, timeout: float = 2.0) -> None:
+        self._stop.set()
+        with self._cv:
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=timeout)
+        self._threads = []
+
+    def thread_count(self) -> int:
+        """Live monitor threads — pool size, independent of task count."""
+        return sum(1 for t in self._threads if t.is_alive())
+
+    # -- task management ---------------------------------------------------
+
+    def spawn(self, name: str, configmap: ConfigMap, secrets: SecretStore,
+              objectstore: ObjectStore, directory: ResourceManagerDirectory,
+              adapters: Mapping[str, Type[B.ResourceAdapter]],
+              min_sleep: float = 0.005) -> MonitorTask:
+        """Register one job with the runtime; its first step (Fig. 2
+        connect+submit) is due immediately."""
+        task = MonitorTask(self, name, configmap, secrets, objectstore,
+                           directory, adapters, min_sleep=min_sleep)
+        self.schedule(task, 0.0)
+        return task
+
+    def schedule(self, task: MonitorTask, delay: float) -> None:
+        with self._cv:
+            heapq.heappush(self._heap,
+                           (time.time() + delay, next(self._seq), task))
+            self._cv.notify()
+
+    # -- workers -----------------------------------------------------------
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                task = None
+                while not self._stop.is_set():
+                    now = time.time()
+                    if self._heap and self._heap[0][0] <= now:
+                        _, _, task = heapq.heappop(self._heap)
+                        break
+                    wait = (min(self._heap[0][0] - now, 0.2)
+                            if self._heap else 0.2)
+                    self._cv.wait(wait)
+                if task is None:
+                    return  # stopped
+            delay = task._step()
+            if delay is not None:
+                self.schedule(task, delay)

@@ -18,6 +18,17 @@ The operator is GENERIC: nothing here knows which resource manager is behind
 a job — that knowledge lives in the controller-pod adapter chosen by
 ``spec.image`` (paper: "the operator is generic, implementation of a
 controller pod is specific for a given external resource manager").
+
+Two execution modes share these semantics (``mode=`` kwarg):
+
+  * ``"multiplexed"`` (default) — jobs run as ``MonitorTask``s on one shared
+    ``MonitorRuntime`` (core/monitor.py): monitor threads = pool size, not
+    CR count.  The scalable shape for large arrays / many CRs.
+  * ``"pod-per-cr"`` — the paper-faithful one-``ControllerPod``-thread-per-CR
+    fallback.
+
+Both populate ``self.pods`` with objects sharing the ControllerPod surface,
+so restart / kill / resume / delete flow through identical code paths.
 """
 from __future__ import annotations
 
@@ -29,6 +40,7 @@ from typing import Dict, Mapping, Optional, Type
 
 from repro.core.backends import base as B
 from repro.core.controller import ControllerPod
+from repro.core.monitor import MonitorRuntime
 from repro.core.objectstore import ObjectStore
 from repro.core.registry import ResourceRegistry
 from repro.core.resource import (ALL_STATES, BridgeJob, DONE, FAILED, KILLED,
@@ -58,7 +70,11 @@ class BridgeOperator:
                  adapters: Optional[Mapping[str, Type[B.ResourceAdapter]]] = None,
                  reconcile_interval: float = 0.02,
                  max_restarts: Optional[int] = None,
-                 pod_min_sleep: float = 0.005):
+                 pod_min_sleep: float = 0.005,
+                 mode: str = "multiplexed",
+                 monitor_workers: int = 4):
+        if mode not in ("multiplexed", "pod-per-cr"):
+            raise ValueError(f"unknown operator mode {mode!r}")
         self.registry = registry
         self.statestore = statestore
         self.secrets = secrets
@@ -68,6 +84,10 @@ class BridgeOperator:
         self.reconcile_interval = reconcile_interval
         self.max_restarts = max_restarts
         self.pod_min_sleep = pod_min_sleep
+        self.mode = mode
+        self.runtime: Optional[MonitorRuntime] = (
+            MonitorRuntime(workers=monitor_workers)
+            if mode == "multiplexed" else None)
         self.pods: Dict[str, ControllerPod] = {}
         self._events: "queue.Queue" = None
         self._stop = threading.Event()
@@ -79,6 +99,8 @@ class BridgeOperator:
     # -- lifecycle --------------------------------------------------------
 
     def start(self) -> "BridgeOperator":
+        if self.runtime is not None:
+            self.runtime.start()
         self._events = self.registry.watch(include_existing=True)
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="bridge-operator")
@@ -90,8 +112,17 @@ class BridgeOperator:
         if self._thread:
             self._thread.join(timeout=2)
         self.registry.unwatch(self._events)
-        for pod in self.pods.values():
+        # snapshot under the lock: the reconcile thread (if its join timed
+        # out above) may still pop entries via _finalize_delete, and
+        # iterating the live dict would crash with dict-changed-size
+        with self._lock:
+            pods = list(self.pods.values())
+        for pod in pods:
             pod.kill_pod()
+        for pod in pods:
+            pod.join(timeout=1.0)  # bounded: pods die at a checkpoint
+        if self.runtime is not None:
+            self.runtime.stop()
 
     # -- naming ----------------------------------------------------------------
 
@@ -206,31 +237,50 @@ class BridgeOperator:
 
     def _spawn_pod(self, job: BridgeJob) -> None:
         cm = self.statestore.get(self.cm_name(job))
+        if self.runtime is not None:
+            pod = self.runtime.spawn(
+                name=f"{job.uid}-pod", configmap=cm, secrets=self.secrets,
+                objectstore=self.s3, directory=self.directory,
+                adapters=self.adapters, min_sleep=self.pod_min_sleep)
+            with self._lock:
+                self.pods[job.uid] = pod
+            return
         pod = ControllerPod(
             name=f"{job.uid}-pod", configmap=cm, secrets=self.secrets,
             objectstore=self.s3, directory=self.directory,
             adapters=self.adapters, min_sleep=self.pod_min_sleep)
-        self.pods[job.uid] = pod
+        with self._lock:
+            self.pods[job.uid] = pod
         pod.start()
 
     # -- periodic sweep: status mirroring + pod restart -------------------------
 
     def _sweep(self) -> None:
-        for job in self.registry.list():
+        jobs = self.registry.list()
+        # reverse-dependency index, built ONCE per pass (the old shape —
+        # registry.list() per terminal job — made every sweep O(N²)):
+        # namespace -> names some live sibling still depends on
+        live_deps: Dict[str, set] = {}
+        for j in jobs:
+            if not j.deleted and not j.status.terminal() and j.spec.dependencies:
+                live_deps.setdefault(j.namespace, set()).update(
+                    j.spec.dependencies)
+        for job in jobs:
             if job.deleted:
                 self._finalize_delete(job)
                 continue
             pod = self.pods.get(job.uid)
             if pod is None:
                 self._ensure_started(job)
-                self._maybe_ttl_gc(job)
+                self._maybe_ttl_gc(job, live_deps)
                 continue
             self._mirror_status(job)
             if not pod.alive():
                 self._handle_pod_exit(job, pod)
-            self._maybe_ttl_gc(job)
+            self._maybe_ttl_gc(job, live_deps)
 
-    def _maybe_ttl_gc(self, job: BridgeJob) -> None:
+    def _maybe_ttl_gc(self, job: BridgeJob,
+                      live_deps: Mapping[str, set]) -> None:
         """v1beta1 ttlSecondsAfterFinished: auto-delete terminal CRs."""
         ttl = job.spec.ttl_seconds_after_finished
         if ttl is None or not job.status.terminal():
@@ -240,10 +290,8 @@ class BridgeOperator:
             return
         # hold the GC while a live sibling still depends on this CR — deleting
         # it would leave the dependent waiting on an absent job forever
-        for other in self.registry.list(job.namespace):
-            if (not other.deleted and not other.status.terminal()
-                    and job.name in other.spec.dependencies):
-                return
+        if job.name in live_deps.get(job.namespace, ()):
+            return
         self.registry.delete(job.name, job.namespace)
 
     def _mirror_status(self, job: BridgeJob) -> None:

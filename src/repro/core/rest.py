@@ -15,6 +15,7 @@ import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
+from urllib.parse import parse_qsl
 
 
 class TransportError(ConnectionError):
@@ -40,6 +41,11 @@ class FaultProfile:
     # hard outage window: every request fails while ``outage`` is set
     _outage: threading.Event = field(default_factory=threading.Event, repr=False)
     _rng: random.Random = field(default=None, repr=False)
+    # one shared seeded Random serves every concurrent caller; the lock keeps
+    # each check() consuming exactly one draw so drop injection stays
+    # deterministic however many pods/workers hit the server at once
+    _rng_lock: threading.Lock = field(default_factory=threading.Lock,
+                                      repr=False)
 
     def __post_init__(self):
         self._rng = random.Random(self.seed)
@@ -55,8 +61,11 @@ class FaultProfile:
             time.sleep(self.latency)
         if self._outage.is_set():
             raise TransportError("simulated network outage")
-        if self.drop_rate and self._rng.random() < self.drop_rate:
-            raise TransportError("simulated packet loss")
+        if self.drop_rate:
+            with self._rng_lock:
+                drop = self._rng.random() < self.drop_rate
+            if drop:
+                raise TransportError("simulated packet loss")
 
 
 Handler = Callable[[Dict[str, str], Any], HttpResponse]
@@ -87,13 +96,17 @@ class RestServer:
             auth = headers.get("Authorization", "")
             if auth != f"Bearer {self._token}":
                 return HttpResponse(401, {"error": "unauthorized"})
+        # query string: merged into the handler's groups dict (path groups
+        # win on collision), so 'GET /jobs?ids=a,b' routes like 'GET /jobs'
+        path, _, query = path.partition("?")
+        params = dict(parse_qsl(query)) if query else {}
         for m, rx, handler in self._routes:
             if m != method.upper():
                 continue
             match = rx.match(path)
             if match:
                 try:
-                    return handler(match.groupdict(), json_body)
+                    return handler({**params, **match.groupdict()}, json_body)
                 except Exception as e:  # backend bug -> 500, not a crash
                     return HttpResponse(500, {"error": f"{type(e).__name__}: {e}"})
         return HttpResponse(404, {"error": f"no route {method} {path}"})
