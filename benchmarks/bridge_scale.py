@@ -109,6 +109,54 @@ def run_case(mode: str, count: int = 1, crs: int = 1, *, batched: bool = True,
         JobProtocol.COALESCE_WRITES = prev_coalesce
 
 
+def run_resize_case(mode: str, start: int, up: int, down: int, *,
+                    interval: float = 0.02) -> dict:
+    """Elastic-array resize scenario: scale a live ``start``-index array to
+    ``up`` then ``down``, measuring the reconcile latency of each patch and
+    checking the exact submit/cancel delta (no live index resubmitted)."""
+    env = BridgeEnvironment(slots=4, default_duration=600,
+                            operator_kwargs={"mode": mode})
+    try:
+        env.start()
+        srv = env.servers["slurm"]
+        h = env.bridge.submit("resize", env.make_spec(
+            "slurm", script="bench", updateinterval=interval,
+            jobproperties={"WallSeconds": "600"},
+            array=ArraySpec(count=start)))
+        deadline = time.time() + 120
+        while (len([s for s in h.status().job_id.split(",") if s]) < start
+               and time.time() < deadline):
+            time.sleep(0.005)
+        req0 = srv.request_count
+        t0 = time.time()
+        h.scale(up)
+        h.wait_reconciled(timeout=120)
+        t_up = time.time() - t0
+        t0 = time.time()
+        h.scale(down)
+        h.wait_reconciled(timeout=120)
+        t_down = time.time() - t0
+        jobs = env.clusters["slurm"].jobs
+        live = sum(1 for j in jobs.values()
+                   if j.state in (B.QUEUED, B.RUNNING))
+        cancelled = sum(1 for j in jobs.values() if j.state == B.CANCELLED)
+        if len(jobs) != up or cancelled != up - down or live != down:
+            raise RuntimeError(
+                f"resize delta wrong: {len(jobs)} submitted (want {up}), "
+                f"{cancelled} cancelled (want {up - down}), {live} live "
+                f"(want {down})")
+        return {
+            "label": f"{mode}/resize-{start}-{up}-{down}",
+            "mode": mode, "start": start, "up": up, "down": down,
+            "scale_up_latency_s": round(t_up, 3),
+            "scale_down_latency_s": round(t_down, 3),
+            "rest_requests": srv.request_count - req0,
+            "submitted_total": len(jobs), "cancelled_total": cancelled,
+        }
+    finally:
+        env.stop()
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -120,18 +168,20 @@ def main() -> int:
     if args.smoke:
         counts, cr_counts = [1, 16], [1, 8]
         array_dur, interval, cr_dur, single_repeats = 0.5, 0.01, 0.2, 1
+        resize = (8, 16, 2)
     else:
         counts, cr_counts = [1, 64, 256], [1, 16, 64]
         # jobs long enough that the run is dominated by steady-state RUNNING
         # ticks (the hot path being optimised), not the start/end ramps
         array_dur, interval, cr_dur, single_repeats = 4.0, 0.01, 0.3, 9
+        resize = (32, 48, 8)
     baseline_count = counts[-1]
 
     results = {"smoke": args.smoke,
                "config": {"interval": interval, "array_duration_s": array_dur,
                           "batch_status_chunk": BATCH_STATUS_CHUNK},
                "array_scaling": [], "baselines": [], "cr_scaling": [],
-               "single_job": []}
+               "single_job": [], "resize": []}
 
     print("== array scaling (one CR, N indices) ==")
     for mode in MODES:
@@ -162,6 +212,14 @@ def main() -> int:
             results["cr_scaling"].append(r)
             print(f"  {r['label']:<24} threads={r['monitor_threads_peak']:>3} "
                   f"wall={r['wall_time_s']:>6.2f}s")
+
+    print("== elastic resize (delta submit/cancel latency) ==")
+    for mode in MODES:
+        r = run_resize_case(mode, *resize)
+        results["resize"].append(r)
+        print(f"  {r['label']:<24} up={r['scale_up_latency_s']:>6.3f}s "
+              f"down={r['scale_down_latency_s']:>6.3f}s "
+              f"req={r['rest_requests']:>4}")
 
     print("== single-job wall time (latency regression guard) ==")
     for mode in MODES:
@@ -199,6 +257,9 @@ def main() -> int:
             [str(c) for c in cr_counts], mux_threads)),
         "single_job_wall_s": {r["mode"]: r["wall_time_s_median"]
                               for r in results["single_job"]},
+        "resize_latency_s": {r["mode"]: {"up": r["scale_up_latency_s"],
+                                         "down": r["scale_down_latency_s"]}
+                             for r in results["resize"]},
     }
 
     out = os.path.abspath(args.out)

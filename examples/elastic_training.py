@@ -4,7 +4,9 @@
      resubmission with the same workdir resumes from the last checkpoint,
   2. the controller POD is killed mid-run; the operator restarts it and the
      new pod re-attaches to the running job (no resubmission),
-  3. straggler mitigation: the load-aware scheduler launches the payload
+  3. an elastic job array is resized while running (scale 4 -> 8 -> 2);
+     the operator submits/cancels exactly the delta,
+  4. straggler mitigation: the load-aware scheduler launches the payload
      speculatively on the two least-loaded backends and keeps the winner.
 
   PYTHONPATH=src python examples/elastic_training.py
@@ -12,7 +14,7 @@
 import json
 import time
 
-from repro.core import (BridgeEnvironment, Candidate, DONE, FAILED,
+from repro.core import (ArraySpec, BridgeEnvironment, Candidate, DONE, FAILED,
                         IMAGES, KILLED, LoadAwareScheduler, RUNNING, URLS)
 
 
@@ -65,7 +67,33 @@ def main() -> None:
               f"same remote id={job.status.job_id == first_id}")
         assert job.status.state == DONE and job.status.job_id == first_id
 
-        # -- 3: speculative execution ---------------------------------------
+        # -- 3: elastic job array — resize a live ensemble -------------------
+        members = env.make_spec("slurm", script="ensemble member",
+                                updateinterval=0.02,
+                                jobproperties={"WallSeconds": "30"},
+                                array=ArraySpec(count=4))
+        h = env.bridge.submit("ensemble", members)
+        deadline = time.time() + 60
+        while len([s for s in h.status().job_id.split(",") if s]) < 4:
+            assert not h.status().terminal(), h.status().message
+            assert time.time() < deadline, "ensemble fan-out timed out"
+            time.sleep(0.02)
+        h.scale(8)                       # grow: submits indices 4..7 only
+        job = h.wait_reconciled(timeout=60)
+        n_up = len(job.status.job_id.split(","))
+        h.scale(2)                       # shrink: cancels indices 2..7
+        job = h.wait_reconciled(timeout=60)
+        n_down = len(job.status.job_id.split(","))
+        cancelled = sum(1 for j in env.clusters["slurm"].jobs.values()
+                        if j.state == "CANCELLED")
+        print(f"3.  elastic array 4 -> {n_up} -> {n_down} "
+              f"(generation={job.generation}, observed="
+              f"{job.status.observed_generation}, {cancelled} cancelled)")
+        assert (n_up, n_down) == (8, 2) and cancelled == 6
+        assert job.status.observed_generation == job.generation
+        h.cancel()
+
+        # -- 4: speculative execution ---------------------------------------
         env.clusters["slurm"].default_duration = 8.0  # slurm = straggler
         sched = LoadAwareScheduler(
             env.bridge,
@@ -75,7 +103,7 @@ def main() -> None:
                              updateinterval=0.05)
         t0 = time.time()
         winner = sched.submit_speculative("spec", base, n=2, timeout=60)
-        print(f"3.  speculative winner: {winner.spec.resourceURL} "
+        print(f"4.  speculative winner: {winner.spec.resourceURL} "
               f"in {time.time()-t0:.2f}s (straggler was killed)")
         assert winner.status.state == DONE
         print("elastic training demo complete")

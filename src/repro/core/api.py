@@ -20,14 +20,17 @@ future distributed one — clients are unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, Iterator, Mapping, Optional, Type
+from typing import (Callable, Dict, FrozenSet, Iterator, Mapping, Optional,
+                    Type)
 
 from repro.core.backends import base as B
 from repro.core.objectstore import ObjectStore
 from repro.core.registry import ResourceRegistry
-from repro.core.resource import (BridgeJob, BridgeJobSpec, BridgeJobStatus,
+from repro.core.resource import (ArraySpec, BridgeJob, BridgeJobSpec,
+                                 BridgeJobStatus, ValidationError,
                                  spec_from_dict)
 from repro.core.rest import ResourceManagerDirectory
 from repro.core.secrets import SecretStore
@@ -60,6 +63,22 @@ class JobHandle:
 
     def cancel(self) -> None:
         self.bridge.cancel(self.name, self.namespace)
+
+    def patch(self, mutate: Callable[[BridgeJobSpec], BridgeJobSpec]) -> "JobHandle":
+        """Patch the live CR's mutable spec fields (see ``Bridge.patch``)."""
+        return self.bridge.patch(self.name, mutate, self.namespace)
+
+    def scale(self, count: int) -> "JobHandle":
+        """Resize a running job array to ``count`` indices (elastic arrays);
+        the operator submits/cancels exactly the delta."""
+        return self.bridge.scale(self.name, count, self.namespace)
+
+    def wait_reconciled(self, timeout: float = 30.0) -> BridgeJob:
+        """Block until ``status.observedGeneration`` catches up with
+        ``metadata.generation`` (the last patch is fully applied) or the job
+        turns terminal."""
+        return self.bridge.wait_reconciled(self.name, self.namespace,
+                                           timeout=timeout)
 
     def outputs(self) -> Dict[str, bytes]:
         return self.bridge.outputs(self.name, self.namespace)
@@ -150,10 +169,86 @@ class Bridge:
 
     def cancel(self, name: str, namespace: str = "default") -> None:
         """User-facing kill signal: update the CR (paper §5.1)."""
-        import dataclasses
-
         self.registry.update_spec(
             name, lambda s: dataclasses.replace(s, kill=True), namespace)
+
+    # -- elastic arrays: spec patches on a live CR -------------------------
+
+    def patch(self, name: str,
+              mutate: Callable[[BridgeJobSpec], BridgeJobSpec],
+              namespace: str = "default") -> JobHandle:
+        """Patch MUTABLE spec fields of a live CR (kubectl patch analogue).
+
+        Only ``spec.array`` (count + indexed_params) and ``spec.kill`` are
+        mutable after creation; changing anything else — or patching a
+        terminal CR — raises ``ValidationError``.  Every accepted patch bumps
+        ``metadata.generation``; the reconciler reports convergence through
+        ``status.observedGeneration`` (await it via ``wait_reconciled``).
+        """
+        if self.registry.get(name, namespace) is None:
+            raise KeyError(f"BridgeJob {namespace}/{name} not found")
+
+        def guarded(spec: BridgeJobSpec) -> BridgeJobSpec:
+            # runs under the registry lock (update_spec holds it; the re-get
+            # re-enters the RLock), so a patch racing the job's terminal
+            # transition is rejected atomically, not silently accepted
+            cur = self.registry.get(name, namespace)
+            if cur is not None and cur.status.terminal():
+                raise ValidationError(
+                    f"cannot patch terminal BridgeJob {namespace}/{name} "
+                    f"({cur.status.state})")
+            new = mutate(spec)
+            if dataclasses.replace(new, array=spec.array,
+                                   kill=spec.kill) != spec:
+                raise ValidationError(
+                    "only spec.array and spec.kill are mutable on a live "
+                    "BridgeJob")
+            return new
+
+        self.registry.update_spec(name, guarded, namespace)
+        return self.handle(name, namespace)
+
+    def scale(self, name: str, count: int,
+              namespace: str = "default") -> JobHandle:
+        """Resize a live array to ``count`` indices.  ``indexed_params`` (if
+        used) is truncated / padded with empty overlays to match; the
+        operator then submits or cancels exactly the delta — scale-down
+        cancels the highest indices first."""
+        if count < 1:
+            raise ValidationError("array count must be >= 1")
+
+        def mutate(s: BridgeJobSpec) -> BridgeJobSpec:
+            arr = s.array or ArraySpec()
+            params = list(arr.indexed_params)
+            if params:
+                params = (params + [{} for _ in
+                                    range(count - len(params))])[:count]
+            return dataclasses.replace(
+                s, array=ArraySpec(count=count, indexed_params=params))
+
+        return self.patch(name, mutate, namespace)
+
+    def wait_reconciled(self, name: str, namespace: str = "default",
+                        timeout: float = 30.0) -> BridgeJob:
+        """Block until ``status.observedGeneration >= metadata.generation``
+        (the last spec patch is fully applied) or the job turns terminal."""
+        deadline = time.time() + timeout
+        while True:  # always check at least once, even with timeout <= 0
+            job = self.registry.get(name, namespace)
+            if job is None:
+                # absent (or deleted mid-wait): it can never reconcile —
+                # fail fast like patch/scale instead of burning the timeout
+                raise KeyError(f"BridgeJob {namespace}/{name} not found")
+            if (job.status.observed_generation >= job.generation
+                    or job.status.terminal()):
+                return job
+            if time.time() >= deadline:
+                break
+            time.sleep(0.01)
+        raise TimeoutError(
+            f"BridgeJob {namespace}/{name} not reconciled after {timeout}s "
+            f"(generation={job.generation}, observed="
+            f"{job.status.observed_generation})")
 
     def delete(self, name: str, namespace: str = "default") -> None:
         self.registry.delete(name, namespace)

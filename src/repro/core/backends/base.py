@@ -241,18 +241,25 @@ class SimulatedCluster:
             return self.jobs.get(job_id)
 
     def cancel(self, job_id: str) -> bool:
+        return self.cancel_if_live(job_id) != "absent"
+
+    def cancel_if_live(self, job_id: str) -> str:
+        """Cancel with the state race resolved ATOMICALLY under the lock:
+        returns "absent", "terminal" (the job finished before the cancel
+        landed — REST facades answer 409 Conflict, not 500), or "cancelled".
+        """
         with self._lock:
             job = self.jobs.get(job_id)
             if job is None:
-                return False
+                return "absent"
             if job.state in TERMINAL:
-                return True
+                return "terminal"
             if job.state == QUEUED:
                 job.state = CANCELLED
                 job.end_time = time.time()
-                return True
+                return "cancelled"
         job._cancel.set()
-        return True
+        return "cancelled"
 
     def queue_load(self) -> Dict[str, int]:
         with self._lock:

@@ -75,8 +75,14 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         return HttpResponse(200, {"jobs": records})
 
     def kill(groups, _body) -> HttpResponse:
-        ok = cluster.cancel(groups["id"])
-        return HttpResponse(200 if ok else 404, {})
+        # bkill of an already-finished job: 409 Conflict (the kill lost the
+        # race against the terminal transition), never a 500
+        outcome = cluster.cancel_if_live(groups["id"])
+        if outcome == "absent":
+            return HttpResponse(404, {"error": "Job not found"})
+        if outcome == "terminal":
+            return HttpResponse(409, {"error": "Job already finished"})
+        return HttpResponse(200, {})
 
     def upload(groups, body) -> HttpResponse:
         cluster.upload(groups["name"], base64.b64decode(body["data"]))

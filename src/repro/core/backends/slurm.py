@@ -79,8 +79,14 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         return HttpResponse(200, {"jobs": records})
 
     def cancel(groups, _body) -> HttpResponse:
-        ok = cluster.cancel(groups["id"])
-        return HttpResponse(200 if ok else 404, {})
+        # scancel of an already-finished job: 409 Conflict (the cancel lost
+        # the race against the terminal transition), never a 500
+        outcome = cluster.cancel_if_live(groups["id"])
+        if outcome == "absent":
+            return HttpResponse(404, {"error": "job not found"})
+        if outcome == "terminal":
+            return HttpResponse(409, {"error": "job already terminal"})
+        return HttpResponse(200, {})
 
     def ping(_groups, _body) -> HttpResponse:
         return HttpResponse(200, {"pings": [{"ping": "UP"}]})

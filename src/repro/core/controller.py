@@ -117,7 +117,12 @@ class JobProtocol:
         self._backoff = 0.0
         self._attempts: Dict[str, int] = {}
         self._consecutive_failures = 0
-        self._kill_sent: set = set()
+        # jids a cancel has been delivered for (kill signal OR scale-down)
+        self._cancel_sent: set = set()
+        # jids condemned by an elastic scale-down: always a SUFFIX of _ids;
+        # they stay tracked (and polled) until terminal, then drop off the
+        # tail together with their per-index config-map keys
+        self._condemned: set = set()
         # last monitor-written snapshot, for write-coalescing
         self._last_pushed: Dict[str, str] = {}
 
@@ -201,16 +206,8 @@ class JobProtocol:
                          for i in range(count)])
                     self.cm.update({"id": ",".join(ids)})
                 else:
-                    # facade-side fan-out: one submit per index, flushed
-                    # incrementally so a pod killed mid-fan-out resumes at
-                    # the next unsubmitted index instead of duplicating
-                    while len(ids) < count:
-                        self._checkpoint()
-                        jid = adapter.submit(
-                            script, properties,
-                            self._index_params(cm_data, len(ids), count))
-                        ids.append(jid)
-                        self.cm.update({"id": ",".join(ids)})
+                    self._fanout_submit(adapter, cm_data, ids, count,
+                                        script, properties)
                 break
             except (B.SubmitError, TransportError, NoSuchKey, KeyError,
                     ValueError) as e:
@@ -228,6 +225,25 @@ class JobProtocol:
         self.cm.update({"id": ",".join(ids), "jobStatus": SUBMITTED,
                         "submit_time": str(time.time()), "message": ""})
         return ids
+
+    def _fanout_submit(self, adapter: B.ResourceAdapter,
+                       cm_data: Dict[str, str], ids: List[str], count: int,
+                       script: str, properties: Dict[str, str]) -> None:
+        """Facade-side fan-out: one submit per missing index, with the ``id``
+        list flushed incrementally after EACH submission so a pod killed
+        mid-fan-out (initial, resumed, or mid-scale-up) resumes at the next
+        unsubmitted index instead of duplicating a live one.  Arrays go
+        through resubmit_index so native dialects stamp their index marker
+        even on a resumed fan-out."""
+        while len(ids) < count:
+            self._checkpoint()
+            idx = len(ids)
+            params = self._index_params(cm_data, idx, count)
+            jid = (adapter.resubmit_index(script, properties, params, idx)
+                   if count > 1
+                   else adapter.submit(script, properties, params))
+            ids.append(jid)
+            self._push({"id": ",".join(ids)})
 
     def _abort_partial(self, adapter: B.ResourceAdapter, ids: list) -> None:
         """Best-effort cancel of indices submitted before an aborted fan-out."""
@@ -297,12 +313,111 @@ class JobProtocol:
             return infos
         return [adapter.status(jid) for jid in ids]
 
+    # -- elastic arrays: spec-patch reconcile (delta submit / cancel) -------
+
+    def _scale_up(self, adapter: B.ResourceAdapter, cm_now: Dict[str, str],
+                  desired: int) -> Optional[str]:
+        """Submit exactly the missing indices [len(ids), desired) via the
+        shared incremental fan-out.  A transient error leaves the remainder
+        for the next tick; the returned stall diagnostic (if any) becomes
+        this tick's status message."""
+        try:
+            self._fanout_submit(
+                adapter, cm_now, self._ids, desired,
+                self._fetch_script(cm_now),
+                json.loads(cm_now.get("jobproperties", "{}")))
+            return None
+        except (B.SubmitError, TransportError, NoSuchKey, KeyError,
+                ValueError) as e:
+            return (f"scale-up to {desired} stalled at "
+                    f"index {len(self._ids)}: {e}")
+
+    def _reconcile_scale(self, adapter: B.ResourceAdapter,
+                         cm_now: Dict[str, str],
+                         desired: int) -> Optional[str]:
+        """Diff desired vs. submitted indices and act on exactly the delta.
+        Scale-down condemns the HIGHEST indices first; scale-up past a still-
+        draining condemned tail waits until the tail is gone (index positions
+        must free up before they are reused).  Returns a stall diagnostic
+        when a scale-up could not complete this tick."""
+        ids = self._ids
+        n_live = len(ids) - len(self._condemned)
+        if desired < n_live:
+            for jid in ids[desired:n_live]:
+                self._condemned.add(jid)
+        elif desired > len(ids) and not self._condemned:
+            return self._scale_up(adapter, cm_now, desired)
+        return None
+
+    def _try_cancel(self, adapter: B.ResourceAdapter, jid: str, state: str,
+                    can_cancel_queued: bool) -> None:
+        """Deliver ONE cancel, capability-gated and at-most-once: skipped for
+        terminal/already-cancelled jobs, deferred for queued jobs the dialect
+        cannot kill in-queue (wait for RUNNING), retried next poll on a
+        transport failure.  Shared by the kill signal and scale-down drain so
+        their delivery semantics cannot diverge."""
+        if jid in self._cancel_sent or state in (DONE, FAILED, KILLED):
+            return
+        if state == SUBMITTED and not can_cancel_queued:
+            return  # dialect can't kill queued jobs; wait for RUNNING
+        try:
+            adapter.cancel(jid)
+            self._cancel_sent.add(jid)
+        except TransportError:
+            pass  # retry next poll
+
+    def _drain_condemned(self, adapter: B.ResourceAdapter, cm_now: Dict[str, str],
+                         states: List[str], infos: List[Dict[str, Any]]) -> None:
+        """Cancel condemned indices (highest first) respecting the adapter's
+        CANCEL / CANCEL_QUEUED capabilities, then pop the terminal condemned
+        tail — GC'ing the per-index config-map keys (retry budget,
+        results_location_{i}) those indices owned."""
+        ids = self._ids
+        can_cancel = adapter.supports(B.Capability.CANCEL)
+        can_cancel_queued = adapter.supports(B.Capability.CANCEL_QUEUED)
+        for i in range(len(ids) - 1, -1, -1):
+            if ids[i] not in self._condemned:
+                break  # condemned jids are a suffix
+            if can_cancel:
+                self._try_cancel(adapter, ids[i], states[i], can_cancel_queued)
+        orphaned: List[str] = []
+        while (ids and ids[-1] in self._condemned
+               and states[-1] in (DONE, FAILED, KILLED)):
+            jid = ids.pop()
+            states.pop()
+            infos.pop()
+            self._condemned.discard(jid)
+            self._cancel_sent.discard(jid)
+            idx = len(ids)
+            orphaned.append(f"results_location_{idx}")
+            self._attempts.pop(str(idx), None)
+        if orphaned:
+            self.cm.prune(orphaned)
+            for k in orphaned:
+                self._last_pushed.pop(k, None)
+            updates = {"id": ",".join(ids)}
+            if self._retry_limit or "retry_attempts" in cm_now:
+                updates["retry_attempts"] = json.dumps(self._attempts)
+            self._push(updates)
+
     def tick(self) -> bool:
         """ONE Fig.-3 monitor iteration.  Returns True when the protocol
         finished (``exit_code`` is set); the driver waits ``poll`` seconds
         between calls."""
-        adapter, ids, count = self._adapter, self._ids, self._count
+        adapter = self._adapter
         cm_now = self.cm.data  # Fig. 3: "Get current config map"
+        kill_requested = cm_now.get("kill", "false") == "true"
+        desired = max(int(cm_now.get("array_count", "1") or "1"), 1)
+        is_array = "array_count" in cm_now or len(self._ids) > 1
+
+        # elastic reconcile: act on a spec patch before polling (a kill
+        # supersedes any pending resize — never grow a job being killed)
+        stall_msg = None
+        if not kill_requested:
+            stall_msg = self._reconcile_scale(adapter, cm_now, desired)
+
+        ids = self._ids
+        self._count = len(ids)
         try:
             infos = self._poll_statuses(adapter, ids)
             self._consecutive_failures = 0
@@ -315,13 +430,17 @@ class JobProtocol:
             return False
 
         states = [_CANON_TO_BRIDGE[info["state"]] for info in infos]
-        kill_requested = cm_now.get("kill", "false") == "true"
+        if self._condemned:
+            self._drain_condemned(adapter, cm_now, states, infos)
+        live = [i for i in range(len(ids)) if ids[i] not in self._condemned]
         retry_limit, attempts = self._retry_limit, self._attempts
 
         # spec.retry: resubmit FAILED indices while budget remains
-        # (a kill supersedes retries — never resubmit a killed CR)
+        # (a kill supersedes retries — never resubmit a killed CR; a
+        # condemned index is being drained, never resubmitted)
         if retry_limit and not kill_requested:
-            for i, st in enumerate(states):
+            for i in live:
+                st = states[i]
                 used = attempts.get(str(i), 0)
                 if st != FAILED or used >= retry_limit:
                     continue
@@ -332,12 +451,12 @@ class JobProtocol:
                     # arrays go through resubmit_index so native dialects
                     # can restamp their index marker; single jobs resubmit
                     # plainly
-                    resubmit = (adapter.resubmit_index if count > 1
+                    resubmit = (adapter.resubmit_index if is_array
                                 else lambda s, p, q, _i: adapter.submit(s, p, q))
                     new_id = resubmit(
                         self._fetch_script(cm_now),
                         json.loads(cm_now.get("jobproperties", "{}")),
-                        self._index_params(cm_now, i, count), i)
+                        self._index_params(cm_now, i, max(desired, len(ids))), i)
                 except (B.SubmitError, TransportError, NoSuchKey,
                         KeyError, ValueError):
                     # budget consumed; surface FAILED when exhausted
@@ -352,51 +471,62 @@ class JobProtocol:
             # a kill cancels the remaining budget — FAILED is final then
             return kill_requested or attempts.get(str(i), 0) >= retry_limit
 
-        finished = all(
-            st in (DONE, KILLED) or (st == FAILED and exhausted(i))
-            for i, st in enumerate(states))
+        # terminal only when every LIVE index settled AND the desired count
+        # is fully applied: exiting mid-drain would orphan condemned remote
+        # jobs, and exiting below a stalled scale-up target would silently
+        # drop an accepted patch (a kill supersedes the pending resize)
+        finished = (not self._condemned
+                    and (kill_requested or len(ids) == desired)
+                    and all(
+                        states[i] in (DONE, KILLED)
+                        or (states[i] == FAILED and exhausted(i))
+                        for i in live))
+        # aggregate over the LIVE (desired) indices only — a condemned index
+        # being drained must not colour the CR's state, times, or results
         if finished:
-            if all(st == DONE for st in states):
+            if all(states[i] == DONE for i in live):
                 agg = DONE
-            elif any(st == KILLED for st in states):
+            elif any(states[i] == KILLED for i in live):
                 agg = KILLED
             else:
                 agg = FAILED
-        elif any(st == RUNNING for st in states):
+        elif any(states[i] == RUNNING for i in live):
             agg = RUNNING
         else:
             agg = SUBMITTED
 
         updates = {"jobStatus": agg,
-                   "message": self._aggregate_message(states, infos)}
-        if count > 1:
+                   "message": stall_msg or self._aggregate_message(
+                       [states[i] for i in live],
+                       [infos[i] for i in live])}
+        if is_array:
             updates["index_states"] = json.dumps(
-                {str(i): st for i, st in enumerate(states)})
-        starts = [i.get("start_time") for i in infos if i.get("start_time")]
-        ends = [i.get("end_time") for i in infos if i.get("end_time")]
+                {str(i): states[i] for i in live})
+        starts = [infos[i].get("start_time") for i in live
+                  if infos[i].get("start_time")]
+        ends = [infos[i].get("end_time") for i in live
+                if infos[i].get("end_time")]
         if starts:
             updates["start_time"] = str(min(starts))
-        if ends and (count == 1 or finished):
+        if ends and (len(ids) == 1 or finished):
             updates["end_time"] = str(max(ends))
-        for i, info in enumerate(infos):
-            if info.get("results_location"):
-                key = ("results_location" if count == 1
-                       else f"results_location_{i}")
-                updates[key] = info["results_location"]
+        for i in live:
+            if infos[i].get("results_location"):
+                key = (f"results_location_{i}" if is_array
+                       else "results_location")
+                updates[key] = infos[i]["results_location"]
+        # the Kubernetes convergence handshake: report the generation whose
+        # desired state is now fully applied (all indices submitted, nothing
+        # draining) so clients can await `observedGeneration == generation`
+        if (cm_now.get("generation") and not self._condemned
+                and len(ids) == desired):
+            updates["observed_generation"] = cm_now["generation"]
         self._push(updates)
 
         if kill_requested and adapter.supports(B.Capability.CANCEL):
             can_cancel_queued = adapter.supports(B.Capability.CANCEL_QUEUED)
             for jid, st in zip(ids, states):
-                if jid in self._kill_sent or st in (DONE, FAILED, KILLED):
-                    continue
-                if st == SUBMITTED and not can_cancel_queued:
-                    continue  # dialect can't kill queued jobs; wait for RUNNING
-                try:
-                    adapter.cancel(jid)
-                    self._kill_sent.add(jid)
-                except TransportError:
-                    pass  # retry next poll
+                self._try_cancel(adapter, jid, st, can_cancel_queued)
 
         if finished:
             if agg == DONE:
@@ -483,6 +613,12 @@ class ControllerPod:
     def kill_pod(self) -> None:
         """Simulate pod/node failure: abort without flushing state."""
         self._killed.set()
+
+    def poke(self) -> None:
+        """Spec-patch notification.  The paper-faithful pod has no wake-up
+        channel — it polls the config map every ``updateinterval`` — so a
+        resize is picked up at the next tick; the multiplexed MonitorTask
+        reschedules immediately instead."""
 
     def alive(self) -> bool:
         return self._thread.is_alive()

@@ -69,6 +69,14 @@ class MonitorTask:
         self._killed = threading.Event()
         self._done = threading.Event()
         self._started = False
+        # newest heap-entry token (written under the runtime's cv lock): a
+        # popped entry carrying an older token is stale and is dropped, so a
+        # task has exactly ONE live scheduling chain however many times
+        # kill_pod()/poke() push extra wake-up entries
+        self._sched_token = 0
+        # set by poke(); a step consumes it so a patch arriving mid-step is
+        # applied by an immediate follow-up tick, never a full poll later
+        self._poke_pending = False
         # serializes steps: the kill_pod() wake-up entry must never declare
         # the task dead while another worker is still mid-step (the operator
         # would restart a replacement against a config map the stale step
@@ -88,6 +96,16 @@ class MonitorTask:
         (and the operator can restart) without waiting a full poll period."""
         self._killed.set()
         self._runtime.schedule(self, 0.0)
+
+    def poke(self) -> None:
+        """A spec patch landed in the config map: pull the next tick forward
+        so the reconcile delta is applied now, not a poll period from now.
+        The pending flag survives a poke that races a RUNNING step (whose
+        own reschedule would otherwise supersede the immediate wake-up): the
+        in-flight step consumes it by returning a zero delay."""
+        if not self._done.is_set():
+            self._poke_pending = True
+            self._runtime.schedule(self, 0.0)
 
     def alive(self) -> bool:
         return not self._done.is_set()
@@ -118,6 +136,11 @@ class MonitorTask:
         try:
             if self._done.is_set():
                 return None  # e.g. the kill_pod() wake-up entry of a dead task
+            # a poke that landed before this point is satisfied by this very
+            # step (the operator flushes the config map BEFORE poking, and
+            # the step reads it fresh); one that lands mid-step re-raises the
+            # flag and is consumed below
+            self._poke_pending = False
             try:
                 self._checkpoint()
                 if not self._started:
@@ -126,11 +149,11 @@ class MonitorTask:
                     if not self._proto.start():
                         self._finish()
                         return None
-                    return self._proto.poll
+                    return self._next_delay()
                 if self._proto.tick():
                     self._finish()
                     return None
-                return self._proto.poll
+                return self._next_delay()
             except PodKilled:
                 self.phase = ControllerPod.KILLED_PHASE
                 self._done.set()
@@ -142,6 +165,16 @@ class MonitorTask:
                 return None
         finally:
             self._step_lock.release()
+
+    def _next_delay(self) -> float:
+        """Poll delay for the next step — zero when a poke or a kill arrived
+        mid-step (their immediate wake-up entries are superseded by this
+        step's own reschedule, so the zero delay stands in for them): the
+        patch is applied, or PodKilled observed, immediately."""
+        if self._killed.is_set() or self._poke_pending:
+            self._poke_pending = False
+            return 0.0
+        return self._proto.poll
 
     def _finish(self) -> None:
         self.exit_code = self._proto.exit_code
@@ -156,7 +189,7 @@ class MonitorRuntime:
     def __init__(self, workers: int = 4, name: str = "bridge-monitor"):
         self.workers = workers
         self.name = name
-        self._heap: List[Tuple[float, int, MonitorTask]] = []
+        self._heap: List[Tuple[float, int, MonitorTask, int]] = []
         self._seq = itertools.count()
         self._cv = threading.Condition()
         self._stop = threading.Event()
@@ -201,9 +234,14 @@ class MonitorRuntime:
         return task
 
     def schedule(self, task: MonitorTask, delay: float) -> None:
+        """(Re)schedule a task, SUPERSEDING any entry still in the heap: the
+        token stamped here invalidates older entries, which the workers drop
+        on pop — one task, one live chain."""
         with self._cv:
+            task._sched_token += 1
             heapq.heappush(self._heap,
-                           (time.time() + delay, next(self._seq), task))
+                           (time.time() + delay, next(self._seq), task,
+                            task._sched_token))
             self._cv.notify()
 
     # -- workers -----------------------------------------------------------
@@ -215,7 +253,10 @@ class MonitorRuntime:
                 while not self._stop.is_set():
                     now = time.time()
                     if self._heap and self._heap[0][0] <= now:
-                        _, _, task = heapq.heappop(self._heap)
+                        _, _, task, token = heapq.heappop(self._heap)
+                        if token != task._sched_token:
+                            task = None
+                            continue  # superseded by a newer entry
                         break
                     wait = (min(self._heap[0][0] - now, 0.2)
                             if self._heap else 0.2)

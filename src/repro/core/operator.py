@@ -155,8 +155,34 @@ class BridgeOperator:
                     self.statestore.get(self.cm_name(job)).update({"kill": "true"})
                 except KeyError:
                     pass
+            self._reconcile_spec(job)
         elif event == "DELETED":
             self._finalize_delete(job)
+
+    def _reconcile_spec(self, job: BridgeJob) -> None:
+        """Spec-patch reconcile (elastic arrays): when metadata.generation
+        moved past what the config map carries, publish the new desired state
+        (array count + per-index params) and poke the pod so its next tick
+        diffs desired vs. submitted indices and applies exactly the delta.
+        MODIFIED events fired by status mirroring carry an unchanged
+        generation and return immediately."""
+        if job.deleted or job.status.terminal():
+            return
+        try:
+            cm = self.statestore.get(self.cm_name(job))
+        except KeyError:
+            return  # no pod yet; _cm_payload will carry the latest spec
+        if cm.get("generation") == str(job.generation):
+            return
+        updates = {"generation": str(job.generation)}
+        if job.spec.array is not None:
+            updates["array_count"] = str(job.spec.array.count)
+            updates["indexed_params"] = json.dumps(
+                job.spec.array.indexed_params)
+        cm.update(updates)
+        pod = self.pods.get(job.uid)
+        if pod is not None:
+            pod.poke()
 
     def _ensure_started(self, job: BridgeJob) -> None:
         with self._lock:
@@ -221,6 +247,7 @@ class BridgeOperator:
             "jobStatus": PENDING,
             "kill": "true" if s.kill else "false",
             "message": "",
+            "generation": str(job.generation),
         }
         if s.s3storage:
             data["s3endpoint"] = s.s3storage.endpoint
@@ -310,6 +337,8 @@ class BridgeOperator:
             fields["end_time"] = float(data["end_time"])
         if data.get("index_states"):
             fields["index_states"] = json.loads(data["index_states"])
+        if data.get("observed_generation"):
+            fields["observed_generation"] = int(data["observed_generation"])
         if any(getattr(job.status, k) != v for k, v in fields.items()):
             self.registry.update_status(job.name, job.namespace, **fields)
 

@@ -48,11 +48,17 @@ class ResourceRegistry:
 
     def update_spec(self, name: str, mutate: Callable[[BridgeJobSpec], BridgeJobSpec],
                     namespace: str = "default") -> BridgeJob:
-        """Replace the spec (e.g. set kill=True) and notify watchers."""
+        """Replace the spec (e.g. set kill=True, resize an array) and notify
+        watchers.  A genuine spec change bumps ``metadata.generation`` so the
+        reconciler can report convergence via ``status.observedGeneration``;
+        a no-op mutation bumps only the resource version."""
         with self._lock:
             job = self._require(name, namespace)
-            job.spec = mutate(job.spec)
-            job.spec.validate()
+            new_spec = mutate(job.spec)
+            new_spec.validate()
+            if new_spec != job.spec:
+                job.generation += 1
+            job.spec = new_spec
             self._version += 1
             job.resource_version = self._version
             self._notify("MODIFIED", job)

@@ -23,6 +23,12 @@
       ttlSecondsAfterFinished: 30                       # auto-GC the CR
       dependencies: [other-job, ...]                    # gate on sibling CRs
 
+``spec.array`` is MUTABLE on a live CR (elastic arrays): every spec mutation
+bumps ``metadata.generation`` and the reconciler records the generation it
+has fully applied in ``status.observedGeneration`` — the standard Kubernetes
+convergence handshake.  A client knows a resize has landed when
+``observedGeneration == generation``.
+
 ``convert()`` is the conversion-webhook analogue: it moves a full CR dict
 between versions.  Every v1alpha1 document upgrades losslessly; downgrading a
 v1beta1 document that uses beta-only features raises ``ConversionError``.
@@ -196,6 +202,8 @@ class BridgeJobStatus:
     restarts: int = 0              # controller-pod restarts performed by the operator
     # v1beta1 job arrays: per-index bridge state ("0" -> DONE, ...)
     index_states: Dict[str, str] = field(default_factory=dict)
+    # last metadata.generation the reconciler fully applied (0 = none yet)
+    observed_generation: int = 0
 
     def terminal(self) -> bool:
         return self.state in TERMINAL_STATES
@@ -208,6 +216,10 @@ class BridgeJob:
     spec: BridgeJobSpec
     namespace: str = "default"
     status: BridgeJobStatus = field(default_factory=BridgeJobStatus)
+    # metadata.generation: bumped by the registry on every SPEC change
+    # (status updates do not touch it) — paired with
+    # status.observed_generation by the reconciler
+    generation: int = 1
     # registry bookkeeping
     resource_version: int = 0
     deleted: bool = False
@@ -227,7 +239,8 @@ class BridgeJob:
         d = {
             "apiVersion": version,
             "kind": KIND,
-            "metadata": {"name": self.name, "namespace": self.namespace},
+            "metadata": {"name": self.name, "namespace": self.namespace,
+                         "generation": self.generation},
             "spec": _spec_to_dict(self.spec, version),
             "status": dataclasses.asdict(self.status),
         }
@@ -241,7 +254,11 @@ class BridgeJob:
         meta = d.get("metadata", {})
         spec = spec_from_dict(d.get("spec", {}))
         job = BridgeJob(name=meta.get("name", ""), spec=spec,
-                        namespace=meta.get("namespace", "default"))
+                        namespace=meta.get("namespace", "default"),
+                        generation=int(meta.get("generation", 1)))
+        status = d.get("status") or {}
+        if "observed_generation" in status:
+            job.status.observed_generation = int(status["observed_generation"])
         if not job.name:
             raise ValidationError("metadata.name is required")
         spec.validate()

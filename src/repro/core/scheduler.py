@@ -81,6 +81,27 @@ class LoadAwareScheduler:
         """Place + submit in one step through the facade."""
         return self.bridge.submit(name, self.place(spec), namespace=namespace)
 
+    def scale_placed(self, name: str, count: int,
+                     namespace: str = "default") -> JobHandle:
+        """Elastic scale with placement re-consulted (a CR targets exactly
+        ONE resourceURL, so the new indices land on the job's existing
+        target): growth is refused when that target no longer advertises
+        queue load — unreachable, or not a QUEUE_LOAD candidate — instead of
+        piling more indices onto a black hole.  Scale-down always proceeds.
+        """
+        job = self.bridge.registry.get(name, namespace)
+        if job is None:
+            raise KeyError(f"BridgeJob {namespace}/{name} not found")
+        current = job.spec.array.count if job.spec.array else 1
+        if count > current:
+            cand = next((c for c in self.candidates
+                         if c.resourceURL == job.spec.resourceURL), None)
+            if cand is None or self.load_of(cand) is None:
+                raise RuntimeError(
+                    f"cannot scale up {namespace}/{name}: target "
+                    f"{job.spec.resourceURL!r} is not schedulable")
+        return self.bridge.scale(name, count, namespace=namespace)
+
     # -- speculative execution (straggler mitigation) ------------------------
 
     def submit_speculative(self, base_name: str, spec: BridgeJobSpec,

@@ -41,6 +41,12 @@ class ConfigMap:
     def update(self, updates: Dict[str, str]) -> Dict[str, str]:
         return self._store._update(self.name, updates)
 
+    def prune(self, keys) -> Dict[str, str]:
+        """Drop keys (missing ones ignored).  Elastic scale-down uses this to
+        GC orphaned per-index entries so the map never grows monotonically
+        across resizes."""
+        return self._store._prune(self.name, keys)
+
     def replace(self, data: Dict[str, str]) -> None:
         self._store._replace(self.name, data)
 
@@ -141,5 +147,16 @@ class StateStore:
             if self.coalesce and all(cur.get(k) == v for k, v in new.items()):
                 return cur  # nothing changed value: skip the flush entirely
             cur.update(new)
+            self._replace(name, cur)
+            return cur
+
+    def _prune(self, name: str, keys) -> Dict[str, str]:
+        with self._lock:
+            cur = self._read(name)
+            present = [k for k in keys if k in cur]
+            if not present:
+                return cur  # nothing to drop: no flush
+            for k in present:
+                del cur[k]
             self._replace(name, cur)
             return cur

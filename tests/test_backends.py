@@ -135,6 +135,33 @@ def test_ray_idempotent_resubmission(env):
     assert n == 1
 
 
+@pytest.mark.parametrize("kind", ["slurm", "lsf"])
+def test_cancel_of_terminal_job_is_409_not_500(env, kind):
+    """Regression: a cancel that loses the race against a terminal status
+    transition answers 409 Conflict — a protocol outcome, not a 500 — and a
+    cancel of a live job still succeeds."""
+    from repro.core import TOKENS, URLS
+
+    client = env.directory.connect(URLS[kind], TOKENS[kind])
+
+    def cancel_req(jid):
+        if kind == "slurm":
+            return client.delete(f"/slurm/v0.0.37/job/{jid}")
+        return client.post(f"/platform/ws/jobs/{jid}/kill")
+
+    done = env.clusters[kind].submit("quick", {"WallSeconds": "0.01"}, {})
+    deadline = time.time() + 10
+    while time.time() < deadline and done.state not in ("COMPLETED", "FAILED"):
+        time.sleep(0.01)
+    r = cancel_req(done.id)
+    assert r.status == 409, (r.status, r.json)
+    assert "error" in r.json
+
+    live = env.clusters[kind].submit("slow", {"WallSeconds": "30"}, {})
+    assert cancel_req(live.id).status == 200
+    assert cancel_req("999999").status == 404
+
+
 def test_auth_required(env):
     """Requests without the bearer token are rejected (401)."""
     from repro.core import URLS

@@ -1,0 +1,400 @@
+"""Elastic job arrays: spec-patch reconcile with delta submit/cancel.
+
+The tentpole guarantees under test:
+
+  * scaling a LIVE array submits/cancels exactly the delta — a live index is
+    never resubmitted, scale-down cancels the highest indices first, and a
+    controller pod killed mid-patch resumes the half-applied patch from the
+    config map;
+  * `metadata.generation` / `status.observedGeneration` form the standard
+    Kubernetes convergence handshake (`wait_reconciled`);
+  * the chaos suite drives random (seeded, deterministic) interleavings of
+    scale-up / scale-down / kill-pod against the simulated cluster and checks
+    the two lifecycle invariants post-hoc from the cluster's own records:
+      1. "every index submitted at most once while live" — for any array
+         index, the [submit_time, end_time) intervals of its remote jobs
+         never overlap;
+      2. "final remote job set == final desired set" — once reconciled, the
+         live remote jobs are exactly indices 0..desired-1, once each.
+
+Both operator modes run the same protocol object, so everything here is
+mode-parametrized.
+"""
+import json
+import random
+import time
+
+import pytest
+
+from repro.core import (ArraySpec, BridgeEnvironment, DONE, FaultProfile,
+                        RetryPolicy, ValidationError)
+from repro.core.backends import base as B
+from repro.core.backends.slurm import SlurmAdapter
+
+MODES = ["multiplexed", "pod-per-cr"]
+
+
+def _wait(predicate, timeout=30, interval=0.005):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def _ids(handle):
+    return [s for s in handle.status().job_id.split(",") if s]
+
+
+def _index_of(cluster_job):
+    """The array index a remote job was submitted for (either the native
+    slurm marker or the bridge's facade-side marker)."""
+    p = cluster_job.params
+    idx = p.get("SLURM_ARRAY_TASK_ID", p.get("BRIDGE_ARRAY_INDEX"))
+    return None if idx is None else int(idx)
+
+
+def _assert_at_most_once_while_live(jobs):
+    """Invariant 1: per index, remote-job lifetimes never overlap."""
+    by_index = {}
+    for j in jobs.values():
+        idx = _index_of(j)
+        if idx is not None:
+            by_index.setdefault(idx, []).append(j)
+    for idx, members in by_index.items():
+        members.sort(key=lambda j: j.submit_time)
+        for prev, nxt in zip(members, members[1:]):
+            assert prev.end_time is not None, (
+                f"index {idx}: resubmitted while a prior job was still live")
+            assert prev.end_time <= nxt.submit_time, (
+                f"index {idx}: overlapping lifetimes "
+                f"({prev.id} ended {prev.end_time}, "
+                f"{nxt.id} submitted {nxt.submit_time})")
+
+
+def _assert_remote_matches_desired(jobs, desired):
+    """Invariant 2: live remote jobs are exactly indices 0..desired-1."""
+    live = [j for j in jobs.values() if j.state in (B.QUEUED, B.RUNNING)]
+    assert sorted(_index_of(j) for j in live) == list(range(desired)), (
+        f"live remote set != desired 0..{desired - 1}: "
+        f"{sorted((_index_of(j), j.id) for j in live)}")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 32 -> 48 -> 8 with exact deltas and a mid-patch pod kill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_scale_32_up_48_down_8_exact_delta_with_midpatch_kill(mode):
+    """Scaling a running 32-index array to 48 then 8 submits exactly 16 new
+    jobs and cancels exactly 40 — zero resubmissions of live indices — and a
+    controller pod killed mid-patch resumes the half-applied patch."""
+    # per-request latency widens the mid-patch window so the kill reliably
+    # lands while the 16-index delta fan-out is in flight
+    fp = {"slurm": FaultProfile(latency=0.004, seed=42)}
+    with BridgeEnvironment(default_duration=120, slots=4, fault_profiles=fp,
+                           operator_kwargs={"mode": mode}) as env:
+        h = env.bridge.submit("elastic", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "120"}, array=ArraySpec(count=32)))
+        assert _wait(lambda: len(_ids(h)) == 32)
+
+        h.scale(48)
+        assert _wait(lambda: len(_ids(h)) >= 33, timeout=20)
+        env.operator.pods["default/elastic"].kill_pod()  # mid-patch
+
+        job = h.wait_reconciled(timeout=60)
+        assert len(_ids(h)) == 48
+        assert job.status.restarts >= 1
+        assert len(env.clusters["slurm"].jobs) == 48, (
+            "exactly 16 new submissions — the restarted pod must resume the "
+            "half-applied patch, not redo it")
+
+        h.scale(8)
+        job = h.wait_reconciled(timeout=60)
+        assert job.generation == 3 and job.status.observed_generation == 3
+        jobs = env.clusters["slurm"].jobs
+        assert len(jobs) == 48, "scale-down must not submit anything"
+        cancelled = [j for j in jobs.values() if j.state == B.CANCELLED]
+        assert len(cancelled) == 40, "exactly the 40 excess indices cancelled"
+        assert {_index_of(j) for j in cancelled} == set(range(8, 48)), (
+            "the HIGHEST indices are the ones cancelled")
+        # with 4 slots most excess indices never started: CANCEL_QUEUED path
+        assert any(j.start_time is None for j in cancelled)
+        _assert_remote_matches_desired(jobs, 8)
+        _assert_at_most_once_while_live(jobs)
+        assert sorted(job.status.index_states, key=int) == [
+            str(i) for i in range(8)]
+
+
+# ---------------------------------------------------------------------------
+# chaos: random interleavings of scale-up / scale-down / kill-pod
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,kind,seed", [
+    ("multiplexed", "slurm", 101),   # native arrays + batched status
+    ("multiplexed", "lsf", 202),     # facade fan-out
+    ("pod-per-cr", "slurm", 303),
+    ("pod-per-cr", "lsf", 404),
+])
+def test_chaos_lifecycle(mode, kind, seed):
+    """Seeded random op interleavings (deterministic op sequence + seeded
+    fault injection) must preserve both lifecycle invariants."""
+    rng = random.Random(seed)
+    fp = {kind: FaultProfile(drop_rate=0.02, seed=seed)}
+    with BridgeEnvironment(default_duration=300, slots=6, fault_profiles=fp,
+                           operator_kwargs={"mode": mode}) as env:
+        h = env.bridge.submit("chaos", env.make_spec(
+            kind, script="member", updateinterval=0.01,
+            jobproperties={"WallSeconds": "300"},
+            array=ArraySpec(count=4),
+            retry=RetryPolicy(limit=100)))  # absorb injected submit drops
+        assert _wait(lambda: len(_ids(h)) == 4)
+
+        desired = 4
+        for _ in range(10):
+            op = rng.choice(["up", "down", "kill", "settle"])
+            if op == "up":
+                desired = min(desired + rng.randint(1, 6), 24)
+                h.scale(desired)
+            elif op == "down":
+                desired = max(desired - rng.randint(1, 6), 1)
+                h.scale(desired)
+            elif op == "kill":
+                pod = env.operator.pods.get("default/chaos")
+                if pod is not None:
+                    pod.kill_pod()
+            time.sleep(rng.uniform(0.0, 0.05))
+
+        job = h.wait_reconciled(timeout=90)
+        assert not job.status.terminal(), job.status.message
+        jobs = env.clusters[kind].jobs
+        _assert_remote_matches_desired(jobs, desired)
+        _assert_at_most_once_while_live(jobs)
+        assert sorted(job.status.index_states, key=int) == [
+            str(i) for i in range(desired)]
+        assert len(_ids(h)) == desired
+
+
+# ---------------------------------------------------------------------------
+# capability-gated scale-down + per-index state GC + promptness
+# ---------------------------------------------------------------------------
+
+
+def test_scale_down_without_cancel_queued_waits_for_running():
+    """An adapter without CANCEL_QUEUED cannot kill queued indices: the
+    drain must hold the cancel until each condemned index starts RUNNING —
+    never cancelling in-queue — and still converge."""
+    class NoQueuedCancel(SlurmAdapter):
+        capabilities = SlurmAdapter.capabilities - {B.Capability.CANCEL_QUEUED}
+
+    with BridgeEnvironment(default_duration=0.25, slots=2) as env:
+        env.operator.adapters[NoQueuedCancel.image] = NoQueuedCancel
+        h = env.bridge.submit("nq", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "0.25"}, array=ArraySpec(count=6)))
+        assert _wait(lambda: len(_ids(h)) == 6)
+        h.scale(2)
+        job = h.wait_reconciled(timeout=60)
+        jobs = env.clusters["slurm"].jobs
+        assert len(jobs) == 6
+        for j in jobs.values():
+            if j.state == B.CANCELLED:
+                assert j.start_time is not None, (
+                    f"{j.id} was cancelled while QUEUED despite the adapter "
+                    f"not declaring CANCEL_QUEUED")
+        assert h.wait(timeout=60).status.state == DONE  # live pair completes
+
+
+def test_scale_down_prunes_orphaned_per_index_state():
+    """Satellite: after a scale-down the config map must drop the per-index
+    keys of removed indices (index_states entries, retry budget) so repeated
+    resizes never grow the store monotonically."""
+    with BridgeEnvironment(default_duration=120, slots=4) as env:
+        h = env.bridge.submit("gc", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "120"},
+            array=ArraySpec(count=2), retry=RetryPolicy(limit=2)))
+        assert _wait(lambda: len(_ids(h)) == 2)
+        baseline_keys = None
+        for count in (12, 3, 12, 3):
+            h.scale(count)
+            h.wait_reconciled(timeout=60)
+            assert _wait(lambda: len(json.loads(env.statestore.get(
+                "default/gc-bridge-cm").get("index_states"))) == count)
+            cm = env.statestore.get("default/gc-bridge-cm").data
+            states = json.loads(cm["index_states"])
+            assert sorted(states, key=int) == [str(i) for i in range(count)]
+            attempts = json.loads(cm.get("retry_attempts", "{}"))
+            assert all(int(k) < count for k in attempts)
+            assert not any(k.startswith("results_location_")
+                           and int(k.rsplit("_", 1)[1]) >= count for k in cm)
+            if count == 3:
+                if baseline_keys is None:
+                    baseline_keys = len(cm)
+                else:
+                    assert len(cm) == baseline_keys, (
+                        "config-map key count grew across resize cycles")
+
+
+def test_stalled_scale_up_surfaces_diagnostic_and_recovers():
+    """A scale-up that cannot submit (job script vanished from S3) reports
+    the stall in status.message every tick instead of silently spinning, and
+    completes once the blocker clears."""
+    with BridgeEnvironment(default_duration=120, slots=8) as env:
+        env.s3.put("bkt", "script.sh", b"#!/bin/sh\ntrue\n")
+        h = env.bridge.submit("stall", env.make_spec(
+            "slurm", script="bkt:script.sh", scriptlocation="s3",
+            updateinterval=0.02, jobproperties={"WallSeconds": "120"},
+            array=ArraySpec(count=2)))
+        assert _wait(lambda: len(_ids(h)) == 2)
+        env.s3.delete("bkt", "script.sh")
+        h.scale(4)
+        assert _wait(lambda: "scale-up to 4 stalled at index 2"
+                     in h.status().message, timeout=20), h.status().message
+        assert len(_ids(h)) == 2, "no index may be submitted while stalled"
+        env.s3.put("bkt", "script.sh", b"#!/bin/sh\ntrue\n")
+        job = h.wait_reconciled(timeout=60)
+        assert len(_ids(h)) == 4
+        assert "stalled" not in job.status.message
+
+
+def test_stalled_scale_up_holds_completion_until_applied():
+    """Regression: a CR whose live indices all finish while a scale-up is
+    stalled must NOT turn terminal — the accepted patch would be silently
+    dropped.  It stays open, keeps retrying, and completes only once the
+    full desired count has run."""
+    with BridgeEnvironment(default_duration=0.2, slots=8) as env:
+        env.s3.put("bkt", "s.sh", b"#!/bin/sh\ntrue\n")
+        h = env.bridge.submit("hold", env.make_spec(
+            "slurm", script="bkt:s.sh", scriptlocation="s3",
+            updateinterval=0.02, jobproperties={"WallSeconds": "0.2"},
+            array=ArraySpec(count=2)))
+        assert _wait(lambda: len(_ids(h)) == 2)
+        env.s3.delete("bkt", "s.sh")
+        h.scale(4)
+        # the two live indices complete while the scale-up cannot submit
+        assert _wait(lambda: all(
+            j.state == B.COMPLETED
+            for j in env.clusters["slurm"].jobs.values()), timeout=20)
+        time.sleep(0.2)  # several ticks with everything live terminal
+        assert not h.status().terminal(), (
+            "CR went terminal with the accepted scale-up never applied")
+        env.s3.put("bkt", "s.sh", b"#!/bin/sh\ntrue\n")
+        job = h.wait(timeout=30)
+        assert job.status.state == DONE
+        assert len(job.status.job_id.split(",")) == 4
+        assert job.status.observed_generation == job.generation
+        assert len(env.clusters["slurm"].jobs) == 4
+
+
+def test_multiplexed_resize_applies_without_waiting_a_poll_period():
+    """MonitorRuntime reconcile promptness: a spec patch pokes the task, so
+    the delta is applied well before the (long) poll interval elapses."""
+    with BridgeEnvironment(default_duration=120, slots=4,
+                           operator_kwargs={"mode": "multiplexed"}) as env:
+        h = env.bridge.submit("poke", env.make_spec(
+            "slurm", script="member", updateinterval=5.0,
+            jobproperties={"WallSeconds": "120"}, array=ArraySpec(count=2)))
+        assert _wait(lambda: len(_ids(h)) == 2, timeout=20)
+        t0 = time.time()
+        h.scale(5)
+        assert _wait(lambda: len(_ids(h)) == 5, timeout=20)
+        assert time.time() - t0 < 2.5, (
+            "resize waited for the poll deadline instead of being poked")
+
+
+def test_repeated_patches_do_not_multiply_poll_rate():
+    """Regression: every poke() supersedes the task's pending heap entry —
+    repeated resizes must leave ONE scheduling chain, not k+1 chains each
+    polling every interval (which would multiply REST traffic per patch)."""
+    with BridgeEnvironment(default_duration=120, slots=8,
+                           operator_kwargs={"mode": "multiplexed"}) as env:
+        h = env.bridge.submit("rate", env.make_spec(
+            "slurm", script="member", updateinterval=0.05,
+            jobproperties={"WallSeconds": "120"}, array=ArraySpec(count=2)))
+        assert _wait(lambda: len(_ids(h)) == 2)
+        for count in (3, 4, 5, 6, 7):
+            h.scale(count)
+            h.wait_reconciled(timeout=30)
+        srv = env.servers["slurm"]
+        req0 = srv.request_count
+        time.sleep(0.5)  # ~10 poll ticks at 0.05s, 1 batched request each
+        per_tick = (srv.request_count - req0) / (0.5 / 0.05)
+        assert per_tick <= 3, (
+            f"{per_tick:.1f} requests/tick after 5 patches — duplicate "
+            f"scheduling chains are multiplying the poll rate")
+
+
+# ---------------------------------------------------------------------------
+# facade-level patch semantics
+# ---------------------------------------------------------------------------
+
+
+def test_patch_rejects_immutable_fields_and_terminal_jobs():
+    import dataclasses
+
+    with BridgeEnvironment(default_duration=0.05) as env:
+        h = env.bridge.submit("pv", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "5"}, array=ArraySpec(count=2)))
+        assert _wait(lambda: len(_ids(h)) == 2)
+        with pytest.raises(ValidationError, match="mutable"):
+            h.patch(lambda s: dataclasses.replace(s, image="raypod:0.1"))
+        with pytest.raises(ValidationError, match=">= 1"):
+            h.scale(0)
+        h.cancel()
+        assert h.wait(timeout=30).status.terminal()
+        with pytest.raises(ValidationError, match="terminal"):
+            h.scale(4)
+
+
+def test_scale_pads_and_truncates_indexed_params():
+    """indexed_params (when used) tracks the new count: padded with empty
+    overlays on growth, truncated on shrink — and the new indices' params
+    reach the remote jobs."""
+    with BridgeEnvironment(default_duration=120, slots=8) as env:
+        h = env.bridge.submit("ip", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "120"},
+            array=ArraySpec(count=2, indexed_params=[{"K": "a"}, {"K": "b"}])))
+        assert _wait(lambda: len(_ids(h)) == 2)
+        h.scale(4)
+        job = h.wait_reconciled(timeout=60)
+        assert job.spec.array.indexed_params == [
+            {"K": "a"}, {"K": "b"}, {}, {}]
+        h.scale(1)
+        job = h.wait_reconciled(timeout=60)
+        assert job.spec.array.indexed_params == [{"K": "a"}]
+        members = {_index_of(j): j
+                   for j in env.clusters["slurm"].jobs.values()}
+        assert members[0].params["K"] == "a" and members[1].params["K"] == "b"
+        assert "K" not in members[2].params
+
+
+def test_scheduler_scale_placed_reconsults_load():
+    """Satellite-spec scheduler hook: scale-up re-consults the load ranking
+    and refuses growth onto an unreachable target; scale-down proceeds."""
+    from repro.core import Candidate, IMAGES, URLS, LoadAwareScheduler
+
+    with BridgeEnvironment(default_duration=120, slots=8) as env:
+        sched = LoadAwareScheduler(env.bridge, [
+            Candidate(URLS[k], IMAGES[k], f"{k}-secret")
+            for k in ("slurm", "lsf")])
+        h = env.bridge.submit("sp", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "120"}, array=ArraySpec(count=2)))
+        assert _wait(lambda: len(_ids(h)) == 2)
+        sched.scale_placed("sp", 4)
+        assert _wait(lambda: len(_ids(h)) == 4)
+        env.servers["slurm"].fault.begin_outage()
+        try:
+            with pytest.raises(RuntimeError, match="not schedulable"):
+                sched.scale_placed("sp", 8)
+            sched.scale_placed("sp", 2)  # shrinking needs no capacity check
+        finally:
+            env.servers["slurm"].fault.end_outage()
+        assert _wait(lambda: len(_ids(h)) == 2, timeout=60)

@@ -1,0 +1,119 @@
+"""CRD generation semantics + conversion round-trips of PATCHED documents.
+
+Elastic arrays made the spec mutable, so the conversion layer now has to
+carry the convergence handshake (`metadata.generation` /
+`status.observedGeneration`) across versions, and the registry must bump the
+generation on spec changes only.
+"""
+import json
+
+import pytest
+
+from repro.core import (API_V1ALPHA1, API_V1BETA1, ArraySpec, BridgeJob,
+                        BridgeJobSpec, ConversionError, JobData,
+                        ResourceRegistry, StateStore, convert, load_bridgejob)
+
+
+def _spec(**kw) -> BridgeJobSpec:
+    return BridgeJobSpec(resourceURL="https://hpc.example.com",
+                         image="slurmpod:0.1", resourcesecret="sec",
+                         jobdata=JobData(jobscript="run"), **kw)
+
+
+# ---------------------------------------------------------------------------
+# generation fields survive conversion round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_patched_alpha_document_roundtrips_with_generation():
+    """A patched (generation > 1) non-elastic document survives
+    alpha -> beta -> alpha bit-for-bit, generation fields included."""
+    job = BridgeJob(name="p", spec=_spec(), generation=5)
+    job.status.observed_generation = 4
+    doc = job.to_dict(API_V1ALPHA1)
+    assert doc["metadata"]["generation"] == 5
+    assert doc["status"]["observed_generation"] == 4
+    up = convert(doc, API_V1BETA1)
+    assert up["metadata"]["generation"] == 5
+    assert up["status"]["observed_generation"] == 4
+    down = convert(up, API_V1ALPHA1)
+    assert json.dumps(down, sort_keys=True) == json.dumps(doc, sort_keys=True)
+
+
+def test_patched_elastic_document_roundtrips_in_beta():
+    """An elastic (resized) document keeps its generation handshake through
+    a beta -> beta serialization round-trip via from_dict/to_dict."""
+    job = BridgeJob(name="el", spec=_spec(array=ArraySpec(count=48)),
+                    generation=3)
+    job.status.observed_generation = 2
+    doc = job.to_dict()
+    assert doc["apiVersion"] == API_V1BETA1
+    parsed = load_bridgejob(json.dumps(doc))
+    assert parsed.generation == 3
+    assert parsed.status.observed_generation == 2
+    assert parsed.spec.array.count == 48
+
+
+def test_lossy_downgrade_of_elastic_spec_refused_with_clear_error():
+    """Downgrading a resized array document to v1alpha1 must fail loudly —
+    the alpha schema cannot express the elastic state."""
+    doc = BridgeJob(name="el", spec=_spec(array=ArraySpec(count=8)),
+                    generation=2).to_dict()
+    with pytest.raises(ConversionError) as ei:
+        convert(doc, API_V1ALPHA1)
+    assert "array" in str(ei.value) and "v1alpha1" in str(ei.value)
+
+
+def test_from_dict_defaults_generation_for_legacy_documents():
+    """Pre-elastic documents (no metadata.generation) parse with the
+    Kubernetes default of 1."""
+    doc = BridgeJob(name="old", spec=_spec()).to_dict(API_V1ALPHA1)
+    del doc["metadata"]["generation"]
+    del doc["status"]
+    job = BridgeJob.from_dict(doc)
+    assert job.generation == 1
+    assert job.status.observed_generation == 0
+
+
+# ---------------------------------------------------------------------------
+# registry generation bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_registry_bumps_generation_on_spec_change_only():
+    import dataclasses
+
+    reg = ResourceRegistry()
+    reg.create(BridgeJob(name="g", spec=_spec(array=ArraySpec(count=2))))
+    assert reg.get("g").generation == 1
+
+    reg.update_status("g", state="RUNNING")
+    assert reg.get("g").generation == 1, "status writes must not bump"
+
+    reg.update_spec("g", lambda s: dataclasses.replace(
+        s, array=ArraySpec(count=5)))
+    assert reg.get("g").generation == 2
+
+    reg.update_spec("g", lambda s: s)  # no-op patch
+    assert reg.get("g").generation == 2, "a no-op mutation must not bump"
+    rv = reg.get("g").resource_version
+    reg.update_spec("g", lambda s: dataclasses.replace(s, kill=True))
+    assert reg.get("g").generation == 3
+    assert reg.get("g").resource_version > rv
+
+
+# ---------------------------------------------------------------------------
+# state-store pruning (the per-index GC primitive)
+# ---------------------------------------------------------------------------
+
+
+def test_configmap_prune_drops_keys_and_coalesces():
+    store = StateStore()
+    cm = store.create("ns/j-cm", {"a": "1", "results_location_2": "b:k",
+                                  "index_states": "{}"})
+    flushes = store.flush_count
+    cm.prune(["results_location_2", "not-there"])
+    assert store.flush_count == flushes + 1
+    assert "results_location_2" not in cm.data and cm.get("a") == "1"
+    cm.prune(["still-not-there"])
+    assert store.flush_count == flushes + 1, "pruning nothing must not flush"
