@@ -109,6 +109,61 @@ def run_case(mode: str, count: int = 1, crs: int = 1, *, batched: bool = True,
         JobProtocol.COALESCE_WRITES = prev_coalesce
 
 
+def run_sliced_case(mode: str, count: int, *, slurm_slots: int = 8,
+                    lsf_slots: int = 4, interval: float = 0.02,
+                    duration: float = 0.3) -> dict:
+    """Sharded placement scenario: one ``count``-index array spread across
+    TWO uneven resources (slurm vs lsf, ``slurm_slots`` vs ``lsf_slots``),
+    run to DONE.  Reports the load-proportional split, wall time, and — for
+    the aggregate-capacity story — the wall time of the same array pinned to
+    the slurm resource alone."""
+    from repro.core import IMAGES, PlacementCandidate, PlacementSpec, URLS
+
+    def run(placed: bool) -> dict:
+        env = BridgeEnvironment(slots=slurm_slots, default_duration=duration,
+                                operator_kwargs={"mode": mode})
+        try:
+            env.clusters["lsf"].slots = lsf_slots
+            env.start()
+            placement = PlacementSpec(candidates=[
+                PlacementCandidate(URLS[k], IMAGES[k], f"{k}-secret")
+                for k in ("slurm", "lsf")], strategy="spread") if placed \
+                else None
+            t0 = time.time()
+            h = env.bridge.submit("sliced", env.make_spec(
+                "slurm", script="bench", updateinterval=interval,
+                jobproperties={"WallSeconds": str(duration)},
+                array=ArraySpec(count=count), placement=placement))
+            job = h.wait(timeout=600)
+            elapsed = time.time() - t0
+            if job.status.state != DONE:
+                raise RuntimeError(
+                    f"sliced benchmark did not finish: {job.status.state} "
+                    f"{job.status.message}")
+            return {"wall_time_s": round(elapsed, 3),
+                    "split": {k: len(env.clusters[k].jobs)
+                              for k in ("slurm", "lsf")}}
+        finally:
+            env.stop()
+
+    sliced = run(placed=True)
+    pinned = run(placed=False)
+    expect_slurm = round(count * slurm_slots / (slurm_slots + lsf_slots))
+    if sliced["split"]["slurm"] != expect_slurm:
+        raise RuntimeError(f"split not load-proportional: {sliced['split']} "
+                           f"(expected {expect_slurm} on slurm)")
+    return {
+        "label": f"{mode}/sliced-{count}ix-{slurm_slots}v{lsf_slots}",
+        "mode": mode, "array_count": count,
+        "slots": {"slurm": slurm_slots, "lsf": lsf_slots},
+        "split": sliced["split"],
+        "wall_time_s_sliced": sliced["wall_time_s"],
+        "wall_time_s_single_resource": pinned["wall_time_s"],
+        "speedup_x": round(pinned["wall_time_s"]
+                           / max(sliced["wall_time_s"], 1e-9), 2),
+    }
+
+
 def run_resize_case(mode: str, start: int, up: int, down: int, *,
                     interval: float = 0.02) -> dict:
     """Elastic-array resize scenario: scale a live ``start``-index array to
@@ -169,19 +224,21 @@ def main() -> int:
         counts, cr_counts = [1, 16], [1, 8]
         array_dur, interval, cr_dur, single_repeats = 0.5, 0.01, 0.2, 1
         resize = (8, 16, 2)
+        sliced = dict(count=16, slurm_slots=4, lsf_slots=2, duration=0.2)
     else:
         counts, cr_counts = [1, 64, 256], [1, 16, 64]
         # jobs long enough that the run is dominated by steady-state RUNNING
         # ticks (the hot path being optimised), not the start/end ramps
         array_dur, interval, cr_dur, single_repeats = 4.0, 0.01, 0.3, 9
         resize = (32, 48, 8)
+        sliced = dict(count=64, slurm_slots=8, lsf_slots=4, duration=0.3)
     baseline_count = counts[-1]
 
     results = {"smoke": args.smoke,
                "config": {"interval": interval, "array_duration_s": array_dur,
                           "batch_status_chunk": BATCH_STATUS_CHUNK},
                "array_scaling": [], "baselines": [], "cr_scaling": [],
-               "single_job": [], "resize": []}
+               "single_job": [], "resize": [], "sliced_placement": []}
 
     print("== array scaling (one CR, N indices) ==")
     for mode in MODES:
@@ -220,6 +277,15 @@ def main() -> int:
         print(f"  {r['label']:<24} up={r['scale_up_latency_s']:>6.3f}s "
               f"down={r['scale_down_latency_s']:>6.3f}s "
               f"req={r['rest_requests']:>4}")
+
+    print("== sharded placement (2 uneven resources, strategy spread) ==")
+    for mode in MODES:
+        r = run_sliced_case(mode, interval=interval, **sliced)
+        results["sliced_placement"].append(r)
+        print(f"  {r['label']:<28} split={r['split']} "
+              f"sliced={r['wall_time_s_sliced']:>6.2f}s "
+              f"pinned={r['wall_time_s_single_resource']:>6.2f}s "
+              f"({r['speedup_x']}x)")
 
     print("== single-job wall time (latency regression guard) ==")
     for mode in MODES:
@@ -260,6 +326,9 @@ def main() -> int:
         "resize_latency_s": {r["mode"]: {"up": r["scale_up_latency_s"],
                                          "down": r["scale_down_latency_s"]}
                              for r in results["resize"]},
+        "sliced_placement": {
+            r["mode"]: {"split": r["split"], "speedup_x": r["speedup_x"]}
+            for r in results["sliced_placement"]},
     }
 
     out = os.path.abspath(args.out)

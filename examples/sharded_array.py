@@ -1,0 +1,55 @@
+"""Sharded placement: one 48-index array CR split across TWO external
+resources (SLURM + LSF), load-proportionally, then rebalanced.
+
+The CR declares placement *candidates* instead of a single resourceURL; the
+scheduler splits the index space into per-resource slices sized by free
+capacity, each slice submits natively on its own endpoint, and an elastic
+scale-up routes the delta to the least-loaded slice.
+
+  PYTHONPATH=src python examples/sharded_array.py
+"""
+from repro.core import (ArraySpec, BridgeEnvironment, IMAGES,
+                        PlacementCandidate, PlacementSpec, URLS)
+
+
+def main() -> None:
+    with BridgeEnvironment(default_duration=0.3, slots=8) as env:
+        env.clusters["lsf"].slots = 4  # uneven capacity: 8 vs 4 slots
+
+        spec = env.make_spec(
+            "slurm", script="member", updateinterval=0.05,
+            jobproperties={"WallSeconds": "0.3"},
+            array=ArraySpec(count=48),
+            placement=PlacementSpec(candidates=[
+                PlacementCandidate(URLS["slurm"], IMAGES["slurm"],
+                                   "slurm-secret"),
+                PlacementCandidate(URLS["lsf"], IMAGES["lsf"], "lsf-secret"),
+            ], strategy="spread"))
+        handle = env.bridge.submit("shard-demo", spec)
+        print("sliced BridgeJob created; operator planning slices...")
+
+        handle.wait_reconciled(timeout=60)
+        for p in handle.placements():
+            print(f"  slice {p['slice']}: {len(p['indices'])} indices on "
+                  f"{p['resourceURL']} [{p['state']}]")
+
+        print("scaling 48 -> 60: delta goes to the least-loaded slice")
+        handle.scale(60)
+        handle.wait_reconciled(timeout=60)
+        for p in handle.placements():
+            print(f"  slice {p['slice']}: {len(p['indices'])} indices on "
+                  f"{p['resourceURL']} [{p['state']}]")
+
+        job = handle.wait(timeout=120)
+        print(f"final: {job.status.state} with "
+              f"{len(job.status.index_states)} indices across "
+              f"{len(job.status.placements)} resources "
+              f"(slurm={len(env.clusters['slurm'].jobs)} jobs, "
+              f"lsf={len(env.clusters['lsf'].jobs)} jobs)")
+        assert job.status.state == "DONE"
+        union = sorted(i for p in job.status.placements for i in p["indices"])
+        assert union == list(range(60)), "union of slices == desired set"
+
+
+if __name__ == "__main__":
+    main()

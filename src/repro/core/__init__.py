@@ -18,6 +18,7 @@ Public surface:
 from repro.core.resource import (API_V1ALPHA1, API_V1BETA1, API_VERSIONS,
                                  ArraySpec, BridgeJob, BridgeJobSpec,
                                  BridgeJobStatus, ConversionError, JobData,
+                                 PlacementCandidate, PlacementSpec,
                                  RetryPolicy, S3Storage, ValidationError,
                                  PENDING, SUBMITTED, RUNNING, DONE, FAILED,
                                  KILLED, UNKNOWN, TERMINAL_STATES,
@@ -34,5 +35,6 @@ from repro.core.api import Bridge, JobHandle
 from repro.core.controller import ControllerPod, JobProtocol
 from repro.core.monitor import MonitorRuntime, MonitorTask
 from repro.core.operator import BridgeOperator, default_adapters
-from repro.core.scheduler import Candidate, LoadAwareScheduler
+from repro.core.scheduler import (Candidate, LoadAwareScheduler, LoadProbe,
+                                  plan_placement, plan_slices)
 from repro.core.cluster import IMAGES, TOKENS, URLS, BridgeEnvironment

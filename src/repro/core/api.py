@@ -34,7 +34,7 @@ from repro.core.resource import (ArraySpec, BridgeJob, BridgeJobSpec,
                                  spec_from_dict)
 from repro.core.rest import ResourceManagerDirectory
 from repro.core.secrets import SecretStore
-from repro.core.statestore import StateStore
+from repro.core.statestore import StateStore, is_results_key
 
 
 @dataclass(frozen=True)
@@ -79,6 +79,12 @@ class JobHandle:
         turns terminal."""
         return self.bridge.wait_reconciled(self.name, self.namespace,
                                            timeout=timeout)
+
+    def placements(self) -> list:
+        """Sharded placement: the job's per-slice status — one dict per
+        slice ({slice, resourceURL, image, indices, state}).  Empty for
+        single-resource (unsliced) jobs."""
+        return [dict(p) for p in self.status().placements]
 
     def outputs(self) -> Dict[str, bytes]:
         return self.bridge.outputs(self.name, self.namespace)
@@ -261,7 +267,8 @@ class Bridge:
             return {}
         out: Dict[str, bytes] = {}
         refs = [r for r in cm.get("outputs", "").split(",") if r]
-        for key in [k for k in cm if k.startswith("results_location")]:
+        # results keys may be slice-namespaced (sharded placement) or legacy
+        for key in [k for k in cm if is_results_key(k)]:
             if cm[key]:
                 refs.append(cm[key])
         for ref in refs:

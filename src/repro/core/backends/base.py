@@ -135,10 +135,14 @@ class ResourceAdapter:
         raise NotImplementedError
 
     def submit_array(self, script: str, properties: Dict[str, str],
-                     params_by_index: List[Dict[str, str]]) -> List[str]:
+                     params_by_index: List[Dict[str, str]],
+                     start_index: int = 0) -> List[str]:
         """Native array fan-out: ONE submission call -> one id per index.
-        Only valid when ``Capability.NATIVE_ARRAYS`` is declared; callers
-        without it fan out via repeated ``submit()``."""
+        ``params_by_index[i]`` serves GLOBAL array index ``start_index + i``
+        — a placement slice submits its contiguous range in one call and the
+        dialect stamps the global index marker.  Only valid when
+        ``Capability.NATIVE_ARRAYS`` is declared; callers without it fan out
+        via repeated ``submit()``."""
         raise NotImplementedError(
             f"{type(self).__name__} does not declare NATIVE_ARRAYS")
 
@@ -180,6 +184,16 @@ class ResourceAdapter:
     def queue_load(self) -> Optional[Dict[str, int]]:
         """Queue depth/slots (requires Capability.QUEUE_LOAD)."""
         return None
+
+
+def normalized_queue_load(q: Optional[Dict[str, int]]) -> Optional[float]:
+    """The one definition of 'how loaded is this resource': (queued +
+    running) / slots from a ``queue_load()`` answer, or None when the
+    answer is absent or useless.  Scheduler ranking, slice planning, and
+    the controller's rebalancing target all score through here."""
+    if not q or not q.get("slots"):
+        return None
+    return (q["queued"] + q["running"]) / q["slots"]
 
 
 def resolve_adapter(adapters: Mapping[str, Type[ResourceAdapter]],

@@ -7,6 +7,7 @@ download to/from the cluster, plus queue queries.
 from __future__ import annotations
 
 import base64
+import re
 from typing import Any, Dict, Optional
 
 from repro.core.backends import base as B
@@ -37,11 +38,36 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
                 fault: FaultProfile = None) -> RestServer:
     srv = RestServer(token=token, fault=fault)
 
+    _ARRAY_RE = re.compile(r"^[^\[\]]+\[(\d+)-(\d+)\]$")
+
     def submit(_groups, body) -> HttpResponse:
         body = body or {}
         if not body.get("COMMANDTORUN"):
             return HttpResponse(400, {"error": "COMMANDTORUN required"})
-        props = {k: v for k, v in body.items() if k != "COMMANDTORUN"}
+        props = {k: v for k, v in body.items()
+                 if k not in ("COMMANDTORUN", "JOB_ARRAY", "PARAMS_BY_INDEX")}
+        # bsub -J "name[lo-hi]" analogue: ONE submission call fans out the
+        # whole array, each element stamped with its 1-based LSB_JOBINDEX
+        if body.get("JOB_ARRAY"):
+            m = _ARRAY_RE.match(body["JOB_ARRAY"])
+            if not m:
+                return HttpResponse(400, {"error":
+                                          'JOB_ARRAY must be "name[lo-hi]"'})
+            lo, hi = int(m.group(1)), int(m.group(2))
+            if not 0 < lo <= hi:
+                return HttpResponse(400, {"error": "bad JOB_ARRAY bounds"})
+            per_index = body.get("PARAMS_BY_INDEX") or []
+            element_ids = []
+            for i, jobindex in enumerate(range(lo, hi + 1)):
+                params = dict(body.get("PARAMS", {}))
+                if i < len(per_index):
+                    params.update(per_index[i])
+                params.setdefault("LSB_JOBINDEX", str(jobindex))
+                job = cluster.submit(body["COMMANDTORUN"], props, params)
+                element_ids.append(job.id)
+            return HttpResponse(200, {
+                "jobId": element_ids[0], "elementJobIds": element_ids,
+                "message": f"Job <{element_ids[0]}> is submitted to queue."})
         job = cluster.submit(body["COMMANDTORUN"], props, body.get("PARAMS", {}))
         return HttpResponse(200, {"jobId": job.id,
                                   "message": f"Job <{job.id}> is submitted to queue."})
@@ -116,13 +142,13 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 
 class LSFAdapter(B.ResourceAdapter):
     image = "lsfpod"
-    # Application Center API: full file staging and bjobs-style multi-id
-    # status, but no native job arrays — array CRs fan out via repeated
-    # submit()
+    # Application Center API: full file staging, bjobs-style multi-id
+    # status, and bsub -J "name[1-N]"-style native job arrays (one
+    # submission call fans out every element, stamped with LSB_JOBINDEX)
     capabilities = frozenset({
         B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
         B.Capability.UPLOAD, B.Capability.DOWNLOAD, B.Capability.QUEUE_LOAD,
-        B.Capability.BATCH_STATUS,
+        B.Capability.BATCH_STATUS, B.Capability.NATIVE_ARRAYS,
     })
 
     def submit(self, script, properties, params) -> str:
@@ -133,6 +159,26 @@ class LSFAdapter(B.ResourceAdapter):
         if not r.ok:
             raise B.SubmitError(f"lsf submit: HTTP {r.status} {r.json}")
         return str(r.json["jobId"])
+
+    def submit_array(self, script, properties, params_by_index,
+                     start_index=0) -> list:
+        # bsub -J "bridge[lo-hi]": LSB_JOBINDEX is 1-based, global array
+        # index start_index + i maps to element index start_index + i + 1
+        lo, hi = start_index + 1, start_index + len(params_by_index)
+        body = dict(properties or {})
+        body["COMMANDTORUN"] = script
+        body["JOB_ARRAY"] = f"bridge[{lo}-{hi}]"
+        body["PARAMS_BY_INDEX"] = [dict(p or {}) for p in params_by_index]
+        r = self.client.post("/platform/ws/jobs/submit", body)
+        if not r.ok:
+            raise B.SubmitError(f"lsf array submit: HTTP {r.status} {r.json}")
+        return [str(j) for j in r.json["elementJobIds"]]
+
+    def resubmit_index(self, script, properties, params, index) -> str:
+        # keep the retried element indistinguishable from its original run
+        params = dict(params)
+        params.setdefault("LSB_JOBINDEX", str(index + 1))
+        return self.submit(script, properties, params)
 
     @staticmethod
     def _record_to_info(j: Dict[str, Any]) -> Dict[str, Any]:

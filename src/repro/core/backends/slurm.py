@@ -31,16 +31,19 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         if "script" not in body:
             return HttpResponse(400, {"error": "no script"})
         # sbatch --array analogue: one request fans out N tasks, each a full
-        # job with SLURM_ARRAY_TASK_ID and optional per-index params
+        # job with SLURM_ARRAY_TASK_ID and optional per-index params;
+        # array_start offsets the task ids (sbatch --array=lo-hi), which is
+        # how a placement slice submits its global index range in one call
         n = int(body.get("array_size", 0) or 0)
         if n > 1:
             per_index = body.get("params_by_index") or []
+            base = int(body.get("array_start", 0) or 0)
             task_ids = []
             for i in range(n):
                 params = dict(body.get("params", {}))
                 if i < len(per_index):
                     params.update(per_index[i])
-                params.setdefault("SLURM_ARRAY_TASK_ID", str(i))
+                params.setdefault("SLURM_ARRAY_TASK_ID", str(base + i))
                 job = cluster.submit(body["script"], body.get("job", {}),
                                      params)
                 task_ids.append(int(job.id))
@@ -121,10 +124,12 @@ class SlurmAdapter(B.ResourceAdapter):
             raise B.SubmitError(f"slurm submit: HTTP {r.status} {r.json}")
         return str(r.json["job_id"])
 
-    def submit_array(self, script, properties, params_by_index) -> list:
+    def submit_array(self, script, properties, params_by_index,
+                     start_index=0) -> list:
         r = self.client.post("/slurm/v0.0.37/job/submit",
                              {"script": script, "job": properties,
                               "array_size": len(params_by_index),
+                              "array_start": start_index,
                               "params_by_index": params_by_index})
         if not r.ok:
             raise B.SubmitError(f"slurm array submit: HTTP {r.status} {r.json}")

@@ -22,7 +22,7 @@ from repro.core.objectstore import ObjectStore
 from repro.core.operator import BridgeOperator, default_adapters
 from repro.core.registry import ResourceRegistry
 from repro.core.resource import (ArraySpec, BridgeJob, BridgeJobSpec, JobData,
-                                 RetryPolicy, S3Storage)
+                                 PlacementSpec, RetryPolicy, S3Storage)
 from repro.core.rest import FaultProfile, ResourceManagerDirectory
 from repro.core.secrets import SecretStore
 from repro.core.statestore import StateStore
@@ -121,9 +121,12 @@ class BridgeEnvironment:
                   array: Optional[ArraySpec] = None,
                   retry: Optional[RetryPolicy] = None,
                   ttl_seconds_after_finished: Optional[float] = None,
-                  dependencies: Optional[list] = None) -> BridgeJobSpec:
-        """Spec targeting one of the five built-in backends.  The last four
-        kwargs are v1beta1 features; omitting them yields a v1alpha1 spec."""
+                  dependencies: Optional[list] = None,
+                  placement: Optional[PlacementSpec] = None) -> BridgeJobSpec:
+        """Spec targeting one of the five built-in backends.  The last five
+        kwargs are v1beta1 features; omitting them yields a v1alpha1 spec.
+        ``placement`` makes ``kind`` just the fallback target — the
+        scheduler assigns the actual slice endpoints."""
         s3 = None
         if scriptlocation == "s3" or uploadfiles or additionaldata:
             s3 = S3Storage(s3secret="s3-secret", endpoint=self.s3.endpoint,
@@ -138,7 +141,8 @@ class BridgeEnvironment:
             kill=kill, unknown_after=unknown_after,
             array=array, retry=retry,
             ttl_seconds_after_finished=ttl_seconds_after_finished,
-            dependencies=list(dependencies or []))
+            dependencies=list(dependencies or []),
+            placement=placement)
 
     def submit(self, name: str, spec: BridgeJobSpec,
                namespace: str = "default") -> BridgeJob:

@@ -23,7 +23,24 @@ thread-per-CR pod (the paper-faithful shape) and the multiplexed
 ``MonitorRuntime`` (core/monitor.py), where a small fixed worker pool steps
 many jobs' state machines off a poll-deadline heap.  ``JobProtocol.tick()``
 is ONE iteration of the Fig.-3 monitor loop; the driver owns the inter-tick
-wait.  Two per-tick I/O optimisations live here as well:
+wait.
+
+Sharded placement generalized the protocol from "one adapter, one remote
+id-set" to an INDEXED SLICE MAP: a sliced array CR (``spec.placement``)
+partitions its index space across several ``PlacementSlice``s, each with its
+own endpoint/adapter/secret, its own per-slice config-map keys
+(``slice_{k}_id``, ``slice_{k}_results_location_{i}``), and its own
+independently-polled status.  Elastic reconcile diffs desired-vs-submitted
+PER SLICE: scale-up routes the delta to the least-loaded slice, scale-down
+still condemns the globally-highest indices first.  A single-resource CR is
+the one-slice degenerate case and keeps today's config-map shape
+byte-for-byte.  ``tick(slice_k)`` polls just that slice (the multiplexed
+runtime schedules one chain per slice so a slow resource cannot stall a
+healthy slice's ticks — the remote round-trip happens OUTSIDE the protocol's
+state lock); ``tick()`` polls every slice sequentially (the paper-faithful
+pod shape).
+
+Two per-tick I/O optimisations live here as well:
 
   * batched status — adapters declaring ``Capability.BATCH_STATUS`` are
     polled with one ``status_batch()`` request per ``BATCH_STATUS_CHUNK``
@@ -38,7 +55,7 @@ from __future__ import annotations
 import json
 import threading
 import time
-from typing import Any, Callable, Dict, List, Mapping, Optional, Type
+from typing import Any, Callable, Dict, List, Mapping, Optional, Set, Tuple, Type
 
 from repro.core.backends import base as B
 from repro.core.objectstore import NoSuchKey, ObjectStore
@@ -46,7 +63,7 @@ from repro.core.resource import (DONE, FAILED, KILLED, RUNNING, SUBMITTED,
                                  UNKNOWN)
 from repro.core.rest import ResourceManagerDirectory, TransportError
 from repro.core.secrets import SecretStore
-from repro.core.statestore import ConfigMap, StateStore
+from repro.core.statestore import ConfigMap, StateStore, slice_key
 
 # backend canonical -> bridge state
 _CANON_TO_BRIDGE = {
@@ -74,6 +91,49 @@ def killable_sleep(killed: threading.Event, name: str, seconds: float,
         time.sleep(min(min_sleep, max(deadline - time.time(), 0)))
 
 
+def _encode_pairs(pairs: List[List[Any]]) -> str:
+    """Serialize a slice's (global index, remote id) pairs: "0=1000,5=1003"."""
+    return ",".join(f"{i}={jid}" for i, jid in pairs)
+
+
+def _decode_pairs(text: str) -> List[List[Any]]:
+    out: List[List[Any]] = []
+    for tok in text.split(","):
+        if tok:
+            i, _, jid = tok.partition("=")
+            out.append([int(i), jid])
+    return out
+
+
+class PlacementSlice:
+    """One placement slice of a (possibly sharded) array CR: its own
+    endpoint + adapter + secret, the contiguous index range it was PLANNED
+    to own, and the (global index, remote id) pairs it currently runs."""
+
+    __slots__ = ("k", "url", "image", "secret", "adapter", "plan_start",
+                 "plan_count", "pairs", "failures", "last_error")
+
+    def __init__(self, k: int, url: str, image: str, secret: str,
+                 adapter: B.ResourceAdapter, plan_start: int = 0,
+                 plan_count: int = 0):
+        self.k = k
+        self.url = url
+        self.image = image
+        self.secret = secret
+        self.adapter = adapter
+        self.plan_start = plan_start
+        self.plan_count = plan_count
+        # [global index, remote id] in submit order (a slice's indices need
+        # not stay contiguous once rebalancing routes growth here)
+        self.pairs: List[List[Any]] = []
+        # consecutive unreachable polls (per-slice UNKNOWN accounting)
+        self.failures = 0
+        self.last_error = ""
+
+    def indices(self) -> List[int]:
+        return sorted(p[0] for p in self.pairs)
+
+
 class JobProtocol:
     """The Figs. 2-3 bridge protocol for ONE BridgeJob, structured as
     ``start()`` (connect + submit-if-no-id) plus repeated ``tick()`` calls
@@ -83,6 +143,17 @@ class JobProtocol:
     ``PodKilled`` when the driver wants the protocol to die unflushed;
     ``sleep`` is the (checkpointed, interruptible) wait used for retry
     backoff inside a step.
+
+    All shared slice/id/condemned state is guarded by ``self._mu``.  The
+    two per-tick bulk remote operations — the status round-trip and the
+    scale-up fan-out — run OUTSIDE the lock, so concurrent per-slice ticks
+    (multiplexed mode) never wait out a slow resource's polling or growth
+    latency.  Rarer per-index actions (retry resubmission with its
+    configured backoff, condemned-drain cancels, completion-time output
+    downloads) do run under the lock: they briefly serialize the job's
+    slices, bounded by one request (or one ``retry.backoff_seconds``) at a
+    time — size ``monitor_workers``/backoff accordingly, as with the
+    in-step waits documented in core/monitor.py.
     """
 
     # benchmark-baseline switch, PROCESS-WIDE: False restores the
@@ -109,54 +180,67 @@ class JobProtocol:
         self.exit_code: Optional[int] = None
         self.poll: float = 0.0
         # monitor state (populated by start(), survives across ticks)
-        self._adapter: Optional[B.ResourceAdapter] = None
-        self._ids: List[str] = []
-        self._count = 1
+        self._mu = threading.RLock()
+        # serializes elastic scale-ups across per-slice ticks so the growth
+        # fan-out (remote HTTP) can run OUTSIDE _mu without two chains
+        # submitting the same index
+        self._scale_lock = threading.Lock()
+        self._slices: List[PlacementSlice] = []
+        self._sliced = False
         self._unknown_after = 5
         self._retry_limit = 0
         self._backoff = 0.0
         self._attempts: Dict[str, int] = {}
-        self._consecutive_failures = 0
+        # last-known remote info per live global index
+        self._infos: Dict[int, Dict[str, Any]] = {}
         # jids a cancel has been delivered for (kill signal OR scale-down)
-        self._cancel_sent: set = set()
-        # jids condemned by an elastic scale-down: always a SUFFIX of _ids;
-        # they stay tracked (and polled) until terminal, then drop off the
-        # tail together with their per-index config-map keys
-        self._condemned: set = set()
+        self._cancel_sent: Set[str] = set()
+        # jids condemned by an elastic scale-down: always the globally-
+        # HIGHEST index suffix; they stay tracked (and polled) until
+        # terminal, then drop off the tail together with the per-index
+        # config-map keys they owned
+        self._condemned: Set[str] = set()
         # last monitor-written snapshot, for write-coalescing
         self._last_pushed: Dict[str, str] = {}
+
+    # -- indexed slice map -------------------------------------------------
+
+    def slice_count(self) -> int:
+        with self._mu:
+            return max(len(self._slices), 1)
+
+    def _index_map(self) -> Dict[int, Tuple[PlacementSlice, str]]:
+        """Global index -> (owning slice, remote id)."""
+        return {p[0]: (sl, p[1]) for sl in self._slices for p in sl.pairs}
+
+    def _global_ids(self) -> List[str]:
+        """Remote ids ordered by global index (the legacy ``id`` mirror)."""
+        imap = self._index_map()
+        return [imap[i][1] for i in sorted(imap)]
+
+    def _results_key(self, sl: PlacementSlice, idx: int, is_array: bool) -> str:
+        if self._sliced:
+            return slice_key(sl.k, f"results_location_{idx}")
+        return f"results_location_{idx}" if is_array else "results_location"
+
+    def _flush_ids(self, sl: Optional[PlacementSlice] = None) -> None:
+        """Persist the id map: the touched slice's own key plus the global
+        ``id`` mirror (single-slice jobs write ONLY the legacy ``id`` key,
+        keeping today's config-map shape byte-for-byte)."""
+        updates = {"id": ",".join(self._global_ids())}
+        if self._sliced:
+            for s in (self._slices if sl is None else [sl]):
+                updates[slice_key(s.k, "id")] = _encode_pairs(s.pairs)
+        self._push(updates)
 
     # -- paper Fig. 2: main ----------------------------------------------
 
     def start(self) -> bool:
-        """Connect and ensure the remote job(s) exist.  Returns False when
-        the protocol already exited (submission failed or was killed —
-        ``exit_code`` is set); True when monitoring should begin."""
+        """Connect every slice and ensure the remote job(s) exist.  Returns
+        False when the protocol already exited (submission failed or was
+        killed — ``exit_code`` is set); True when monitoring should begin."""
         cm_data = self.cm.data
-        url = cm_data["resourceURL"]
-        image = cm_data["image"]
         self.poll = float(cm_data.get("updateinterval", "20"))
-
-        # credentials from the mounted secret (never from the spec/config map)
-        secret = self.secrets.mount(cm_data["resourcesecret"])
-        token = secret.get("token", "")
-        client = self.directory.connect(url, token)
-        adapter = B.resolve_adapter(self.adapters, image)(client)
-
-        # v1beta1 job arrays: the config map carries the fan-out count; a
-        # single v1alpha1 job is the count=1 degenerate case of the same path
-        count = max(int(cm_data.get("array_count", "1") or "1"), 1)
-        ids = [s for s in cm_data.get("id", "").split(",") if s]
-        if len(ids) < count:
-            ids = self._submit(adapter, cm_data, count, ids)
-            if not ids:
-                return False  # FAILED already recorded; Fig. 2 klog.Exit path
-        else:
-            # paper: "Job has ID in ConfigMap. Handling state."
-            pass
-        self._adapter = adapter
-        self._ids = ids
-        self._count = len(ids)
         self._unknown_after = int(cm_data.get("unknown_after", "5"))
         self._retry_limit = int(cm_data.get("retry_limit", "0") or 0)
         self._backoff = float(cm_data.get("retry_backoff", "0") or 0)
@@ -164,7 +248,63 @@ class JobProtocol:
         self._attempts = {
             k: int(v) for k, v in
             json.loads(cm_data.get("retry_attempts", "{}") or "{}").items()}
+
+        # v1beta1 job arrays: the config map carries the fan-out count; a
+        # single v1alpha1 job is the count=1 degenerate case of the same path
+        count = max(int(cm_data.get("array_count", "1") or "1"), 1)
+        # sharded placement: the scheduler's slice plan, if any; otherwise
+        # ONE implicit slice built from the legacy target keys
+        defs = json.loads(cm_data.get("slices", "") or "null")
+        self._sliced = bool(defs)
+        if not defs:
+            defs = [{"resourceURL": cm_data["resourceURL"],
+                     "image": cm_data["image"],
+                     "resourcesecret": cm_data["resourcesecret"],
+                     "start": 0, "count": count}]
+        slices = []
+        for k, d in enumerate(defs):
+            # credentials from the mounted secret (never from the spec/cm)
+            secret = self.secrets.mount(d["resourcesecret"])
+            client = self.directory.connect(d["resourceURL"],
+                                            secret.get("token", ""))
+            adapter = B.resolve_adapter(self.adapters, d["image"])(client)
+            sl = PlacementSlice(k, d["resourceURL"], d["image"],
+                                d["resourcesecret"], adapter,
+                                int(d.get("start", 0)), int(d.get("count", 0)))
+            if self._sliced:
+                sl.pairs = _decode_pairs(cm_data.get(slice_key(k, "id"), ""))
+            else:
+                sl.pairs = [[i, s] for i, s in enumerate(
+                    s for s in cm_data.get("id", "").split(",") if s)]
+            slices.append(sl)
+        with self._mu:
+            self._slices = slices
+            # the condemned set survives pod death via the config map: a
+            # replacement pod must keep draining (and keep blocking growth
+            # past) a half-cancelled tail, even when a NEWER scale-up patch
+            # already raised the desired count again — otherwise the orphan
+            # cancels poke permanent KILLED holes into the live index set
+            tracked = {p[1] for sl in slices for p in sl.pairs}
+            self._condemned = {t for t in
+                               cm_data.get("condemned", "").split(",")
+                               if t and t in tracked}
+            missing = [i for i in range(count) if i not in self._index_map()]
+        if missing:
+            if not self._submit_initial(cm_data, count, missing):
+                return False  # FAILED already recorded; Fig. 2 klog.Exit path
+        else:
+            # paper: "Job has ID in ConfigMap. Handling state."
+            pass
         return True
+
+    def _planned_slice(self, idx: int) -> PlacementSlice:
+        """The slice whose planned contiguous range owns global ``idx``;
+        indices beyond every plan (post-plan growth) go to the least-
+        populated slice."""
+        for sl in self._slices:
+            if sl.plan_start <= idx < sl.plan_start + sl.plan_count:
+                return sl
+        return min(self._slices, key=lambda sl: (len(sl.pairs), sl.k))
 
     def _index_params(self, cm_data: Dict[str, str], index: int,
                       count: int) -> Dict[str, str]:
@@ -178,82 +318,105 @@ class JobProtocol:
             params.setdefault("BRIDGE_ARRAY_INDEX", str(index))
         return params
 
-    def _submit(self, adapter: B.ResourceAdapter, cm_data: Dict[str, str],
-                count: int = 1, ids: Optional[list] = None) -> list:
+    def _submit_initial(self, cm_data: Dict[str, str], count: int,
+                        missing: List[int]) -> bool:
+        """Fig. 2 submission: route every missing index to its planned
+        slice, natively (one ``submit_array`` call per fresh slice) where
+        the dialect allows, facade fan-out otherwise.  Returns False when
+        the protocol exited (killed / submit budget exhausted)."""
         self._checkpoint()
-        ids = list(ids or [])
         retry_limit = int(cm_data.get("retry_limit", "0") or 0)
         backoff = float(cm_data.get("retry_backoff", "0") or 0)
         # persisted so a restarted pod never re-spends the submit budget
         attempt = int(cm_data.get("submit_attempts", "0") or 0)
         while True:
             if self.cm.get("kill", "false") == "true":
-                self._abort_partial(adapter, ids)
+                self._abort_partial()
                 self.cm.update({"jobStatus": KILLED,
                                 "message": "killed before submission"})
                 self._exit(1)
-                return []
+                return False
             try:
                 script = self._fetch_script(cm_data)
-                self._stage_additional_data(adapter, cm_data)
                 properties = json.loads(cm_data.get("jobproperties", "{}"))
-                if (count > 1 and not ids
-                        and adapter.supports(B.Capability.NATIVE_ARRAYS)):
-                    # native fan-out: one submission call, N remote indices
-                    ids = adapter.submit_array(
-                        script, properties,
-                        [self._index_params(cm_data, i, count)
-                         for i in range(count)])
-                    self.cm.update({"id": ",".join(ids)})
-                else:
-                    self._fanout_submit(adapter, cm_data, ids, count,
-                                        script, properties)
+                for sl in self._slices:
+                    self._stage_additional_data(sl.adapter, cm_data)
+                with self._mu:
+                    imap = self._index_map()
+                    todo_by_slice = []
+                    for sl in self._slices:
+                        todo = sorted(i for i in missing
+                                      if i not in imap
+                                      and self._planned_slice(i) is sl)
+                        if todo:
+                            todo_by_slice.append((sl, todo))
+                    for sl, todo in todo_by_slice:
+                        contiguous = todo == list(range(todo[0],
+                                                        todo[0] + len(todo)))
+                        if (count > 1 and not sl.pairs and contiguous
+                                and sl.adapter.supports(
+                                    B.Capability.NATIVE_ARRAYS)):
+                            # native fan-out: one submission call covers the
+                            # slice's whole contiguous range
+                            ids = sl.adapter.submit_array(
+                                script, properties,
+                                [self._index_params(cm_data, i, count)
+                                 for i in todo],
+                                start_index=todo[0])
+                            sl.pairs = [[i, jid]
+                                        for i, jid in zip(todo, ids)]
+                            self._flush_ids(sl)
+                        else:
+                            self._fanout_submit(sl, cm_data, todo, count,
+                                                script, properties)
                 break
             except (B.SubmitError, TransportError, NoSuchKey, KeyError,
                     ValueError) as e:
                 attempt += 1
                 if attempt > retry_limit:
                     # don't orphan indices already fanned out this CR
-                    self._abort_partial(adapter, ids)
+                    self._abort_partial()
                     self.cm.update(
                         {"jobStatus": FAILED,
                          "message": f"Failed to submit a job to HPC resource: {e}"})
                     self._exit(1)
-                    return []
+                    return False
                 self.cm.update({"submit_attempts": str(attempt)})
                 self._sleep(backoff or self.min_sleep)
-        self.cm.update({"id": ",".join(ids), "jobStatus": SUBMITTED,
+        with self._mu:
+            self._flush_ids()
+        self.cm.update({"jobStatus": SUBMITTED,
                         "submit_time": str(time.time()), "message": ""})
-        return ids
+        return True
 
-    def _fanout_submit(self, adapter: B.ResourceAdapter,
-                       cm_data: Dict[str, str], ids: List[str], count: int,
+    def _fanout_submit(self, sl: PlacementSlice, cm_data: Dict[str, str],
+                       todo: List[int], count: int,
                        script: str, properties: Dict[str, str]) -> None:
-        """Facade-side fan-out: one submit per missing index, with the ``id``
-        list flushed incrementally after EACH submission so a pod killed
-        mid-fan-out (initial, resumed, or mid-scale-up) resumes at the next
-        unsubmitted index instead of duplicating a live one.  Arrays go
-        through resubmit_index so native dialects stamp their index marker
-        even on a resumed fan-out."""
-        while len(ids) < count:
+        """Facade-side fan-out on ONE slice: submit each missing global
+        index, flushing the slice's id map after EACH submission so a pod
+        killed mid-fan-out (initial, resumed, or mid-scale-up) resumes at
+        the next unsubmitted index instead of duplicating a live one.
+        Arrays go through resubmit_index so native dialects stamp their
+        index marker even on a resumed fan-out."""
+        for idx in todo:
             self._checkpoint()
-            idx = len(ids)
             params = self._index_params(cm_data, idx, count)
-            jid = (adapter.resubmit_index(script, properties, params, idx)
+            jid = (sl.adapter.resubmit_index(script, properties, params, idx)
                    if count > 1
-                   else adapter.submit(script, properties, params))
-            ids.append(jid)
-            self._push({"id": ",".join(ids)})
+                   else sl.adapter.submit(script, properties, params))
+            sl.pairs.append([idx, jid])
+            self._flush_ids(sl)
 
-    def _abort_partial(self, adapter: B.ResourceAdapter, ids: list) -> None:
+    def _abort_partial(self) -> None:
         """Best-effort cancel of indices submitted before an aborted fan-out."""
-        if not ids or not adapter.supports(B.Capability.CANCEL):
-            return
-        for jid in ids:
-            try:
-                adapter.cancel(jid)
-            except (TransportError, B.SubmitError):
-                pass
+        for sl in self._slices:
+            if not sl.pairs or not sl.adapter.supports(B.Capability.CANCEL):
+                continue
+            for _, jid in sl.pairs:
+                try:
+                    sl.adapter.cancel(jid)
+                except (TransportError, B.SubmitError):
+                    pass
 
     def _fetch_script(self, cm_data: Dict[str, str]) -> str:
         loc = cm_data.get("scriptlocation", "inline")
@@ -315,39 +478,98 @@ class JobProtocol:
 
     # -- elastic arrays: spec-patch reconcile (delta submit / cancel) -------
 
-    def _scale_up(self, adapter: B.ResourceAdapter, cm_now: Dict[str, str],
+    def _least_loaded_slice(self) -> PlacementSlice:
+        """Rebalancing target for scale-up: the slice whose resource reports
+        the lowest normalized queue load (ties broken toward fewer owned
+        indices).  Slices without QUEUE_LOAD — or unreachable right now —
+        fall back to an index-count comparison.  Called WITHOUT _mu held
+        (the probes are remote round-trips); slice list is immutable after
+        start() and pair counts are only a tie-break heuristic."""
+        if len(self._slices) == 1:
+            return self._slices[0]
+        scored = []
+        for sl in self._slices:
+            load = None
+            if sl.adapter.supports(B.Capability.QUEUE_LOAD):
+                try:
+                    load = B.normalized_queue_load(sl.adapter.queue_load())
+                except (TransportError, B.SubmitError):
+                    load = None
+            scored.append((load, sl))
+        with_load = [(l, sl) for l, sl in scored if l is not None]
+        if with_load:
+            return min(with_load,
+                       key=lambda t: (t[0], len(t[1].pairs), t[1].k))[1]
+        return min(self._slices, key=lambda sl: (len(sl.pairs), sl.k))
+
+    def _scale_up(self, sl: PlacementSlice, cm_now: Dict[str, str],
                   desired: int) -> Optional[str]:
-        """Submit exactly the missing indices [len(ids), desired) via the
-        shared incremental fan-out.  A transient error leaves the remainder
-        for the next tick; the returned stall diagnostic (if any) becomes
-        this tick's status message."""
+        """Submit the missing indices up to ``desired`` on slice ``sl``.
+        Each remote submission runs OUTSIDE the state lock; the resulting id
+        is committed (pair append + incremental flush) under the lock before
+        the next one, and the loop revalidates against the live index map
+        every iteration so a racing scale-down (condemnation) stops the
+        growth.  A transient error leaves the remainder for the next tick;
+        the returned stall diagnostic becomes this tick's status message.
+        Caller holds _scale_lock, so at most one chain grows the job."""
+        with self._mu:
+            idx = len(self._index_map())
         try:
-            self._fanout_submit(
-                adapter, cm_now, self._ids, desired,
-                self._fetch_script(cm_now),
-                json.loads(cm_now.get("jobproperties", "{}")))
-            return None
+            script = self._fetch_script(cm_now)
+            properties = json.loads(cm_now.get("jobproperties", "{}"))
+            while True:
+                with self._mu:
+                    if self._condemned:
+                        return None  # a newer patch shrank the job: stop
+                    idx = len(self._index_map())
+                    if idx >= desired:
+                        return None
+                self._checkpoint()
+                params = self._index_params(cm_now, idx, desired)
+                jid = (sl.adapter.resubmit_index(script, properties, params,
+                                                 idx)
+                       if desired > 1
+                       else sl.adapter.submit(script, properties, params))
+                with self._mu:
+                    sl.pairs.append([idx, jid])
+                    self._flush_ids(sl)
         except (B.SubmitError, TransportError, NoSuchKey, KeyError,
                 ValueError) as e:
-            return (f"scale-up to {desired} stalled at "
-                    f"index {len(self._ids)}: {e}")
+            return (f"scale-up to {desired} stalled at index {idx}: {e}")
 
-    def _reconcile_scale(self, adapter: B.ResourceAdapter,
-                         cm_now: Dict[str, str],
+    def _reconcile_scale(self, cm_now: Dict[str, str],
                          desired: int) -> Optional[str]:
         """Diff desired vs. submitted indices and act on exactly the delta.
-        Scale-down condemns the HIGHEST indices first; scale-up past a still-
-        draining condemned tail waits until the tail is gone (index positions
-        must free up before they are reused).  Returns a stall diagnostic
-        when a scale-up could not complete this tick."""
-        ids = self._ids
-        n_live = len(ids) - len(self._condemned)
-        if desired < n_live:
-            for jid in ids[desired:n_live]:
-                self._condemned.add(jid)
-        elif desired > len(ids) and not self._condemned:
-            return self._scale_up(adapter, cm_now, desired)
-        return None
+        Scale-down condemns the globally-HIGHEST indices first (whichever
+        slice owns them); scale-up routes the whole delta to the least-
+        loaded slice; growth past a still-draining condemned tail waits
+        until the tail is gone (index positions must free up before they
+        are reused).  Condemnation is a cheap state change under _mu; the
+        growth fan-out (load probes + submissions) runs outside it so a
+        slow resource's scale-up never stalls another slice's tick.
+        Returns a stall diagnostic when a scale-up could not complete."""
+        with self._mu:
+            imap = self._index_map()
+            n = len(imap)
+            n_live = n - len(self._condemned)
+            if desired < n_live:
+                indices = sorted(imap)
+                for idx in indices[desired:n_live]:
+                    self._condemned.add(imap[idx][1])
+                # persisted so a pod killed mid-drain hands the half-
+                # cancelled tail to its replacement instead of orphaning it
+                self._push({"condemned": ",".join(sorted(self._condemned))})
+                return None
+            need_growth = desired > n and not self._condemned
+        if not need_growth:
+            return None
+        if not self._scale_lock.acquire(blocking=False):
+            return None  # another chain is already growing this job
+        try:
+            return self._scale_up(self._least_loaded_slice(), cm_now,
+                                  desired)
+        finally:
+            self._scale_lock.release()
 
     def _try_cancel(self, adapter: B.ResourceAdapter, jid: str, state: str,
                     can_cancel_queued: bool) -> None:
@@ -366,73 +588,164 @@ class JobProtocol:
         except TransportError:
             pass  # retry next poll
 
-    def _drain_condemned(self, adapter: B.ResourceAdapter, cm_now: Dict[str, str],
-                         states: List[str], infos: List[Dict[str, Any]]) -> None:
-        """Cancel condemned indices (highest first) respecting the adapter's
-        CANCEL / CANCEL_QUEUED capabilities, then pop the terminal condemned
-        tail — GC'ing the per-index config-map keys (retry budget,
-        results_location_{i}) those indices owned."""
-        ids = self._ids
-        can_cancel = adapter.supports(B.Capability.CANCEL)
-        can_cancel_queued = adapter.supports(B.Capability.CANCEL_QUEUED)
-        for i in range(len(ids) - 1, -1, -1):
-            if ids[i] not in self._condemned:
-                break  # condemned jids are a suffix
-            if can_cancel:
-                self._try_cancel(adapter, ids[i], states[i], can_cancel_queued)
+    def _drain_condemned(self, cm_now: Dict[str, str],
+                         states: Dict[int, str], ticked: Set[int]) -> None:
+        """Cancel condemned indices (highest first) respecting each owning
+        slice's CANCEL / CANCEL_QUEUED capabilities — cancels go out only on
+        the slices this tick polled, so a slow resource's drain never rides
+        a healthy slice's tick — then pop the terminal condemned tail,
+        GC'ing the per-index config-map keys (retry budget, results
+        location) those indices owned."""
+        for sl in self._slices:
+            if sl.k not in ticked or not sl.adapter.supports(
+                    B.Capability.CANCEL):
+                continue
+            cq = sl.adapter.supports(B.Capability.CANCEL_QUEUED)
+            for idx, jid in sorted(sl.pairs, reverse=True):
+                if jid in self._condemned:
+                    self._try_cancel(sl.adapter, jid,
+                                     states.get(idx, SUBMITTED), cq)
+        imap = self._index_map()
+        indices = sorted(imap)
+        is_array = "array_count" in cm_now or len(indices) > 1
         orphaned: List[str] = []
-        while (ids and ids[-1] in self._condemned
-               and states[-1] in (DONE, FAILED, KILLED)):
-            jid = ids.pop()
-            states.pop()
-            infos.pop()
+        while indices:
+            idx = indices[-1]
+            sl, jid = imap[idx]
+            if (jid not in self._condemned
+                    or states.get(idx) not in (DONE, FAILED, KILLED)):
+                break  # condemned jids are the global index suffix
+            indices.pop()
+            del imap[idx]
+            sl.pairs = [p for p in sl.pairs if p[0] != idx]
             self._condemned.discard(jid)
             self._cancel_sent.discard(jid)
-            idx = len(ids)
-            orphaned.append(f"results_location_{idx}")
+            self._infos.pop(idx, None)
+            states.pop(idx, None)
+            orphaned.append(self._results_key(sl, idx, is_array))
             self._attempts.pop(str(idx), None)
         if orphaned:
+            if not self._condemned:
+                orphaned.append("condemned")  # drain complete: GC the key
             self.cm.prune(orphaned)
             for k in orphaned:
                 self._last_pushed.pop(k, None)
-            updates = {"id": ",".join(ids)}
+            updates: Dict[str, Any] = {"id": ",".join(self._global_ids())}
+            if self._condemned:
+                updates["condemned"] = ",".join(sorted(self._condemned))
+            if self._sliced:
+                for sl in self._slices:
+                    updates[slice_key(sl.k, "id")] = _encode_pairs(sl.pairs)
             if self._retry_limit or "retry_attempts" in cm_now:
                 updates["retry_attempts"] = json.dumps(self._attempts)
             self._push(updates)
 
-    def tick(self) -> bool:
-        """ONE Fig.-3 monitor iteration.  Returns True when the protocol
-        finished (``exit_code`` is set); the driver waits ``poll`` seconds
-        between calls."""
-        adapter = self._adapter
+    def _placements_snapshot(self, states: Dict[int, str]) -> List[dict]:
+        """Per-slice status for the cm ``placements`` key (mirrored into
+        ``status.placements``): which live indices each slice runs, where,
+        and the slice-local aggregate state."""
+        out = []
+        for sl in self._slices:
+            idxs = sorted(p[0] for p in sl.pairs
+                          if p[1] not in self._condemned)
+            sl_states = [states.get(i, SUBMITTED) for i in idxs]
+            if not idxs:
+                agg = "IDLE"
+            elif all(s == DONE for s in sl_states):
+                agg = DONE
+            elif any(s == FAILED for s in sl_states):
+                agg = FAILED
+            elif any(s == KILLED for s in sl_states):
+                agg = KILLED
+            elif any(s == RUNNING for s in sl_states):
+                agg = RUNNING
+            else:
+                agg = SUBMITTED
+            out.append({"slice": sl.k, "resourceURL": sl.url,
+                        "image": sl.image, "indices": idxs, "state": agg})
+        return out
+
+    def tick(self, slice_k: Optional[int] = None) -> bool:
+        """ONE Fig.-3 monitor iteration.  ``slice_k=None`` polls every slice
+        sequentially (the pod-per-CR shape); ``slice_k=k`` polls only that
+        slice (the multiplexed runtime runs one chain per slice).  Returns
+        True when the protocol finished (``exit_code`` is set); the driver
+        waits ``poll`` seconds between calls per slice."""
         cm_now = self.cm.data  # Fig. 3: "Get current config map"
         kill_requested = cm_now.get("kill", "false") == "true"
         desired = max(int(cm_now.get("array_count", "1") or "1"), 1)
-        is_array = "array_count" in cm_now or len(self._ids) > 1
 
         # elastic reconcile: act on a spec patch before polling (a kill
-        # supersedes any pending resize — never grow a job being killed)
+        # supersedes any pending resize — never grow a job being killed).
+        # _reconcile_scale does its own locking: condemnation under _mu,
+        # growth HTTP outside it behind _scale_lock
         stall_msg = None
         if not kill_requested:
-            stall_msg = self._reconcile_scale(adapter, cm_now, desired)
+            stall_msg = self._reconcile_scale(cm_now, desired)
 
-        ids = self._ids
-        self._count = len(ids)
-        try:
-            infos = self._poll_statuses(adapter, ids)
-            self._consecutive_failures = 0
-        except (TransportError, B.SubmitError) as e:
-            self._consecutive_failures += 1
-            if self._consecutive_failures >= self._unknown_after:
-                # black-box honesty: unreachable != dead
-                self._push({"jobStatus": UNKNOWN,
-                            "message": f"resource unreachable: {e}"})
-            return False
+        with self._mu:
+            targets = (self._slices if slice_k is None
+                       else [self._slices[slice_k]])
+            snapshot = [(sl, [list(p) for p in sl.pairs]) for sl in targets]
 
-        states = [_CANON_TO_BRIDGE[info["state"]] for info in infos]
+        # the remote round-trip happens OUTSIDE the state lock: a slow
+        # resource must not stall another slice's tick
+        polled, failed = [], []
+        for sl, pairs in snapshot:
+            if not pairs:
+                polled.append((sl, pairs, []))
+                continue
+            try:
+                infos = self._poll_statuses(sl.adapter,
+                                            [jid for _, jid in pairs])
+                polled.append((sl, pairs, infos))
+            except (TransportError, B.SubmitError) as e:
+                failed.append((sl, e))
+
+        with self._mu:
+            imap = self._index_map()
+            for sl, pairs, infos in polled:
+                sl.failures = 0
+                sl.last_error = ""
+                for (idx, jid), info in zip(pairs, infos):
+                    cur = imap.get(idx)
+                    if cur is not None and cur[1] == jid:
+                        self._infos[idx] = info
+            for sl, e in failed:
+                sl.failures += 1
+                sl.last_error = str(e)
+            if not polled:
+                # nothing answered this tick: surface unreachability once
+                # the budget is spent (black-box honesty: unreachable !=
+                # dead) — never fall through to a stale-data evaluation
+                for sl, e in failed:
+                    if sl.failures >= self._unknown_after:
+                        where = f"slice {sl.k} " if self._sliced else ""
+                        self._push(
+                            {"jobStatus": UNKNOWN,
+                             "message": f"{where}resource unreachable: {e}"})
+                return False
+            return self._evaluate(cm_now, desired, kill_requested, stall_msg,
+                                  {sl.k for sl, _, _ in polled})
+
+    def _evaluate(self, cm_now: Dict[str, str], desired: int,
+                  kill_requested: bool, stall_msg: Optional[str],
+                  ticked: Set[int]) -> bool:
+        """The post-poll half of a tick (holding ``self._mu``): drain
+        condemned indices, spend retry budget, aggregate, push status, act
+        on the kill flag, decide termination.  Per-slice remote actions
+        (cancel, resubmit) run only for the slices this tick polled."""
+        imap = self._index_map()
+        states = {
+            i: (_CANON_TO_BRIDGE[self._infos[i]["state"]]
+                if i in self._infos else SUBMITTED)
+            for i in imap}
         if self._condemned:
-            self._drain_condemned(adapter, cm_now, states, infos)
-        live = [i for i in range(len(ids)) if ids[i] not in self._condemned]
+            self._drain_condemned(cm_now, states, ticked)
+            imap = self._index_map()
+        indices = sorted(imap)
+        is_array = "array_count" in cm_now or len(indices) > 1
+        live = [i for i in indices if imap[i][1] not in self._condemned]
         retry_limit, attempts = self._retry_limit, self._attempts
 
         # spec.retry: resubmit FAILED indices while budget remains
@@ -440,9 +753,10 @@ class JobProtocol:
         # condemned index is being drained, never resubmitted)
         if retry_limit and not kill_requested:
             for i in live:
-                st = states[i]
+                sl = imap[i][0]
                 used = attempts.get(str(i), 0)
-                if st != FAILED or used >= retry_limit:
+                if (states[i] != FAILED or used >= retry_limit
+                        or sl.k not in ticked):
                     continue
                 attempts[str(i)] = used + 1
                 if self._backoff:
@@ -451,21 +765,31 @@ class JobProtocol:
                     # arrays go through resubmit_index so native dialects
                     # can restamp their index marker; single jobs resubmit
                     # plainly
-                    resubmit = (adapter.resubmit_index if is_array
-                                else lambda s, p, q, _i: adapter.submit(s, p, q))
+                    resubmit = (sl.adapter.resubmit_index if is_array
+                                else lambda s, p, q, _i:
+                                sl.adapter.submit(s, p, q))
                     new_id = resubmit(
                         self._fetch_script(cm_now),
                         json.loads(cm_now.get("jobproperties", "{}")),
-                        self._index_params(cm_now, i, max(desired, len(ids))), i)
+                        self._index_params(cm_now, i,
+                                           max(desired, len(indices))), i)
                 except (B.SubmitError, TransportError, NoSuchKey,
                         KeyError, ValueError):
                     # budget consumed; surface FAILED when exhausted
                     self._push({"retry_attempts": json.dumps(attempts)})
                     continue
-                ids[i] = new_id
+                for p in sl.pairs:
+                    if p[0] == i:
+                        p[1] = new_id
+                        break
+                imap[i] = (sl, new_id)
                 states[i] = SUBMITTED
-                self._push({"id": ",".join(ids),
-                            "retry_attempts": json.dumps(attempts)})
+                self._infos.pop(i, None)
+                updates = {"id": ",".join(self._global_ids()),
+                           "retry_attempts": json.dumps(attempts)}
+                if self._sliced:
+                    updates[slice_key(sl.k, "id")] = _encode_pairs(sl.pairs)
+                self._push(updates)
 
         def exhausted(i: int) -> bool:
             # a kill cancels the remaining budget — FAILED is final then
@@ -476,7 +800,7 @@ class JobProtocol:
         # jobs, and exiting below a stalled scale-up target would silently
         # drop an accepted patch (a kill supersedes the pending resize)
         finished = (not self._condemned
-                    and (kill_requested or len(ids) == desired)
+                    and (kill_requested or len(indices) == desired)
                     and all(
                         states[i] in (DONE, KILLED)
                         or (states[i] == FAILED and exhausted(i))
@@ -495,42 +819,63 @@ class JobProtocol:
         else:
             agg = SUBMITTED
 
-        updates = {"jobStatus": agg,
-                   "message": stall_msg or self._aggregate_message(
-                       [states[i] for i in live],
-                       [infos[i] for i in live])}
+        live_infos = [self._infos.get(i, {}) for i in live]
+        message = stall_msg or self._aggregate_message(
+            [states[i] for i in live], live_infos)
+        # an unreachable slice must not be masked by its healthy siblings'
+        # aggregate: the CR stays UNKNOWN until every slice answers again
+        # (its stale non-terminal states above also keep `finished` False,
+        # so we never invent progress OR death from a black-box silence)
+        unreachable = [sl for sl in self._slices
+                       if sl.failures >= self._unknown_after]
+        if unreachable and not finished:
+            agg = UNKNOWN
+            message = "; ".join(
+                (f"slice {sl.k} " if self._sliced else "")
+                + f"resource unreachable: {sl.last_error}"
+                for sl in unreachable)
+
+        updates = {"jobStatus": agg, "message": message}
         if is_array:
             updates["index_states"] = json.dumps(
                 {str(i): states[i] for i in live})
-        starts = [infos[i].get("start_time") for i in live
-                  if infos[i].get("start_time")]
-        ends = [infos[i].get("end_time") for i in live
-                if infos[i].get("end_time")]
+        if self._sliced:
+            updates["placements"] = json.dumps(
+                self._placements_snapshot(states))
+        starts = [info.get("start_time") for info in live_infos
+                  if info.get("start_time")]
+        ends = [info.get("end_time") for info in live_infos
+                if info.get("end_time")]
         if starts:
             updates["start_time"] = str(min(starts))
-        if ends and (len(ids) == 1 or finished):
+        if ends and (len(indices) == 1 or finished):
             updates["end_time"] = str(max(ends))
         for i in live:
-            if infos[i].get("results_location"):
-                key = (f"results_location_{i}" if is_array
-                       else "results_location")
-                updates[key] = infos[i]["results_location"]
+            info = self._infos.get(i, {})
+            if info.get("results_location"):
+                updates[self._results_key(imap[i][0], i, is_array)] = \
+                    info["results_location"]
         # the Kubernetes convergence handshake: report the generation whose
         # desired state is now fully applied (all indices submitted, nothing
         # draining) so clients can await `observedGeneration == generation`
         if (cm_now.get("generation") and not self._condemned
-                and len(ids) == desired):
+                and len(indices) == desired):
             updates["observed_generation"] = cm_now["generation"]
         self._push(updates)
 
-        if kill_requested and adapter.supports(B.Capability.CANCEL):
-            can_cancel_queued = adapter.supports(B.Capability.CANCEL_QUEUED)
-            for jid, st in zip(ids, states):
-                self._try_cancel(adapter, jid, st, can_cancel_queued)
+        if kill_requested:
+            for sl in self._slices:
+                if sl.k not in ticked or not sl.adapter.supports(
+                        B.Capability.CANCEL):
+                    continue
+                cq = sl.adapter.supports(B.Capability.CANCEL_QUEUED)
+                for idx, jid in list(sl.pairs):
+                    self._try_cancel(sl.adapter, jid,
+                                     states.get(idx, SUBMITTED), cq)
 
         if finished:
             if agg == DONE:
-                self._finalize_outputs(adapter, ids, cm_now)
+                self._finalize_outputs(cm_now)
                 self._exit(0)
             else:
                 self._exit(1)
@@ -545,10 +890,9 @@ class JobProtocol:
                  for i, info in enumerate(infos) if info.get("reason")]
         return "; ".join(parts)
 
-    def _finalize_outputs(self, adapter: B.ResourceAdapter, ids: list,
-                          cm_data: Dict[str, str]) -> None:
-        """Download outputs from the resource; upload to S3 if configured.
-        Array indices land under ``<pod>/<index>/`` prefixes."""
+    def _finalize_outputs(self, cm_data: Dict[str, str]) -> None:
+        """Download outputs from each slice's resource; upload to S3 if
+        configured.  Array indices land under ``<pod>/<index>/`` prefixes."""
         self._checkpoint()
         props = json.loads(cm_data.get("jobproperties", "{}"))
         bucket = cm_data.get("s3uploadbucket", "")
@@ -556,22 +900,26 @@ class JobProtocol:
         for key in ("OutputFileName", "ErrorFileName"):
             if props.get(key) and props[key] not in names:
                 names.append(props[key])
-        can_download = adapter.supports(B.Capability.DOWNLOAD)
-        can_logs = adapter.supports(B.Capability.LOGS)
-        if not names or not (can_download or can_logs):
+        if not names:
             return
+        total = sum(len(sl.pairs) for sl in self._slices)
         uploaded = []
-        for idx, jid in enumerate(ids):
-            prefix = self.name if len(ids) == 1 else f"{self.name}/{idx}"
-            for name in names:
-                data = adapter.download(name) if can_download else None
-                if data is None and can_logs:
-                    data = adapter.download_logs(jid)  # ray idiom
-                if data is None:
-                    continue
-                if bucket:
-                    self.s3.put(bucket, f"{prefix}/{name}", data)
-                    uploaded.append(f"{bucket}:{prefix}/{name}")
+        for sl in self._slices:
+            can_download = sl.adapter.supports(B.Capability.DOWNLOAD)
+            can_logs = sl.adapter.supports(B.Capability.LOGS)
+            if not (can_download or can_logs):
+                continue
+            for idx, jid in sorted(sl.pairs):
+                prefix = self.name if total == 1 else f"{self.name}/{idx}"
+                for name in names:
+                    data = sl.adapter.download(name) if can_download else None
+                    if data is None and can_logs:
+                        data = sl.adapter.download_logs(jid)  # ray idiom
+                    if data is None:
+                        continue
+                    if bucket:
+                        self.s3.put(bucket, f"{prefix}/{name}", data)
+                        uploaded.append(f"{bucket}:{prefix}/{name}")
         if uploaded:
             self.cm.update({"outputs": ",".join(uploaded)})
 

@@ -17,6 +17,17 @@ unchanged.  ``kill_pod()`` still means "node failure": the task dies at its
 next action boundary without flushing, and a replacement task resumes from
 the config map without resubmitting.
 
+Sharded placement adds PER-SLICE scheduling: a sliced array CR
+(``spec.placement``) gets one scheduling CHAIN per placement slice on the
+same deadline heap, each chain ticking only its own slice
+(``JobProtocol.tick(slice_k)``).  The slice's remote round-trip runs outside
+the protocol's state lock and each chain holds only its own chain lock, so
+a slow resource delays exactly its own slice's cadence — a healthy slice's
+ticks keep firing on schedule.  Death (kill or crash) is finalized by the
+first chain to observe it, after barriering on every other chain's lock, so
+no in-flight step of a dying task can write state behind a restarted
+replacement's back.
+
 What changes is the cost model: monitor threads = pool size (not CR count),
 and one poll tick costs one heap pop + one (batched) status request instead
 of a per-CR wakeup — see benchmarks/bridge_scale.py and docs/perf.md.
@@ -34,7 +45,7 @@ import heapq
 import itertools
 import threading
 import time
-from typing import List, Mapping, Optional, Tuple, Type
+from typing import Dict, List, Mapping, Optional, Tuple, Type
 
 from repro.core.backends import base as B
 from repro.core.controller import (ControllerPod, JobProtocol, PodKilled,
@@ -50,7 +61,9 @@ class MonitorTask:
 
     Drop-in for ``ControllerPod`` from the operator's point of view — same
     phases, same kill/alive/join surface — but stepped by the runtime's
-    worker pool instead of owning a thread.
+    worker pool instead of owning a thread.  A sliced job runs one scheduling
+    chain per placement slice; chain 0 additionally owns start-up and global
+    reconcile wake-ups.
     """
 
     def __init__(self, runtime: "MonitorRuntime", name: str,
@@ -69,20 +82,21 @@ class MonitorTask:
         self._killed = threading.Event()
         self._done = threading.Event()
         self._started = False
-        # newest heap-entry token (written under the runtime's cv lock): a
-        # popped entry carrying an older token is stale and is dropped, so a
-        # task has exactly ONE live scheduling chain however many times
-        # kill_pod()/poke() push extra wake-up entries
-        self._sched_token = 0
+        # newest heap-entry token PER CHAIN (written under the runtime's cv
+        # lock): a popped entry carrying an older token is stale and is
+        # dropped, so each chain has exactly ONE live scheduling sequence
+        # however many times kill_pod()/poke() push extra wake-up entries
+        self._sched_tokens: Dict[int, int] = {}
         # set by poke(); a step consumes it so a patch arriving mid-step is
         # applied by an immediate follow-up tick, never a full poll later
         self._poke_pending = False
-        # serializes steps: the kill_pod() wake-up entry must never declare
-        # the task dead while another worker is still mid-step (the operator
-        # would restart a replacement against a config map the stale step
-        # can still write — the double-submission ControllerPod's
-        # thread-liveness semantics rule out)
-        self._step_lock = threading.Lock()
+        # one lock per chain: serializes steps of the SAME slice (a
+        # kill_pod() wake-up racing that slice's running tick) while letting
+        # different slices of one job step concurrently — the whole point of
+        # per-slice scheduling
+        self._chain_locks: Dict[int, threading.Lock] = {0: threading.Lock()}
+        # single-finalizer guard for the death barrier (see _die)
+        self._dying = threading.Lock()
         self._proto = JobProtocol(
             name, configmap, secrets, objectstore, directory, adapters,
             checkpoint=self._checkpoint, sleep=self._sleep,
@@ -95,17 +109,18 @@ class MonitorTask:
         nothing flushed.  Rescheduled immediately so the death is observed
         (and the operator can restart) without waiting a full poll period."""
         self._killed.set()
-        self._runtime.schedule(self, 0.0)
+        self._runtime.schedule(self, 0.0, 0)
 
     def poke(self) -> None:
         """A spec patch landed in the config map: pull the next tick forward
         so the reconcile delta is applied now, not a poll period from now.
         The pending flag survives a poke that races a RUNNING step (whose
         own reschedule would otherwise supersede the immediate wake-up): the
-        in-flight step consumes it by returning a zero delay."""
+        in-flight step consumes it by returning a zero delay.  Reconcile is
+        global, so chain 0 carries the wake-up."""
         if not self._done.is_set():
             self._poke_pending = True
-            self._runtime.schedule(self, 0.0)
+            self._runtime.schedule(self, 0.0, 0)
 
     def alive(self) -> bool:
         return not self._done.is_set()
@@ -126,12 +141,17 @@ class MonitorTask:
 
     # -- stepping (runtime workers only) -----------------------------------
 
-    def _step(self) -> Optional[float]:
-        """Advance the protocol by one action.  Returns the delay until the
-        next step, or None when this task is finished for good."""
-        if not self._step_lock.acquire(blocking=False):
-            # another worker is mid-step (a kill_pod() wake-up racing a
-            # running tick): retry shortly rather than stepping concurrently
+    def _step(self, chain: int) -> Optional[float]:
+        """Advance the protocol by one action on ``chain`` (= slice index).
+        Returns the delay until the chain's next step, or None when the
+        chain is finished for good."""
+        lock = self._chain_locks.get(chain)
+        if lock is None:
+            return None  # chain of a task generation that no longer exists
+        if not lock.acquire(blocking=False):
+            # this chain is mid-step on another worker (a kill_pod() wake-up
+            # racing a running tick): retry shortly rather than stepping the
+            # same slice concurrently
             return self.min_sleep
         try:
             if self._done.is_set():
@@ -140,7 +160,8 @@ class MonitorTask:
             # step (the operator flushes the config map BEFORE poking, and
             # the step reads it fresh); one that lands mid-step re-raises the
             # flag and is consumed below
-            self._poke_pending = False
+            if chain == 0:
+                self._poke_pending = False
             try:
                 self._checkpoint()
                 if not self._started:
@@ -149,22 +170,48 @@ class MonitorTask:
                     if not self._proto.start():
                         self._finish()
                         return None
+                    # sliced job: spawn one scheduling chain per additional
+                    # slice.  EVERY lock is registered before ANY chain is
+                    # scheduled — a freshly-scheduled chain can die (kill
+                    # racing start-up) and its death barrier must see the
+                    # complete, no-longer-mutated lock table
+                    n = self._proto.slice_count()
+                    for k in range(1, n):
+                        self._chain_locks[k] = threading.Lock()
+                    for k in range(1, n):
+                        self._runtime.schedule(self, 0.0, k)
                     return self._next_delay()
-                if self._proto.tick():
+                if self._proto.tick(chain):
                     self._finish()
                     return None
                 return self._next_delay()
             except PodKilled:
-                self.phase = ControllerPod.KILLED_PHASE
-                self._done.set()
-                return None
+                return self._die(chain)
             except Exception as e:  # task crash — the operator restarts it
                 self.error = f"{type(e).__name__}: {e}"
-                self.phase = ControllerPod.KILLED_PHASE
-                self._done.set()
-                return None
+                return self._die(chain)
         finally:
-            self._step_lock.release()
+            lock.release()
+
+    def _die(self, chain: int) -> Optional[float]:
+        """Finalize a kill/crash EXACTLY ONCE, barriering on every other
+        chain's lock (held while flipping the phase) so no in-flight step of
+        this task can still write config-map state once the operator sees
+        the task dead and restarts a replacement."""
+        self._killed.set()  # crash path: make other chains die at checkpoints
+        if not self._dying.acquire(blocking=False):
+            return None  # another chain is finalizing the death
+        others = [l for k, l in sorted(self._chain_locks.items())
+                  if k != chain]
+        for l in others:
+            l.acquire()
+        try:
+            self.phase = ControllerPod.KILLED_PHASE
+            self._done.set()
+        finally:
+            for l in others:
+                l.release()
+        return None
 
     def _next_delay(self) -> float:
         """Poll delay for the next step — zero when a poke or a kill arrived
@@ -184,12 +231,13 @@ class MonitorTask:
 
 
 class MonitorRuntime:
-    """Fixed worker pool + poll-deadline heap driving many MonitorTasks."""
+    """Fixed worker pool + poll-deadline heap driving many MonitorTasks
+    (one heap entry chain per placement slice of each task)."""
 
     def __init__(self, workers: int = 4, name: str = "bridge-monitor"):
         self.workers = workers
         self.name = name
-        self._heap: List[Tuple[float, int, MonitorTask, int]] = []
+        self._heap: List[Tuple[float, int, MonitorTask, int, int]] = []
         self._seq = itertools.count()
         self._cv = threading.Condition()
         self._stop = threading.Event()
@@ -230,18 +278,21 @@ class MonitorRuntime:
         connect+submit) is due immediately."""
         task = MonitorTask(self, name, configmap, secrets, objectstore,
                            directory, adapters, min_sleep=min_sleep)
-        self.schedule(task, 0.0)
+        self.schedule(task, 0.0, 0)
         return task
 
-    def schedule(self, task: MonitorTask, delay: float) -> None:
-        """(Re)schedule a task, SUPERSEDING any entry still in the heap: the
-        token stamped here invalidates older entries, which the workers drop
-        on pop — one task, one live chain."""
+    def schedule(self, task: MonitorTask, delay: float,
+                 chain: int = 0) -> None:
+        """(Re)schedule one of a task's chains, SUPERSEDING any entry that
+        chain still has in the heap: the token stamped here invalidates
+        older entries, which the workers drop on pop — one chain, one live
+        sequence."""
         with self._cv:
-            task._sched_token += 1
+            token = task._sched_tokens.get(chain, 0) + 1
+            task._sched_tokens[chain] = token
             heapq.heappush(self._heap,
                            (time.time() + delay, next(self._seq), task,
-                            task._sched_token))
+                            chain, token))
             self._cv.notify()
 
     # -- workers -----------------------------------------------------------
@@ -249,12 +300,12 @@ class MonitorRuntime:
     def _worker(self) -> None:
         while True:
             with self._cv:
-                task = None
+                task = chain = None
                 while not self._stop.is_set():
                     now = time.time()
                     if self._heap and self._heap[0][0] <= now:
-                        _, _, task, token = heapq.heappop(self._heap)
-                        if token != task._sched_token:
+                        _, _, task, chain, token = heapq.heappop(self._heap)
+                        if token != task._sched_tokens.get(chain):
                             task = None
                             continue  # superseded by a newer entry
                         break
@@ -263,6 +314,6 @@ class MonitorRuntime:
                     self._cv.wait(wait)
                 if task is None:
                     return  # stopped
-            delay = task._step()
+            delay = task._step(chain)
             if delay is not None:
-                self.schedule(task, delay)
+                self.schedule(task, delay, chain)

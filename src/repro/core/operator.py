@@ -47,6 +47,7 @@ from repro.core.resource import (ALL_STATES, BridgeJob, DONE, FAILED, KILLED,
                                  PENDING, RUNNING, SUBMITTED, TERMINAL_STATES,
                                  UNKNOWN)
 from repro.core.rest import ResourceManagerDirectory
+from repro.core.scheduler import LoadProbe, plan_placement
 from repro.core.secrets import SecretStore
 from repro.core.statestore import StateStore
 
@@ -95,6 +96,15 @@ class BridgeOperator:
         self._lock = threading.RLock()
         # v1beta1 ttlSecondsAfterFinished: uid -> first-seen-terminal time
         self._terminal_at: Dict[str, float] = {}
+        # sharded placement: queue-load prober for slice assignment (shared
+        # TTL cache + concurrent probe, same machinery the scheduler uses)
+        self._load_probe = LoadProbe(self._connect_adapter)
+
+    def _connect_adapter(self, url: str, image: str,
+                         secret: str) -> B.ResourceAdapter:
+        token = self.secrets.mount(secret).get("token", "")
+        client = self.directory.connect(url, token)
+        return B.resolve_adapter(self.adapters, image)(client)
 
     # -- lifecycle --------------------------------------------------------
 
@@ -186,21 +196,40 @@ class BridgeOperator:
 
     def _ensure_started(self, job: BridgeJob) -> None:
         with self._lock:
-            if job.uid in self.pods or job.deleted or job.status.terminal():
+            if not self._startable(job):
                 return
-            if job.spec.kill:
-                # killed while no pod exists (e.g. dependency-gated): there is
-                # no config map to carry the signal, so settle the CR directly
-                self.registry.update_status(
-                    job.name, job.namespace, state=KILLED,
-                    message="killed before the controller pod was created")
-                return
-            if not self._dependencies_ready(job):
+        # sharded placement: assign slices ONCE, at config-map creation (a
+        # pod restart finds the cm and resumes the recorded plan — never
+        # re-planned).  The candidate probe round is remote HTTP, so it runs
+        # OUTSIDE the operator lock: admission of unrelated jobs must not
+        # queue behind a slow candidate endpoint.
+        plan = None
+        if (job.spec.placement and job.spec.placement.candidates
+                and not self.statestore.exists(self.cm_name(job))):
+            count = job.spec.array.count if job.spec.array else 1
+            plan = plan_placement(count, job.spec.placement,
+                                  self._load_probe)
+        with self._lock:
+            if not self._startable(job):  # revalidate after the probe gap
                 return
             cm = self.statestore.get_or_create(
-                self.cm_name(job), self._cm_payload(job))
+                self.cm_name(job), self._cm_payload(job, plan))
             self.registry.update_status(job.name, job.namespace, state=PENDING)
             self._spawn_pod(job)
+
+    def _startable(self, job: BridgeJob) -> bool:
+        """Admission early-outs (caller holds the lock); may settle the CR
+        (killed before any pod existed, failed dependency)."""
+        if job.uid in self.pods or job.deleted or job.status.terminal():
+            return False
+        if job.spec.kill:
+            # killed while no pod exists (e.g. dependency-gated): there is
+            # no config map to carry the signal, so settle the CR directly
+            self.registry.update_status(
+                job.name, job.namespace, state=KILLED,
+                message="killed before the controller pod was created")
+            return False
+        return self._dependencies_ready(job)
 
     def _dependencies_ready(self, job: BridgeJob) -> bool:
         """v1beta1 spec.dependencies: gate pod creation on sibling CRs.
@@ -228,14 +257,22 @@ class BridgeOperator:
                                         state=PENDING, message=blocking)
         return False
 
-    def _cm_payload(self, job: BridgeJob) -> Dict[str, str]:
+    def _cm_payload(self, job: BridgeJob,
+                    plan: Optional[list] = None) -> Dict[str, str]:
         """Operator 'populates the configuration map with the parameters
-        required for the pod's execution' (paper §5.1)."""
+        required for the pod's execution' (paper §5.1).
+
+        ``plan`` is the scheduler's slice assignment for a placed job: a
+        one-slice plan collapses onto the legacy target keys (byte-for-byte
+        today's shape); a multi-slice plan additionally records the
+        ``slices`` key the controller fans out over, with slice 0 mirrored
+        into the legacy keys for observability."""
         s = job.spec
         data = {
-            "resourceURL": s.resourceURL,
-            "image": s.image,
-            "resourcesecret": s.resourcesecret,
+            "resourceURL": plan[0]["resourceURL"] if plan else s.resourceURL,
+            "image": plan[0]["image"] if plan else s.image,
+            "resourcesecret": (plan[0]["resourcesecret"] if plan
+                               else s.resourcesecret),
             "updateinterval": str(s.updateinterval),
             "jobscript": s.jobdata.jobscript,
             "scriptlocation": s.jobdata.scriptlocation,
@@ -260,6 +297,8 @@ class BridgeOperator:
         if s.retry and (s.retry.limit or s.retry.backoff_seconds):
             data["retry_limit"] = str(s.retry.limit)
             data["retry_backoff"] = str(s.retry.backoff_seconds)
+        if plan and len(plan) > 1:
+            data["slices"] = json.dumps(plan)
         return data
 
     def _spawn_pod(self, job: BridgeJob) -> None:
@@ -337,6 +376,8 @@ class BridgeOperator:
             fields["end_time"] = float(data["end_time"])
         if data.get("index_states"):
             fields["index_states"] = json.loads(data["index_states"])
+        if data.get("placements"):
+            fields["placements"] = json.loads(data["placements"])
         if data.get("observed_generation"):
             fields["observed_generation"] = int(data["observed_generation"])
         if any(getattr(job.status, k) != v for k, v in fields.items()):

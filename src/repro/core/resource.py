@@ -22,6 +22,10 @@
       retry: {limit: 2, backoff_seconds: 0.0}           # per-index resubmission
       ttlSecondsAfterFinished: 30                       # auto-GC the CR
       dependencies: [other-job, ...]                    # gate on sibling CRs
+      placement:                                        # sharded placement
+        candidates: [{resourceURL, image, resourcesecret, weight}, ...]
+        strategy: single|spread|weighted                # how to split indices
+        maxSlices: 2                                    # cap on resources used
 
 ``spec.array`` is MUTABLE on a live CR (elastic arrays): every spec mutation
 bumps ``metadata.generation`` and the reconciler records the generation it
@@ -53,7 +57,9 @@ KIND = "BridgeJob"
 
 # spec keys that exist only in v1beta1 (the conversion layer gates on these)
 BETA_ONLY_SPEC_KEYS = ("array", "retry", "ttlSecondsAfterFinished",
-                       "dependencies")
+                       "dependencies", "placement")
+
+PLACEMENT_STRATEGIES = ("single", "spread", "weighted")
 
 # Lifecycle states (paper §5.1 + DESIGN.md §8).
 PENDING = "PENDING"
@@ -118,6 +124,58 @@ class ArraySpec:
 
 
 @dataclass(frozen=True)
+class PlacementCandidate:
+    """One schedulable target a sliced array may land on: where + how to
+    talk to it.  ``weight`` only matters under ``strategy: weighted``."""
+    resourceURL: str = ""
+    image: str = ""
+    resourcesecret: str = ""
+    weight: float = 1.0
+
+    def validate(self) -> None:
+        if not (self.resourceURL and self.image and self.resourcesecret):
+            raise ValidationError(
+                "placement candidates need resourceURL, image and "
+                "resourcesecret")
+        if self.weight <= 0:
+            raise ValidationError("placement candidate weight must be > 0")
+
+
+@dataclass(frozen=True)
+class PlacementSpec:
+    """spec.placement (v1beta1) — sharded placement of one array CR.
+
+    The scheduler partitions the array's index space into per-resource
+    SLICES, each slice owning a contiguous initial index range plus its own
+    adapter/endpoint/secret and per-slice state-store keys:
+
+      * ``single``   — the whole array lands on the least-loaded candidate
+        (one slice; byte-for-byte identical to today's single-resource CR);
+      * ``spread``   — indices split load-proportionally (by free slots)
+        across the reachable candidates;
+      * ``weighted`` — indices split by the candidates' static weights.
+
+    ``maxSlices`` caps how many resources are used (0 = no cap).
+    """
+    candidates: List[PlacementCandidate] = field(default_factory=list)
+    strategy: str = "single"
+    max_slices: int = 0
+
+    def validate(self) -> None:
+        if not self.candidates:
+            raise ValidationError(
+                "spec.placement requires at least one candidate")
+        if self.strategy not in PLACEMENT_STRATEGIES:
+            raise ValidationError(
+                f"spec.placement.strategy {self.strategy!r} not in "
+                f"{PLACEMENT_STRATEGIES}")
+        if self.max_slices < 0:
+            raise ValidationError("spec.placement.maxSlices must be >= 0")
+        for c in self.candidates:
+            c.validate()
+
+
+@dataclass(frozen=True)
 class RetryPolicy:
     """spec.retry (v1beta1) — per-index resubmission on FAILED."""
     limit: int = 0               # extra submissions allowed after a failure
@@ -149,6 +207,7 @@ class BridgeJobSpec:
     retry: Optional[RetryPolicy] = None
     ttl_seconds_after_finished: Optional[float] = None
     dependencies: List[str] = field(default_factory=list)
+    placement: Optional[PlacementSpec] = None
 
     def uses_beta_features(self) -> bool:
         """True iff this spec cannot be expressed in v1alpha1."""
@@ -157,14 +216,18 @@ class BridgeJobSpec:
                     or (self.retry and (self.retry.limit
                                         or self.retry.backoff_seconds))
                     or self.ttl_seconds_after_finished is not None
-                    or self.dependencies)
+                    or self.dependencies
+                    or (self.placement and self.placement.candidates))
 
     def validate(self) -> None:
-        if not self.resourceURL:
+        placed = bool(self.placement and self.placement.candidates)
+        # with spec.placement the scheduler assigns endpoints per slice, so
+        # the top-level target trio becomes optional
+        if not self.resourceURL and not placed:
             raise ValidationError("spec.resourceURL is required")
-        if not self.image:
+        if not self.image and not placed:
             raise ValidationError("spec.image is required")
-        if not self.resourcesecret:
+        if not self.resourcesecret and not placed:
             raise ValidationError("spec.resourcesecret is required")
         if self.updateinterval <= 0:
             raise ValidationError("spec.updateinterval must be > 0")
@@ -183,6 +246,8 @@ class BridgeJobSpec:
             self.array.validate()
         if self.retry is not None:
             self.retry.validate()
+        if self.placement is not None:
+            self.placement.validate()
         if (self.ttl_seconds_after_finished is not None
                 and self.ttl_seconds_after_finished < 0):
             raise ValidationError("spec.ttlSecondsAfterFinished must be >= 0")
@@ -204,6 +269,10 @@ class BridgeJobStatus:
     index_states: Dict[str, str] = field(default_factory=dict)
     # last metadata.generation the reconciler fully applied (0 = none yet)
     observed_generation: int = 0
+    # sharded placement: one entry per slice, mirrored from the config map —
+    # {"slice": k, "resourceURL": ..., "image": ..., "indices": [...],
+    #  "state": ...}.  Empty for single-resource (unsliced) jobs.
+    placements: List[Dict[str, Any]] = field(default_factory=list)
 
     def terminal(self) -> bool:
         return self.state in TERMINAL_STATES
@@ -259,6 +328,8 @@ class BridgeJob:
         status = d.get("status") or {}
         if "observed_generation" in status:
             job.status.observed_generation = int(status["observed_generation"])
+        if status.get("placements"):
+            job.status.placements = [dict(p) for p in status["placements"]]
         if not job.name:
             raise ValidationError("metadata.name is required")
         spec.validate()
@@ -296,6 +367,13 @@ def _spec_to_dict(s: BridgeJobSpec, version: str = API_V1BETA1) -> Dict[str, Any
             d["ttlSecondsAfterFinished"] = s.ttl_seconds_after_finished
         if s.dependencies:
             d["dependencies"] = list(s.dependencies)
+        if s.placement and s.placement.candidates:
+            d["placement"] = {
+                "candidates": [dataclasses.asdict(c)
+                               for c in s.placement.candidates],
+                "strategy": s.placement.strategy,
+                "maxSlices": s.placement.max_slices,
+            }
     return d
 
 
@@ -305,6 +383,7 @@ def spec_from_dict(d: Dict[str, Any]) -> BridgeJobSpec:
     arr = d.get("array")
     retry = d.get("retry")
     ttl = d.get("ttlSecondsAfterFinished")
+    plc = d.get("placement")
     spec = BridgeJobSpec(
         resourceURL=d.get("resourceURL", ""),
         image=d.get("image", ""),
@@ -338,6 +417,16 @@ def spec_from_dict(d: Dict[str, Any]) -> BridgeJobSpec:
         ),
         ttl_seconds_after_finished=None if ttl is None else float(ttl),
         dependencies=list(d.get("dependencies", [])),
+        placement=None if plc is None else PlacementSpec(
+            candidates=[PlacementCandidate(
+                resourceURL=c.get("resourceURL", ""),
+                image=c.get("image", ""),
+                resourcesecret=c.get("resourcesecret", ""),
+                weight=float(c.get("weight", 1.0)),
+            ) for c in plc.get("candidates", [])],
+            strategy=plc.get("strategy", "single"),
+            max_slices=int(plc.get("maxSlices", 0)),
+        ),
     )
     return spec
 
@@ -393,6 +482,10 @@ def _beta_key_is_default(spec: Dict[str, Any], key: str) -> bool:
         return v is None
     if key == "dependencies":
         return not v
+    if key == "placement":
+        # ANY candidate list makes the document sliced/schedulable — there is
+        # no v1alpha1 representation even for strategy "single"
+        return not v or not v.get("candidates")
     return False
 
 

@@ -13,16 +13,26 @@ finisher, kill the other.
 The scheduler is a pure ``Bridge`` client: it asks the facade for adapter
 capabilities (only ``QUEUE_LOAD``-capable targets are schedulable) and
 submits/cancels through it — no hand-wired directory/secrets/adapters.
+
+Sharded placement moved the splitting brain here as well: ``plan_slices()``
+partitions one array CR's index space across several candidates
+(load-proportionally for ``strategy: spread``, by static weight for
+``weighted``, single winner for ``single``), and ``LoadProbe`` is the shared
+TTL-cached, concurrently-probing queue-load reader both this scheduler and
+the operator's slice assignment use — placing a many-candidate spec costs
+one parallel probe round, not N serialized HTTP round-trips.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.api import Bridge, JobHandle
-from repro.core.backends.base import Capability
-from repro.core.resource import BridgeJob, BridgeJobSpec, DONE
+from repro.core.backends.base import Capability, normalized_queue_load
+from repro.core.resource import (BridgeJob, BridgeJobSpec, DONE,
+                                 PlacementSpec, ValidationError)
 from repro.core.rest import TransportError
 
 
@@ -32,32 +42,185 @@ class Candidate:
     resourceURL: str
     image: str           # selects the controller-pod adapter
     resourcesecret: str
+    weight: float = 1.0  # strategy=weighted share
+
+
+class LoadProbe:
+    """TTL-cached, concurrent queue-load probing over any adapter source.
+
+    ``connect(resourceURL, image, resourcesecret)`` must return a connected
+    adapter or raise; ``query()`` returns the raw queue dict
+    ({queued, running, slots}) or None for unreachable / non-QUEUE_LOAD
+    targets.  Results are cached for ``ttl`` seconds per target, and
+    ``query_all()`` probes the cache misses on parallel threads, so ranking
+    N candidates costs one round-trip time, once per TTL window.
+    """
+
+    def __init__(self, connect: Callable[[str, str, str], Any],
+                 ttl: float = 0.5):
+        self.connect = connect
+        self.ttl = ttl
+        self._cache: Dict[Tuple[str, str, str], Tuple[float, Optional[dict]]] = {}
+        self._lock = threading.Lock()
+
+    def invalidate(self) -> None:
+        with self._lock:
+            self._cache.clear()
+
+    def _probe(self, cand: Candidate) -> Optional[dict]:
+        try:
+            adapter = self.connect(cand.resourceURL, cand.image,
+                                   cand.resourcesecret)
+            if adapter is None or not adapter.supports(Capability.QUEUE_LOAD):
+                return None
+            q = adapter.queue_load()
+        except (TransportError, KeyError):
+            return None
+        if normalized_queue_load(q) is None:
+            return None
+        return q
+
+    def query(self, cand: Candidate) -> Optional[dict]:
+        key = (cand.resourceURL, cand.image, cand.resourcesecret)
+        now = time.time()
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None and now - hit[0] < self.ttl:
+                return hit[1]
+        q = self._probe(cand)
+        with self._lock:
+            self._cache[key] = (time.time(), q)
+        return q
+
+    def query_all(self, cands: List[Candidate]) -> List[Optional[dict]]:
+        """``query`` for every candidate, cache misses probed concurrently."""
+        results: List[Optional[dict]] = [None] * len(cands)
+        now = time.time()
+        misses: List[int] = []
+        with self._lock:
+            for i, c in enumerate(cands):
+                hit = self._cache.get((c.resourceURL, c.image, c.resourcesecret))
+                if hit is not None and now - hit[0] < self.ttl:
+                    results[i] = hit[1]
+                else:
+                    misses.append(i)
+        if not misses:
+            return results
+
+        def probe(i: int) -> None:
+            results[i] = self.query(cands[i])
+
+        threads = [threading.Thread(target=probe, args=(i,), daemon=True)
+                   for i in misses[1:]]
+        for t in threads:
+            t.start()
+        probe(misses[0])  # do one on the calling thread
+        for t in threads:
+            t.join()
+        return results
+
+
+def plan_slices(count: int, candidates: List[Candidate],
+                loads: List[Optional[dict]], strategy: str = "spread",
+                max_slices: int = 0) -> List[Dict[str, Any]]:
+    """Partition ``count`` array indices across ``candidates`` into placement
+    slices: ``[{resourceURL, image, resourcesecret, start, count}, ...]``
+    with contiguous index ranges covering exactly [0, count).
+
+    ``loads[i]`` is candidate i's raw queue dict (or None when unreachable):
+
+      * ``single``   — one slice on the least-loaded reachable candidate;
+      * ``spread``   — shares proportional to free slots
+        (max(slots - queued - running, 0); all-full falls back to slot
+        counts, no load info at all to an equal split);
+      * ``weighted`` — shares proportional to the static ``weight``.
+
+    Unreachable candidates are dropped unless NOTHING is reachable (then the
+    split proceeds optimistically over all of them — submission failures
+    surface through the normal retry path).  Zero-share candidates are
+    dropped; ``max_slices`` (0 = no cap) keeps the highest-share ones.
+    """
+    if count < 1:
+        raise ValidationError("plan_slices needs count >= 1")
+    if not candidates:
+        raise ValidationError("plan_slices needs at least one candidate")
+    pool = list(zip(candidates, loads))
+    reachable = [(c, q) for c, q in pool if q is not None]
+    if reachable:
+        pool = reachable
+
+    if strategy == "single":
+        best = min(pool,
+                   key=lambda cq: normalized_queue_load(cq[1]) or 0.0)[0]
+        return [{"resourceURL": best.resourceURL, "image": best.image,
+                 "resourcesecret": best.resourcesecret,
+                 "start": 0, "count": count}]
+
+    if strategy == "weighted":
+        shares = [c.weight for c, _ in pool]
+    else:  # spread: proportional to free slots
+        shares = [max(q["slots"] - q["queued"] - q["running"], 0) if q else 0
+                  for _, q in pool]
+        if not any(shares):
+            shares = [q["slots"] if q else 0 for _, q in pool]
+        if not any(shares):
+            shares = [1.0] * len(pool)  # no load info anywhere: equal split
+
+    ranked = sorted(range(len(pool)), key=lambda i: -shares[i])
+    if max_slices > 0:
+        ranked = ranked[:max_slices]
+    ranked = [i for i in ranked if shares[i] > 0] or ranked[:1]
+    # largest-remainder apportionment of `count` over the kept candidates
+    total = sum(shares[i] for i in ranked) or 1.0
+    quotas = [(i, count * shares[i] / total) for i in ranked]
+    counts = {i: int(q) for i, q in quotas}
+    leftover = count - sum(counts.values())
+    for i, _ in sorted(quotas, key=lambda iq: -(iq[1] - int(iq[1]))):
+        if leftover <= 0:
+            break
+        counts[i] += 1
+        leftover -= 1
+    plan, start = [], 0
+    for i in ranked:
+        n = counts[i]
+        if n <= 0:
+            continue
+        c = pool[i][0]
+        plan.append({"resourceURL": c.resourceURL, "image": c.image,
+                     "resourcesecret": c.resourcesecret,
+                     "start": start, "count": n})
+        start += n
+    return plan
+
+
+def plan_placement(count: int, placement: PlacementSpec,
+                   probe: LoadProbe) -> List[Dict[str, Any]]:
+    """``plan_slices`` for a ``spec.placement`` block: probe every candidate
+    (concurrently, through the TTL cache) and split the index space."""
+    cands = [Candidate(c.resourceURL, c.image, c.resourcesecret, c.weight)
+             for c in placement.candidates]
+    return plan_slices(count, cands, probe.query_all(cands),
+                       placement.strategy, placement.max_slices)
 
 
 class LoadAwareScheduler:
-    def __init__(self, bridge: Bridge, candidates: List[Candidate]):
+    def __init__(self, bridge: Bridge, candidates: List[Candidate],
+                 load_ttl: float = 0.5):
         self.bridge = bridge
         self.candidates = list(candidates)
+        self.probe = LoadProbe(bridge.connect_adapter, ttl=load_ttl)
 
     def load_of(self, cand: Candidate) -> Optional[float]:
         """Normalized load: (queued + running) / slots.  None if the backend
         does not advertise QUEUE_LOAD or is unreachable."""
-        try:
-            if Capability.QUEUE_LOAD not in self.bridge.capabilities(cand.image):
-                return None
-            adapter = self.bridge.connect_adapter(
-                cand.resourceURL, cand.image, cand.resourcesecret)
-            q = adapter.queue_load()
-        except (TransportError, KeyError):
-            return None
-        if not q or not q.get("slots"):
-            return None
-        return (q["queued"] + q["running"]) / q["slots"]
+        return normalized_queue_load(self.probe.query(cand))
 
     def rank(self) -> List[Tuple[float, Candidate]]:
+        """Candidates by ascending load — one concurrent probe round (TTL-
+        cached), not N serialized HTTP round-trips."""
         scored = []
-        for c in self.candidates:
-            load = self.load_of(c)
+        for c, q in zip(self.candidates, self.probe.query_all(self.candidates)):
+            load = normalized_queue_load(q)
             if load is not None:
                 scored.append((load, c))
         scored.sort(key=lambda t: t[0])
@@ -83,19 +246,24 @@ class LoadAwareScheduler:
 
     def scale_placed(self, name: str, count: int,
                      namespace: str = "default") -> JobHandle:
-        """Elastic scale with placement re-consulted (a CR targets exactly
-        ONE resourceURL, so the new indices land on the job's existing
-        target): growth is refused when that target no longer advertises
+        """Elastic scale with placement re-consulted: growth onto a
+        single-resource CR is refused when its target no longer advertises
         queue load — unreachable, or not a QUEUE_LOAD candidate — instead of
-        piling more indices onto a black hole.  Scale-down always proceeds.
+        piling more indices onto a black hole.  Scale-down always proceeds,
+        and a SLICED job (spec.placement) delegates routing to the
+        reconciler, which sends the delta to its least-loaded slice.
         """
         job = self.bridge.registry.get(name, namespace)
         if job is None:
             raise KeyError(f"BridgeJob {namespace}/{name} not found")
         current = job.spec.array.count if job.spec.array else 1
-        if count > current:
+        sliced = bool(job.spec.placement and job.spec.placement.candidates)
+        if count > current and not sliced:
             cand = next((c for c in self.candidates
                          if c.resourceURL == job.spec.resourceURL), None)
+            # a safety check, not an optimisation: bypass the TTL cache so
+            # "re-consulted" means the target is reachable NOW
+            self.probe.invalidate()
             if cand is None or self.load_of(cand) is None:
                 raise RuntimeError(
                     f"cannot scale up {namespace}/{name}: target "

@@ -19,9 +19,32 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import tempfile
 import threading
 from typing import Any, Dict, Iterator, Optional
+
+# -- sharded placement: per-slice key namespacing ---------------------------
+#
+# A sliced array CR owns state on SEVERAL external resources at once, so its
+# per-index config-map keys are namespaced by the owning slice
+# ("slice_2_results_location_7"): two slices can never collide on a key, and
+# the scale-down GC (``ConfigMap.prune``) can drop exactly the keys a drained
+# index owned on exactly the slice that ran it.  Single-slice jobs keep the
+# bare legacy names ("results_location_7") byte-for-byte.
+
+_RESULTS_KEY_RE = re.compile(
+    r"^(slice_\d+_)?results_location(_\d+)?$")
+
+
+def slice_key(k: int, base: str) -> str:
+    """Namespace a per-job config-map key by its owning placement slice."""
+    return f"slice_{k}_{base}"
+
+
+def is_results_key(key: str) -> bool:
+    """True for any results-location key, slice-namespaced or legacy."""
+    return bool(_RESULTS_KEY_RE.match(key))
 
 
 class ConfigMap:

@@ -100,9 +100,9 @@ def test_capability_matrix(env):
     # slurmrestd 21.08: arrays yes, file staging no (paper §5.2)
     assert Capability.NATIVE_ARRAYS in caps["slurm"]
     assert Capability.UPLOAD not in caps["slurm"]
-    # LSF Application Center: staging yes, native arrays no
+    # LSF Application Center: staging yes, and bsub -J "name[1-N]" arrays
     assert {Capability.UPLOAD, Capability.DOWNLOAD} <= caps["lsf"]
-    assert Capability.NATIVE_ARRAYS not in caps["lsf"]
+    assert Capability.NATIVE_ARRAYS in caps["lsf"]
     # ray: logs, not arbitrary files
     assert Capability.LOGS in caps["ray"]
     assert Capability.DOWNLOAD not in caps["ray"]
@@ -145,13 +145,42 @@ def test_job_array_native_slurm(env):
     assert all("SLURM_ARRAY_TASK_ID" in m.params for m in members)
 
 
-def test_job_array_facade_fanout_lsf(env):
-    """lsf has no native arrays: the controller fans out via N submits."""
+def test_job_array_native_lsf(env):
+    """lsf now declares NATIVE_ARRAYS: ONE bsub -J "bridge[1-N]"-style call
+    fans out 4 elements, each stamped with its 1-based LSB_JOBINDEX."""
     spec = env.make_spec(
         "lsf", script="member", updateinterval=0.02,
         array=ArraySpec(count=4,
                         indexed_params=[{"IDX": str(i)} for i in range(4)]))
     handle = env.bridge.submit("arr-lsf", spec)
+    job = handle.wait(timeout=30)
+    assert job.status.state == DONE
+    assert job.status.index_states == {str(i): DONE for i in range(4)}
+    ids = job.status.job_id.split(",")
+    assert len(ids) == 4
+    members = [env.clusters["lsf"].jobs[i] for i in ids]
+    assert sorted(m.params["IDX"] for m in members) == ["0", "1", "2", "3"]
+    assert sorted(m.params["LSB_JOBINDEX"] for m in members) == [
+        "1", "2", "3", "4"]
+
+
+def test_job_array_facade_fanout_lsf_dialect(env):
+    """An adapter withholding NATIVE_ARRAYS (the pre-Application-Center
+    fan-out shape) still works: the controller fans out via N submits and
+    injects the bridge's own index marker."""
+    from repro.core.backends import base as B
+    from repro.core.backends.lsf import LSFAdapter
+
+    class NoNativeArrays(LSFAdapter):
+        capabilities = LSFAdapter.capabilities - {B.Capability.NATIVE_ARRAYS}
+
+    env.operator.adapters[NoNativeArrays.image] = NoNativeArrays
+    env.bridge.adapters[NoNativeArrays.image] = NoNativeArrays
+    spec = env.make_spec(
+        "lsf", script="member", updateinterval=0.02,
+        array=ArraySpec(count=4,
+                        indexed_params=[{"IDX": str(i)} for i in range(4)]))
+    handle = env.bridge.submit("arr-lsf-fan", spec)
     job = handle.wait(timeout=30)
     assert job.status.state == DONE
     assert job.status.index_states == {str(i): DONE for i in range(4)}

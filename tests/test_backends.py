@@ -120,6 +120,32 @@ def test_quantum_results_in_object_storage(env):
     assert result["shots"] == 2048
 
 
+def test_lsf_native_array_one_call(env):
+    """ROADMAP satellite: the Application Center dialect submits a whole
+    job array in ONE bsub -J "name[lo-hi]"-style request, every element
+    stamped with its 1-based LSB_JOBINDEX and per-index params applied."""
+    from repro.core.backends.lsf import LSFAdapter
+    from repro.core import TOKENS, URLS
+
+    client = env.directory.connect(URLS["lsf"], TOKENS["lsf"])
+    ad = LSFAdapter(client)
+    req0 = env.servers["lsf"].request_count
+    ids = ad.submit_array("member", {"WallSeconds": "0.05"},
+                          [{"IDX": str(i)} for i in range(3)], start_index=4)
+    assert env.servers["lsf"].request_count - req0 == 1, (
+        "native arrays must fan out server-side, in one request")
+    assert len(ids) == 3
+    jobs = [env.clusters["lsf"].jobs[j] for j in ids]
+    # global indices 4..6 -> 1-based LSB_JOBINDEX 5..7
+    assert [j.params["LSB_JOBINDEX"] for j in jobs] == ["5", "6", "7"]
+    assert [j.params["IDX"] for j in jobs] == ["0", "1", "2"]
+
+    # malformed array names are a 400, not a silent single submission
+    r = client.post("/platform/ws/jobs/submit",
+                    {"COMMANDTORUN": "x", "JOB_ARRAY": "oops[3-1]"})
+    assert r.status == 400
+
+
 def test_ray_idempotent_resubmission(env):
     """Ray submission_id semantics: resubmitting the same id is a no-op."""
     from repro.core.backends.ray import RayAdapter

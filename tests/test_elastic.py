@@ -27,11 +27,19 @@ import time
 import pytest
 
 from repro.core import (ArraySpec, BridgeEnvironment, DONE, FaultProfile,
-                        RetryPolicy, ValidationError)
+                        IMAGES, PlacementCandidate, PlacementSpec,
+                        RetryPolicy, URLS, ValidationError)
 from repro.core.backends import base as B
+from repro.core.backends.lsf import LSFAdapter
 from repro.core.backends.slurm import SlurmAdapter
 
 MODES = ["multiplexed", "pod-per-cr"]
+
+
+class FanoutLSFAdapter(LSFAdapter):
+    """LSF with NATIVE_ARRAYS withheld: keeps the facade fan-out reconcile
+    path under chaos now that the real dialect submits arrays natively."""
+    capabilities = LSFAdapter.capabilities - {B.Capability.NATIVE_ARRAYS}
 
 
 def _wait(predicate, timeout=30, interval=0.005):
@@ -48,11 +56,16 @@ def _ids(handle):
 
 
 def _index_of(cluster_job):
-    """The array index a remote job was submitted for (either the native
-    slurm marker or the bridge's facade-side marker)."""
+    """The array index a remote job was submitted for (the native slurm
+    marker, the native 1-based LSF marker, or the bridge's own marker)."""
     p = cluster_job.params
-    idx = p.get("SLURM_ARRAY_TASK_ID", p.get("BRIDGE_ARRAY_INDEX"))
-    return None if idx is None else int(idx)
+    if "SLURM_ARRAY_TASK_ID" in p:
+        return int(p["SLURM_ARRAY_TASK_ID"])
+    if "BRIDGE_ARRAY_INDEX" in p:
+        return int(p["BRIDGE_ARRAY_INDEX"])
+    if "LSB_JOBINDEX" in p:
+        return int(p["LSB_JOBINDEX"]) - 1
+    return None
 
 
 def _assert_at_most_once_while_live(jobs):
@@ -136,22 +149,37 @@ def test_scale_32_up_48_down_8_exact_delta_with_midpatch_kill(mode):
 
 @pytest.mark.parametrize("mode,kind,seed", [
     ("multiplexed", "slurm", 101),   # native arrays + batched status
-    ("multiplexed", "lsf", 202),     # facade fan-out
+    ("multiplexed", "lsf", 202),     # facade fan-out (NATIVE_ARRAYS withheld)
     ("pod-per-cr", "slurm", 303),
     ("pod-per-cr", "lsf", 404),
+    ("multiplexed", "sliced", 505),  # sharded placement: slurm + lsf slices
+    ("pod-per-cr", "sliced", 606),
 ])
 def test_chaos_lifecycle(mode, kind, seed):
     """Seeded random op interleavings (deterministic op sequence + seeded
-    fault injection) must preserve both lifecycle invariants."""
+    fault injection) must preserve both lifecycle invariants — including on
+    a SLICED array, where a kill can land mid-rebalance and the final live
+    set is the union of every slice's remote jobs."""
     rng = random.Random(seed)
-    fp = {kind: FaultProfile(drop_rate=0.02, seed=seed)}
+    kinds = ("slurm", "lsf") if kind == "sliced" else (kind,)
+    fp = {k: FaultProfile(drop_rate=0.02, seed=seed + i)
+          for i, k in enumerate(kinds)}
     with BridgeEnvironment(default_duration=300, slots=6, fault_profiles=fp,
                            operator_kwargs={"mode": mode}) as env:
+        placement = None
+        if kind == "lsf":
+            env.operator.adapters[FanoutLSFAdapter.image] = FanoutLSFAdapter
+        if kind == "sliced":
+            env.clusters["lsf"].slots = 3  # uneven capacity
+            placement = PlacementSpec(candidates=[
+                PlacementCandidate(URLS[k], IMAGES[k], f"{k}-secret")
+                for k in kinds], strategy="spread")
         h = env.bridge.submit("chaos", env.make_spec(
-            kind, script="member", updateinterval=0.01,
+            kinds[0], script="member", updateinterval=0.01,
             jobproperties={"WallSeconds": "300"},
             array=ArraySpec(count=4),
-            retry=RetryPolicy(limit=100)))  # absorb injected submit drops
+            retry=RetryPolicy(limit=100),  # absorb injected submit drops
+            placement=placement))
         assert _wait(lambda: len(_ids(h)) == 4)
 
         desired = 4
@@ -171,12 +199,20 @@ def test_chaos_lifecycle(mode, kind, seed):
 
         job = h.wait_reconciled(timeout=90)
         assert not job.status.terminal(), job.status.message
-        jobs = env.clusters[kind].jobs
+        jobs = {}
+        for k in kinds:
+            jobs.update(env.clusters[k].jobs)  # id ranges are disjoint
         _assert_remote_matches_desired(jobs, desired)
         _assert_at_most_once_while_live(jobs)
         assert sorted(job.status.index_states, key=int) == [
             str(i) for i in range(desired)]
         assert len(_ids(h)) == desired
+        if kind == "sliced":
+            placements = h.placements()
+            assert len(placements) == 2, "both slices must stay live"
+            union = sorted(i for p in placements for i in p["indices"])
+            assert union == list(range(desired)), (
+                "union of slices == final desired set")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,354 @@
+"""Sharded placement: one array CR split across multiple external resources.
+
+The tentpole guarantees under test:
+
+  * a ``spec.placement`` array CR is partitioned into per-resource SLICES
+    (contiguous initial index ranges, split load-proportionally for
+    ``strategy: spread``), each slice submitted natively on its own
+    endpoint and batch-polled independently;
+  * slice state lives in per-slice config-map keys (``slice_{k}_id``), the
+    plan is assigned ONCE (a restarted pod resumes the recorded plan and
+    never resubmits a live index), and per-slice status surfaces through
+    ``JobHandle.placements()`` / ``status.placements``;
+  * a one-slice plan (``strategy: single``, or maxSlices=1) collapses onto
+    the legacy config-map shape byte-for-byte — slice count 1 == today's
+    single-resource CR;
+  * the elastic verbs (`scale`, `wait_reconciled`) work unchanged on sliced
+    jobs, with growth routed to the least-loaded slice.
+
+Everything here is mode-parametrized: both operator modes run the same
+protocol object.
+"""
+import json
+import time
+
+import pytest
+
+from repro.core import (ArraySpec, BridgeEnvironment, DONE, FaultProfile,
+                        IMAGES, KILLED, PlacementCandidate, PlacementSpec,
+                        URLS)
+from repro.core.backends import base as B
+
+MODES = ["multiplexed", "pod-per-cr"]
+
+
+def _wait(predicate, timeout=30, interval=0.005):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def _ids(handle):
+    return [s for s in handle.status().job_id.split(",") if s]
+
+
+def _placement(kinds, strategy="spread", max_slices=0, weights=None):
+    return PlacementSpec(candidates=[
+        PlacementCandidate(URLS[k], IMAGES[k], f"{k}-secret",
+                           weight=(weights or {}).get(k, 1.0))
+        for k in kinds], strategy=strategy, max_slices=max_slices)
+
+
+def _index_of(cluster_job):
+    """The global array index a remote job was submitted for (native slurm
+    marker, native 1-based LSF marker, or the bridge's own marker)."""
+    p = cluster_job.params
+    if "SLURM_ARRAY_TASK_ID" in p:
+        return int(p["SLURM_ARRAY_TASK_ID"])
+    if "BRIDGE_ARRAY_INDEX" in p:
+        return int(p["BRIDGE_ARRAY_INDEX"])
+    if "LSB_JOBINDEX" in p:
+        return int(p["LSB_JOBINDEX"]) - 1
+    return None
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 64 indices, strategy spread, slurm + lsf, both modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_spread_64_across_two_resources_runs_to_done(mode):
+    """A 64-index array spread over two UNEVEN resources (8 vs 4 slots)
+    splits load-proportionally (43/21), submits each slice natively in one
+    call, runs to DONE in both operator modes, and reports per-slice status
+    through placements()."""
+    with BridgeEnvironment(default_duration=0.1, slots=8,
+                           operator_kwargs={"mode": mode}) as env:
+        env.clusters["lsf"].slots = 4  # uneven capacity: free 8 vs free 4
+        h = env.bridge.submit("shard", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "0.1"},
+            array=ArraySpec(count=64),
+            placement=_placement(["slurm", "lsf"])))
+        job = h.wait(timeout=120)
+        assert job.status.state == DONE, job.status.message
+
+        # load-proportional split: 64 * 8/12 -> 43 on slurm, 21 on lsf
+        slurm_jobs = env.clusters["slurm"].jobs
+        lsf_jobs = env.clusters["lsf"].jobs
+        assert len(slurm_jobs) == 43 and len(lsf_jobs) == 21
+        # contiguous ranges: slurm owns [0, 43), lsf owns [43, 64)
+        assert sorted(_index_of(j) for j in slurm_jobs.values()) == list(
+            range(43))
+        assert sorted(_index_of(j) for j in lsf_jobs.values()) == list(
+            range(43, 64))
+        # every index DONE, exactly once
+        assert sorted(job.status.index_states, key=int) == [
+            str(i) for i in range(64)]
+        assert set(job.status.index_states.values()) == {DONE}
+
+        # per-slice status surfaces through the facade
+        placements = h.placements()
+        assert [p["slice"] for p in placements] == [0, 1]
+        assert placements[0]["resourceURL"] == URLS["slurm"]
+        assert placements[1]["resourceURL"] == URLS["lsf"]
+        assert all(p["state"] == DONE for p in placements)
+        union = sorted(i for p in placements for i in p["indices"])
+        assert union == list(range(64)), "union of slices == desired set"
+
+        # per-slice state-store keys, GC'd nowhere (no resize happened)
+        cm = env.statestore.get("default/shard-bridge-cm").data
+        assert len(json.loads(cm["slices"])) == 2
+        assert len([t for t in cm["slice_0_id"].split(",") if t]) == 43
+        assert len([t for t in cm["slice_1_id"].split(",") if t]) == 21
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_scale_up_routes_delta_to_least_loaded_slice_with_midkill(mode):
+    """Acceptance: JobHandle.scale() on a sliced job converges
+    (wait_reconciled) with the delta routed to the least-loaded slice, and
+    a pod killed mid-rebalance resumes without double-submitting."""
+    fp = {"lsf": FaultProfile(latency=0.004)}  # widen the mid-fanout window
+    with BridgeEnvironment(default_duration=600, slots=8, fault_profiles=fp,
+                           operator_kwargs={"mode": mode}) as env:
+        env.clusters["lsf"].slots = 4
+        h = env.bridge.submit("rebal", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "600"},
+            array=ArraySpec(count=64),
+            placement=_placement(["slurm", "lsf"])))
+        assert _wait(lambda: len(_ids(h)) == 64, timeout=60)
+        assert len(env.clusters["lsf"].jobs) == 21
+
+        # loads now: slurm 43/8 = 5.375, lsf 21/4 = 5.25 -> lsf is the
+        # least-loaded slice and must receive the whole 16-index delta
+        h.scale(80)
+        assert _wait(lambda: len(_ids(h)) >= 66, timeout=30)
+        env.operator.pods["default/rebal"].kill_pod()  # mid-rebalance
+
+        job = h.wait_reconciled(timeout=90)
+        assert job.status.restarts >= 1
+        assert len(_ids(h)) == 80
+        assert len(env.clusters["slurm"].jobs) == 43, (
+            "the delta must not land on the more-loaded slice")
+        assert len(env.clusters["lsf"].jobs) == 37, (
+            "exactly 16 new submissions — the restarted pod must resume the "
+            "half-applied rebalance, not redo it")
+        assert sorted(_index_of(j)
+                      for j in env.clusters["lsf"].jobs.values()) == sorted(
+            list(range(43, 64)) + list(range(64, 80)))
+        placements = {p["slice"]: p for p in h.placements()}
+        assert sorted(placements[1]["indices"]) == sorted(
+            list(range(43, 64)) + list(range(64, 80)))
+
+        # scale-down condemns the globally-highest indices (all on lsf here)
+        h.scale(60)
+        job = h.wait_reconciled(timeout=90)
+        cancelled = [j for j in env.clusters["lsf"].jobs.values()
+                     if j.state == B.CANCELLED]
+        assert {_index_of(j) for j in cancelled} == set(range(60, 80))
+        assert [j for j in env.clusters["slurm"].jobs.values()
+                if j.state == B.CANCELLED] == []
+        union = sorted(i for p in h.placements() for i in p["indices"])
+        assert union == list(range(60))
+
+
+# ---------------------------------------------------------------------------
+# plan stability + restart resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_pod_restart_resumes_all_slices_without_resubmission(mode):
+    """The slice plan is assigned once, at config-map creation: a pod killed
+    after submission resumes EVERY slice from its slice_{k}_id keys — zero
+    new remote jobs across both resources."""
+    with BridgeEnvironment(default_duration=600, slots=8,
+                           operator_kwargs={"mode": mode}) as env:
+        h = env.bridge.submit("resume", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "600"},
+            array=ArraySpec(count=12),
+            placement=_placement(["slurm", "lsf"])))
+        assert _wait(lambda: len(_ids(h)) == 12, timeout=30)
+        total0 = (len(env.clusters["slurm"].jobs)
+                  + len(env.clusters["lsf"].jobs))
+        env.operator.pods["default/resume"].kill_pod()
+        assert _wait(lambda: (env.registry.get("resume").status.restarts >= 1
+                              and len(_ids(h)) == 12), timeout=30)
+        time.sleep(0.2)  # several ticks of the replacement pod
+        assert (len(env.clusters["slurm"].jobs)
+                + len(env.clusters["lsf"].jobs)) == total0, (
+            "restart-resume must not resubmit any slice's live indices")
+        assert not h.status().terminal()
+
+
+def test_kill_signal_cancels_every_slice():
+    """The CR kill flag fans out to every slice's resource."""
+    with BridgeEnvironment(default_duration=600, slots=8) as env:
+        h = env.bridge.submit("skill", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "600"},
+            array=ArraySpec(count=8),
+            placement=_placement(["slurm", "lsf"])))
+        assert _wait(lambda: len(_ids(h)) == 8, timeout=30)
+        h.cancel()
+        job = h.wait(timeout=60)
+        assert job.status.state == KILLED
+        for kind in ("slurm", "lsf"):
+            assert all(j.state == B.CANCELLED
+                       for j in env.clusters[kind].jobs.values()), kind
+
+
+# ---------------------------------------------------------------------------
+# single-winner placement: byte-for-byte the unsliced shape
+# ---------------------------------------------------------------------------
+
+
+def test_single_strategy_collapses_to_legacy_configmap_shape():
+    """strategy=single (and any one-slice plan) must produce EXACTLY the
+    config-map shape an unplaced CR gets — no slices key, no slice-namespaced
+    ids — with the winner's endpoint in the legacy keys."""
+    with BridgeEnvironment(default_duration=0.05, slots=4) as env:
+        # saturate slurm so the single winner is lsf
+        for _ in range(8):
+            env.clusters["slurm"].submit("hog", {"WallSeconds": "10"}, {})
+        placed = env.bridge.submit("one", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            array=ArraySpec(count=3),
+            placement=_placement(["slurm", "lsf"], strategy="single")))
+        plain = env.bridge.submit("two", env.make_spec(
+            "lsf", script="member", updateinterval=0.02,
+            array=ArraySpec(count=3)))
+        assert placed.wait(timeout=30).status.state == DONE
+        assert plain.wait(timeout=30).status.state == DONE
+        cm_placed = env.statestore.get("default/one-bridge-cm").data
+        cm_plain = env.statestore.get("default/two-bridge-cm").data
+        assert cm_placed["resourceURL"] == URLS["lsf"]
+        assert cm_placed["image"] == IMAGES["lsf"]
+        assert sorted(cm_placed) == sorted(cm_plain), (
+            "one-slice placement must keep the legacy key set byte-for-byte")
+        assert placed.placements() == [], (
+            "single-resource jobs report no slice map")
+
+
+def test_max_slices_one_is_single_winner():
+    with BridgeEnvironment(default_duration=0.05, slots=4) as env:
+        h = env.bridge.submit("cap", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            array=ArraySpec(count=4),
+            placement=_placement(["slurm", "lsf"], max_slices=1)))
+        assert h.wait(timeout=30).status.state == DONE
+        cm = env.statestore.get("default/cap-bridge-cm").data
+        assert "slices" not in cm
+        assert len(env.clusters["slurm"].jobs) + len(
+            env.clusters["lsf"].jobs) == 4
+
+
+# ---------------------------------------------------------------------------
+# per-slice polling independence (the monitor.py layer)
+# ---------------------------------------------------------------------------
+
+
+def test_slow_slice_does_not_stall_healthy_slice_polling():
+    """Multiplexed mode schedules one chain per slice: a high-latency
+    resource slows ONLY its own slice's cadence — the healthy slice keeps
+    getting polled at its own interval."""
+    fp = {"lsf": FaultProfile(latency=0.25)}  # lsf answers very slowly
+    with BridgeEnvironment(default_duration=600, slots=8, fault_profiles=fp,
+                           operator_kwargs={"mode": "multiplexed"}) as env:
+        h = env.bridge.submit("slow", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "600"},
+            array=ArraySpec(count=8),
+            placement=_placement(["slurm", "lsf"])))
+        assert _wait(lambda: len(_ids(h)) == 8, timeout=60)
+        slurm_req0 = env.servers["slurm"].request_count
+        window = 0.6
+        time.sleep(window)
+        slurm_ticks = env.servers["slurm"].request_count - slurm_req0
+        # a shared sequential poll would cap BOTH slices near
+        # window/latency ≈ 2.4 polls; independent chains keep slurm near
+        # window/interval ≈ 30
+        assert slurm_ticks >= 10, (
+            f"healthy slice got only {slurm_ticks} polls in {window}s — "
+            f"the slow slice is stalling it")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_unreachable_slice_surfaces_unknown_not_masked(mode):
+    """One slice's resource going dark marks the CR UNKNOWN (naming the
+    slice) even while the healthy slice keeps answering — the aggregate
+    from fresh+stale data must not mask the blackout — and the CR recovers
+    once the resource answers again."""
+    with BridgeEnvironment(default_duration=600, slots=8,
+                           operator_kwargs={"mode": mode}) as env:
+        h = env.bridge.submit("dark", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "600"},
+            array=ArraySpec(count=8),
+            placement=_placement(["slurm", "lsf"])))
+        assert _wait(lambda: len(_ids(h)) == 8, timeout=30)
+        env.servers["lsf"].fault.begin_outage()
+        try:
+            assert _wait(lambda: h.status().state == "UNKNOWN", timeout=30), (
+                h.status().state, h.status().message)
+            assert "slice 1 resource unreachable" in h.status().message
+            # and it STAYS unknown (not flapping back to RUNNING off the
+            # healthy slice's ticks)
+            time.sleep(0.2)
+            assert h.status().state == "UNKNOWN"
+        finally:
+            env.servers["lsf"].fault.end_outage()
+        assert _wait(lambda: h.status().state == "RUNNING", timeout=30)
+        assert not h.status().terminal()
+
+
+# ---------------------------------------------------------------------------
+# elastic + placement interplay
+# ---------------------------------------------------------------------------
+
+
+def test_sliced_scale_down_prunes_slice_namespaced_state():
+    """Scale-down GC on a sliced job drops the drained indices' per-slice
+    keys, so repeated resizes never grow the config map."""
+    with BridgeEnvironment(default_duration=600, slots=8) as env:
+        h = env.bridge.submit("gc", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "600"},
+            array=ArraySpec(count=12),
+            placement=_placement(["slurm", "lsf"])))
+        assert _wait(lambda: len(_ids(h)) == 12, timeout=30)
+        baseline = None
+        for count in (4, 12, 4):
+            h.scale(count)
+            h.wait_reconciled(timeout=60)
+            assert _wait(lambda: len(json.loads(env.statestore.get(
+                "default/gc-bridge-cm").get("index_states"))) == count,
+                timeout=30)
+            cm = env.statestore.get("default/gc-bridge-cm").data
+            union = sorted(
+                int(t.split("=")[0])
+                for k in ("slice_0_id", "slice_1_id")
+                for t in cm.get(k, "").split(",") if t)
+            assert union == list(range(count))
+            if count == 4:
+                if baseline is None:
+                    baseline = len(cm)
+                else:
+                    assert len(cm) == baseline, (
+                        "config-map key count grew across resize cycles")

@@ -11,7 +11,9 @@ import pytest
 
 from repro.core import (API_V1ALPHA1, API_V1BETA1, ArraySpec, BridgeJob,
                         BridgeJobSpec, ConversionError, JobData,
-                        ResourceRegistry, StateStore, convert, load_bridgejob)
+                        PlacementCandidate, PlacementSpec, ResourceRegistry,
+                        StateStore, ValidationError, convert, load_bridgejob)
+from repro.core.statestore import is_results_key, slice_key
 
 
 def _spec(**kw) -> BridgeJobSpec:
@@ -73,6 +75,101 @@ def test_from_dict_defaults_generation_for_legacy_documents():
     job = BridgeJob.from_dict(doc)
     assert job.generation == 1
     assert job.status.observed_generation == 0
+
+
+# ---------------------------------------------------------------------------
+# sharded placement: spec.placement / status.placements round-trips
+# ---------------------------------------------------------------------------
+
+
+def _placement(**kw) -> PlacementSpec:
+    return PlacementSpec(candidates=[
+        PlacementCandidate("https://a.example.com", "slurmpod:0.1", "sa"),
+        PlacementCandidate("https://b.example.com", "lsfpod:0.1", "sb",
+                           weight=3.0),
+    ], **kw)
+
+
+def test_placement_spec_and_status_roundtrip():
+    """spec.placement (candidates/strategy/maxSlices) and the per-slice
+    status.placements survive a beta -> beta serialization round-trip."""
+    job = BridgeJob(name="sh", spec=_spec(
+        array=ArraySpec(count=64),
+        placement=_placement(strategy="spread", max_slices=2)))
+    job.status.placements = [
+        {"slice": 0, "resourceURL": "https://a.example.com",
+         "image": "slurmpod:0.1", "indices": [0, 1], "state": "RUNNING"},
+        {"slice": 1, "resourceURL": "https://b.example.com",
+         "image": "lsfpod:0.1", "indices": [2, 3], "state": "SUBMITTED"},
+    ]
+    doc = job.to_dict()
+    assert doc["apiVersion"] == API_V1BETA1
+    assert doc["spec"]["placement"]["strategy"] == "spread"
+    assert doc["spec"]["placement"]["maxSlices"] == 2
+    assert doc["spec"]["placement"]["candidates"][1]["weight"] == 3.0
+    parsed = load_bridgejob(json.dumps(doc))
+    assert parsed.spec.placement == job.spec.placement
+    assert parsed.status.placements == job.status.placements
+    # and the re-serialization is bit-for-bit stable
+    assert json.dumps(parsed.to_dict(), sort_keys=True) == json.dumps(
+        doc, sort_keys=True)
+
+
+def test_placement_allows_empty_toplevel_target():
+    """With spec.placement the scheduler assigns endpoints, so the top-level
+    resourceURL/image/resourcesecret trio becomes optional."""
+    spec = BridgeJobSpec(resourceURL="", image="", resourcesecret="",
+                         jobdata=JobData(jobscript="run"),
+                         placement=_placement(strategy="spread"))
+    spec.validate()  # must not raise
+    with pytest.raises(ValidationError, match="resourceURL"):
+        BridgeJobSpec(resourceURL="", image="", resourcesecret="",
+                      jobdata=JobData(jobscript="run")).validate()
+
+
+def test_placement_validation():
+    with pytest.raises(ValidationError, match="at least one candidate"):
+        _spec(placement=PlacementSpec()).validate()
+    with pytest.raises(ValidationError, match="strategy"):
+        _spec(placement=_placement(strategy="everywhere")).validate()
+    with pytest.raises(ValidationError, match="maxSlices"):
+        _spec(placement=_placement(max_slices=-1)).validate()
+    with pytest.raises(ValidationError, match="weight"):
+        _spec(placement=PlacementSpec(candidates=[PlacementCandidate(
+            "https://a", "slurmpod", "sa", weight=0)])).validate()
+
+
+def test_sliced_spec_refuses_v1alpha1_downgrade():
+    """Mirroring the elastic-array rule: a sliced (placed) document has no
+    v1alpha1 representation — even under strategy "single" — and must fail
+    loudly rather than silently drop its placement."""
+    doc = BridgeJob(name="sh", spec=_spec(placement=_placement())).to_dict()
+    with pytest.raises(ConversionError) as ei:
+        convert(doc, API_V1ALPHA1)
+    assert "placement" in str(ei.value) and "v1alpha1" in str(ei.value)
+
+
+def test_unplaced_documents_still_roundtrip_to_alpha():
+    """The placement field is emitted only when candidates exist, so plain
+    documents keep converting losslessly in both directions."""
+    doc = BridgeJob(name="plain", spec=_spec()).to_dict(API_V1ALPHA1)
+    up = convert(doc, API_V1BETA1)
+    assert "placement" not in up["spec"]
+    down = convert(up, API_V1ALPHA1)
+    assert json.dumps(down, sort_keys=True) == json.dumps(doc, sort_keys=True)
+
+
+def test_slice_key_namespacing_helpers():
+    """statestore's slice-key helpers: namespacing and results-key
+    recognition for both the legacy and the slice-namespaced shapes."""
+    assert slice_key(2, "results_location_7") == "slice_2_results_location_7"
+    assert slice_key(0, "id") == "slice_0_id"
+    assert is_results_key("results_location")
+    assert is_results_key("results_location_12")
+    assert is_results_key("slice_3_results_location_12")
+    assert not is_results_key("slice_3_id")
+    assert not is_results_key("results_location_12_extra")
+    assert not is_results_key("id")
 
 
 # ---------------------------------------------------------------------------

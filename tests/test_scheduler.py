@@ -1,10 +1,12 @@
-"""Load-aware scheduling + speculative execution (paper §7 future work)."""
+"""Load-aware scheduling + speculative execution (paper §7 future work),
+plus sharded-placement planning (plan_slices) and the TTL-cached concurrent
+LoadProbe behind rank()."""
 import time
 
 import pytest
 
-from repro.core import (BridgeEnvironment, Candidate, DONE, IMAGES,
-                        LoadAwareScheduler, URLS)
+from repro.core import (BridgeEnvironment, Candidate, DONE, FaultProfile,
+                        IMAGES, LoadAwareScheduler, plan_slices, URLS)
 
 
 @pytest.fixture()
@@ -49,6 +51,109 @@ def test_unreachable_candidate_skipped(env):
     ranked = sched.rank()
     assert all(c.resourceURL != URLS["lsf"] for _, c in ranked)
     env.servers["lsf"].fault.end_outage()
+
+
+def test_rank_caches_probes_within_ttl(env):
+    """Satellite: rank() must not re-pay N HTTP round-trips per call — the
+    probe's TTL cache answers repeat rankings within the window."""
+    sched = LoadAwareScheduler(env.bridge, _candidates(), load_ttl=30.0)
+    req0 = {k: env.servers[k].request_count for k in ("slurm", "lsf", "ray")}
+    sched.rank()
+    after_first = {k: env.servers[k].request_count for k in req0}
+    assert all(after_first[k] > req0[k] for k in req0), "first rank probes"
+    sched.rank()
+    sched.rank()
+    assert {k: env.servers[k].request_count for k in req0} == after_first, (
+        "repeat rank() within the TTL must be served from the cache")
+    sched.probe.invalidate()
+    sched.rank()
+    assert all(env.servers[k].request_count > after_first[k] for k in req0)
+
+
+def test_rank_probes_candidates_concurrently():
+    """Satellite: a many-candidate rank() costs ~one round-trip time, not
+    the sum of serialized probes."""
+    latency = 0.15
+    fp = {k: FaultProfile(latency=latency) for k in ("slurm", "lsf", "ray")}
+    with BridgeEnvironment(default_duration=0.05, fault_profiles=fp) as env:
+        sched = LoadAwareScheduler(env.bridge, _candidates())
+        t0 = time.time()
+        ranked = sched.rank()
+        elapsed = time.time() - t0
+        assert len(ranked) == 3
+        assert elapsed < 2.5 * latency, (
+            f"rank() took {elapsed:.3f}s for 3 candidates at {latency}s "
+            f"latency each — probes are serialized")
+
+
+# ---------------------------------------------------------------------------
+# sharded placement: plan_slices
+# ---------------------------------------------------------------------------
+
+
+def _cand(n, weight=1.0):
+    return Candidate(f"https://{n}.example.com", "slurmpod:0.1",
+                     f"{n}-secret", weight=weight)
+
+
+def _q(queued, running, slots):
+    return {"queued": queued, "running": running, "slots": slots}
+
+
+def test_plan_spread_splits_load_proportionally():
+    """spread: shares follow FREE slots (slots - queued - running), with
+    contiguous ranges covering exactly [0, count)."""
+    plan = plan_slices(64, [_cand("a"), _cand("b")],
+                       [_q(0, 0, 8), _q(0, 0, 4)], strategy="spread")
+    assert [(p["start"], p["count"]) for p in plan] == [(0, 43), (43, 21)]
+    assert plan[0]["resourceURL"] == "https://a.example.com"
+    # a busy resource gets proportionally less
+    plan = plan_slices(12, [_cand("a"), _cand("b")],
+                       [_q(2, 4, 8), _q(0, 0, 4)], strategy="spread")
+    assert [(p["resourceURL"].startswith("https://a"), p["count"])
+            for p in plan] == [(False, 8), (True, 4)]  # free 4 vs free 2
+
+
+def test_plan_spread_full_clusters_fall_back_to_slots():
+    plan = plan_slices(9, [_cand("a"), _cand("b")],
+                       [_q(8, 8, 8), _q(4, 4, 4)], strategy="spread")
+    assert sorted(p["count"] for p in plan) == [3, 6]
+
+
+def test_plan_weighted_uses_static_weights():
+    plan = plan_slices(16, [_cand("a", weight=1.0), _cand("b", weight=3.0)],
+                       [_q(0, 0, 4), _q(0, 0, 4)], strategy="weighted")
+    by_url = {p["resourceURL"]: p["count"] for p in plan}
+    assert by_url["https://a.example.com"] == 4
+    assert by_url["https://b.example.com"] == 12
+
+
+def test_plan_single_takes_least_loaded():
+    plan = plan_slices(10, [_cand("a"), _cand("b")],
+                       [_q(6, 2, 8), _q(0, 1, 4)], strategy="single")
+    assert plan == [{"resourceURL": "https://b.example.com",
+                     "image": "slurmpod:0.1", "resourcesecret": "b-secret",
+                     "start": 0, "count": 10}]
+
+
+def test_plan_drops_unreachable_and_respects_max_slices():
+    # unreachable candidate (load None) is excluded when others answer
+    plan = plan_slices(8, [_cand("a"), _cand("b"), _cand("c")],
+                       [None, _q(0, 0, 4), _q(0, 0, 4)], strategy="spread")
+    assert all(not p["resourceURL"].startswith("https://a") for p in plan)
+    assert sum(p["count"] for p in plan) == 8
+    # max_slices caps the number of resources used (highest shares win)
+    plan = plan_slices(8, [_cand("a"), _cand("b"), _cand("c")],
+                       [_q(0, 0, 2), _q(0, 0, 8), _q(0, 0, 4)],
+                       strategy="spread", max_slices=2)
+    assert len(plan) == 2
+    assert {p["resourceURL"] for p in plan} == {
+        "https://b.example.com", "https://c.example.com"}
+    # nothing reachable at all: optimistic equal split (retry path surfaces
+    # real failures later), never an empty plan
+    plan = plan_slices(4, [_cand("a"), _cand("b")], [None, None],
+                       strategy="spread")
+    assert sum(p["count"] for p in plan) == 4 and len(plan) == 2
 
 
 def test_speculative_execution_straggler_mitigation(env):
