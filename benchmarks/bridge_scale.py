@@ -17,6 +17,12 @@ Baselines are the SAME code with the optimisation switched off (an adapter
 withholding Capability.BATCH_STATUS; StateStore(coalesce=False) plus
 JobProtocol.COALESCE_WRITES=False), so every delta is attributable.
 
+The event-driven scenario (``cr_scaling_event``) additionally runs a
+1000-CR fleet (32 in --smoke) on one endpoint under each poll cadence —
+fixed vs adaptive vs watch — measuring p50/p99 status staleness, requests
+per CR-tick, per-route server counters, and peak monitor threads, and
+asserts the adaptive/watch savings right where they are measured.
+
 Emits BENCH_bridge_scale.json (committed at the repo root; CI uploads the
 --smoke variant as an artifact).  See docs/perf.md for the methodology and
 the resulting before/after table.
@@ -26,6 +32,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import queue
 import statistics
 import sys
 import threading
@@ -164,6 +171,130 @@ def run_sliced_case(mode: str, count: int, *, slurm_slots: int = 8,
     }
 
 
+def _coarse_payload(job, cluster) -> int:
+    """Event-wait job body for the large-fleet scenario: identical
+    semantics to sleep_payload's run-for-WallSeconds, but waiting on the
+    cancel event at 0.25s granularity instead of 5ms polling — a thousand
+    concurrent payload threads must not spend the benchmark context-
+    switching."""
+    dur = float(job.properties.get("WallSeconds", cluster.default_duration))
+    deadline = time.time() + dur
+    while True:
+        remaining = deadline - time.time()
+        if remaining <= 0:
+            return 0
+        if job._cancel.wait(min(remaining, 0.25)):
+            return -1
+
+
+def run_event_case(cadence: str, crs: int, *, interval: float,
+                   dur_lo: float, dur_hi: float, workers: int = 8) -> dict:
+    """Event-driven control-plane scenario: ``crs`` single-job SLURM CRs in
+    multiplexed mode under one cadence ("fixed" | "adaptive" | "watch"),
+    with staggered durations sharing a long common RUNNING plateau.
+
+    Measures what the tentpole claims: p50/p99 STATUS STALENESS (cluster-side
+    end_time -> the CR status first observed terminal, via a registry watch),
+    REST requests per CR-tick, per-route server counters, and peak monitor
+    threads — then asserts the event-driven modes actually pay off vs fixed.
+    """
+    env = BridgeEnvironment(
+        slots=crs, default_duration=dur_hi,
+        operator_kwargs={"mode": "multiplexed", "cadence": cadence,
+                         "monitor_workers": workers,
+                         "reconcile_interval": 0.05})
+    try:
+        env.clusters["slurm"].payload = _coarse_payload
+        env.start()
+        srv = env.servers["slurm"]
+        req0 = srv.request_count
+        stats0 = srv.stats
+
+        # registry-side terminal observer: the first moment each CR's
+        # status turns terminal, as a consumer of the watch stream sees it
+        events = env.registry.watch(include_existing=False)
+        terminal_seen: dict = {}
+        stop_consumer = threading.Event()
+
+        def consume() -> None:
+            while True:
+                try:
+                    _, job = events.get(timeout=0.2)
+                except queue.Empty:
+                    if stop_consumer.is_set():
+                        return
+                    continue
+                if job.status.terminal() and job.uid not in terminal_seen:
+                    terminal_seen[job.uid] = time.time()
+
+        consumer = threading.Thread(target=consume, daemon=True,
+                                    name="bench-staleness-observer")
+        consumer.start()
+
+        t0 = time.time()
+        handles = [env.bridge.submit(f"ev-{i}", env.make_spec(
+            "slurm", script="bench", updateinterval=interval,
+            jobproperties={"WallSeconds":
+                           str(dur_lo + (dur_hi - dur_lo) * i / max(crs - 1, 1))}))
+            for i in range(crs)]
+        peak_threads = 0
+        pending = list(handles)
+        deadline = t0 + 300
+        while pending and time.time() < deadline:
+            peak_threads = max(peak_threads, _monitor_threads())
+            pending = [h for h in pending
+                       if not (h.job() and h.job().status.terminal())]
+            time.sleep(0.05)
+        elapsed = time.time() - t0
+        states = [h.job().status.state for h in handles]
+        if not all(s == DONE for s in states):
+            bad = [s for s in states if s != DONE]
+            raise RuntimeError(f"event scenario: {len(bad)} CRs not DONE "
+                               f"(e.g. {bad[:3]})")
+        stop_consumer.set()
+        consumer.join(timeout=2)
+        env.registry.unwatch(events)
+
+        # staleness: cluster-side terminal transition -> registry observer
+        jobs = env.clusters["slurm"].jobs
+        stale = []
+        for h in handles:
+            job = h.job()
+            jid = job.status.job_id
+            seen = terminal_seen.get(job.uid)
+            end = jobs[jid].end_time if jid in jobs else None
+            if seen is not None and end is not None:
+                stale.append(seen - end)
+        if len(stale) < crs * 0.95:
+            raise RuntimeError(f"staleness samples missing: {len(stale)}/{crs}")
+        stale.sort()
+        p50 = stale[len(stale) // 2]
+        p99 = stale[min(int(len(stale) * 0.99), len(stale) - 1)]
+
+        requests = srv.request_count - req0
+        # nominal tick budget: what a fixed cadence would spend
+        ticks = crs * max(elapsed / interval, 1.0)
+        route_delta = {
+            k: v["requests"] - stats0.get(k, {}).get("requests", 0)
+            for k, v in srv.stats.items()}
+        return {
+            "label": f"{cadence}/{crs}cr-event",
+            "cadence": cadence, "crs": crs, "interval": interval,
+            "duration_range_s": [dur_lo, dur_hi],
+            "wall_time_s": round(elapsed, 3),
+            "rest_requests": requests,
+            "rest_requests_per_cr_tick": round(requests / ticks, 4),
+            "status_staleness_p50_s": round(p50, 3),
+            "status_staleness_p99_s": round(p99, 3),
+            "monitor_threads_peak": peak_threads,
+            "monitor_workers": workers,
+            "server_stats": {k: v for k, v in sorted(route_delta.items())
+                             if v},
+        }
+    finally:
+        env.stop()
+
+
 def run_resize_case(mode: str, start: int, up: int, down: int, *,
                     interval: float = 0.02) -> dict:
     """Elastic-array resize scenario: scale a live ``start``-index array to
@@ -225,6 +356,7 @@ def main() -> int:
         array_dur, interval, cr_dur, single_repeats = 0.5, 0.01, 0.2, 1
         resize = (8, 16, 2)
         sliced = dict(count=16, slurm_slots=4, lsf_slots=2, duration=0.2)
+        event = dict(crs=32, interval=0.2, dur_lo=1.5, dur_hi=2.5)
     else:
         counts, cr_counts = [1, 64, 256], [1, 16, 64]
         # jobs long enough that the run is dominated by steady-state RUNNING
@@ -232,13 +364,20 @@ def main() -> int:
         array_dur, interval, cr_dur, single_repeats = 4.0, 0.01, 0.3, 9
         resize = (32, 48, 8)
         sliced = dict(count=64, slurm_slots=8, lsf_slots=4, duration=0.3)
+        # 1000 CRs on one endpoint: a long shared RUNNING plateau (the
+        # steady state the event-driven control plane optimises) plus a
+        # staggered drain (constant churn, the conservative re-poll path)
+        event = dict(crs=1000, interval=0.5, dur_lo=6.0, dur_hi=8.0)
+
     baseline_count = counts[-1]
 
     results = {"smoke": args.smoke,
                "config": {"interval": interval, "array_duration_s": array_dur,
-                          "batch_status_chunk": BATCH_STATUS_CHUNK},
+                          "batch_status_chunk": BATCH_STATUS_CHUNK,
+                          "event": event},
                "array_scaling": [], "baselines": [], "cr_scaling": [],
-               "single_job": [], "resize": [], "sliced_placement": []}
+               "cr_scaling_event": [], "single_job": [], "resize": [],
+               "sliced_placement": []}
 
     print("== array scaling (one CR, N indices) ==")
     for mode in MODES:
@@ -269,6 +408,54 @@ def main() -> int:
             results["cr_scaling"].append(r)
             print(f"  {r['label']:<24} threads={r['monitor_threads_peak']:>3} "
                   f"wall={r['wall_time_s']:>6.2f}s")
+
+    print(f"== event-driven control plane ({event['crs']} CRs, "
+          "fixed vs adaptive vs watch) ==")
+    for cadence in ("fixed", "adaptive", "watch"):
+        r = run_event_case(cadence, **event)
+        results["cr_scaling_event"].append(r)
+        print(f"  {r['label']:<24} req/cr-tick="
+              f"{r['rest_requests_per_cr_tick']:>7.4f} "
+              f"stale p99={r['status_staleness_p99_s']:>6.3f}s "
+              f"threads={r['monitor_threads_peak']}")
+        for route, n in r["server_stats"].items():
+            print(f"      {route:<36} {n}")
+
+    ev_fixed, ev_adaptive, ev_watch = results["cr_scaling_event"]
+    # the tentpole's claims, asserted where the numbers are made: the
+    # event-driven modes must cut request volume without letting staleness
+    # run away, and monitor threads must stay at the pool size throughout
+    for r in results["cr_scaling_event"]:
+        if r["monitor_threads_peak"] > r["monitor_workers"]:
+            raise RuntimeError(
+                f"{r['label']}: monitor threads grew past the pool "
+                f"({r['monitor_threads_peak']} > {r['monitor_workers']})")
+    if not (ev_adaptive["rest_requests"] < ev_fixed["rest_requests"] * 0.75):
+        raise RuntimeError(
+            f"adaptive cadence did not reduce request volume: "
+            f"{ev_adaptive['rest_requests']} vs {ev_fixed['rest_requests']}")
+    # watch replaces expensive status reads with cheap 204 event probes:
+    # the STATUS route must collapse, and the total (probes included) must
+    # not regress past fixed
+    status_route = "GET /slurm/v0.0.37/job/{id}"
+    if not (ev_watch["server_stats"].get(status_route, 0)
+            < ev_fixed["server_stats"].get(status_route, 1) * 0.5):
+        raise RuntimeError(
+            f"watch transport did not skip status requests: "
+            f"{ev_watch['server_stats']} vs {ev_fixed['server_stats']}")
+    if not (ev_watch["rest_requests"] <= ev_fixed["rest_requests"] * 1.1):
+        raise RuntimeError(
+            f"watch transport regressed total request volume: "
+            f"{ev_watch['rest_requests']} vs {ev_fixed['rest_requests']}")
+    # staleness bounds: fixed/watch see a transition within a few poll
+    # intervals (+ mirror latency slack for a loaded CI box); adaptive may
+    # legitimately be backed off up to MAX_FACTOR intervals when it fires
+    iv = event["interval"]
+    for r, factor in ((ev_fixed, 4), (ev_watch, 4), (ev_adaptive, 12)):
+        if r["status_staleness_p99_s"] > iv * factor + 2.0:
+            raise RuntimeError(
+                f"{r['label']}: p99 staleness unbounded "
+                f"({r['status_staleness_p99_s']}s > {iv * factor + 2.0}s)")
 
     print("== elastic resize (delta submit/cancel latency) ==")
     for mode in MODES:
@@ -329,6 +516,13 @@ def main() -> int:
         "sliced_placement": {
             r["mode"]: {"split": r["split"], "speedup_x": r["speedup_x"]}
             for r in results["sliced_placement"]},
+        "event_driven": {
+            r["cadence"]: {
+                "rest_requests": r["rest_requests"],
+                "requests_per_cr_tick": r["rest_requests_per_cr_tick"],
+                "staleness_p99_s": r["status_staleness_p99_s"],
+                "monitor_threads_peak": r["monitor_threads_peak"]}
+            for r in results["cr_scaling_event"]},
     }
 
     out = os.path.abspath(args.out)
@@ -343,6 +537,13 @@ def main() -> int:
           f"flushes {h['cm_flushes_always_write']} -> "
           f"{h['cm_flushes_coalesced']} ({h['cm_flush_reduction_x']}x), "
           f"mux threads {h['multiplexed_threads_by_cr_count']}")
+    ev = h["event_driven"]
+    print(f"event-driven @ {event['crs']} CRs: requests "
+          + " vs ".join(f"{c}={ev[c]['rest_requests']}"
+                        for c in ("fixed", "adaptive", "watch"))
+          + ", p99 staleness "
+          + " / ".join(f"{c}={ev[c]['staleness_p99_s']}s"
+                       for c in ("fixed", "adaptive", "watch")))
     print(f"wrote {out}")
     return 0
 

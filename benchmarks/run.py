@@ -18,13 +18,22 @@ figure maps to a measurable property of this implementation:
                               (bridge overhead on a real workload).
 
 Output: CSV `name,metric,value` on stdout (tee'd to bench_output.txt).
+
+`--smoke` shrinks every benchmark's iteration counts and payload sizes so
+the whole harness finishes in well under a minute for CI — the numbers are
+not comparable to a full run, only the plumbing is exercised.
 """
+import argparse
 import json
 import statistics
-import sys
 import time
 
 ROWS = []
+SMOKE = False
+
+
+def reps(full: int, smoke: int) -> int:
+    return smoke if SMOKE else full
 
 
 def emit(name: str, metric: str, value) -> None:
@@ -41,7 +50,7 @@ def fig2_submission_latency() -> None:
                                   "seq": 8})
                       if kind == "jaxlocal" else "payload")
             lats = []
-            for i in range(5):
+            for i in range(reps(5, 2)):
                 name = f"lat-{kind}-{i}"
                 t0 = time.time()
                 env.submit(name, env.make_spec(kind, script=script,
@@ -57,9 +66,9 @@ def fig2_submission_latency() -> None:
 def fig3_monitor_throughput() -> None:
     from repro.core import BridgeEnvironment
 
-    for poll in (0.02, 0.1):
+    for poll in ((0.02,) if SMOKE else (0.02, 0.1)):
         with BridgeEnvironment(default_duration=1.0, slots=64) as env:
-            n = 32
+            n = reps(32, 8)
             t0 = time.time()
             for i in range(n):
                 env.submit(f"mon-{i}", env.make_spec(
@@ -81,7 +90,8 @@ def sec51_restart_recovery() -> None:
 
     with BridgeEnvironment(default_duration=0.8) as env:
         recov = []
-        for i in range(5):
+        n = reps(5, 2)
+        for i in range(n):
             name = f"rst-{i}"
             env.submit(name, env.make_spec("slurm", script="x",
                                            updateinterval=0.02,
@@ -103,7 +113,7 @@ def sec51_restart_recovery() -> None:
         emit("sec51_restart_recovery", "pod_restart_p50_ms",
              round(statistics.median(recov) * 1e3, 1))
         emit("sec51_restart_recovery", "double_submissions",
-             len(env.clusters["slurm"].jobs) - 5)
+             len(env.clusters["slurm"].jobs) - n)
 
 
 def fig4_workflow_overhead() -> None:
@@ -131,15 +141,16 @@ def sec4_staging_throughput() -> None:
     with BridgeEnvironment() as env:
         client = env.directory.connect(URLS["lsf"], TOKENS["lsf"])
         ad = LSFAdapter(client)
-        blob = b"\x5a" * (4 << 20)
+        n = reps(8, 2)
+        blob = b"\x5a" * ((1 if SMOKE else 4) << 20)
         t0 = time.time()
-        for i in range(8):
+        for i in range(n):
             ad.upload(f"stage-{i}.bin", blob)
-        up = 8 * len(blob) / (time.time() - t0) / 2**20
+        up = n * len(blob) / (time.time() - t0) / 2**20
         t0 = time.time()
-        for i in range(8):
+        for i in range(n):
             ad.download(f"stage-{i}.bin")
-        down = 8 * len(blob) / (time.time() - t0) / 2**20
+        down = n * len(blob) / (time.time() - t0) / 2**20
         emit("sec4_staging_throughput", "upload_MiB_s", round(up, 1))
         emit("sec4_staging_throughput", "download_MiB_s", round(down, 1))
 
@@ -149,7 +160,7 @@ def e2e_bridged_training() -> None:
     from repro.core.backends.jaxlocal import train_job
     from repro.core.objectstore import ObjectStore
 
-    spec = {"arch": "gemma-2b", "steps": 20, "batch": 2, "seq": 16,
+    spec = {"arch": "gemma-2b", "steps": reps(20, 3), "batch": 2, "seq": 16,
             "checkpoint_every": 0, "lr": 1e-3}
     # unbridged baseline
     t0 = time.time()
@@ -175,10 +186,17 @@ BENCHES = [fig2_submission_latency, fig3_monitor_throughput,
 
 
 def main() -> None:
-    names = sys.argv[1:]
+    global SMOKE
+    p = argparse.ArgumentParser(description="control-plane benchmark harness")
+    p.add_argument("names", nargs="*",
+                   help="substring filter on benchmark names")
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced iterations/payloads for CI")
+    args = p.parse_args()
+    SMOKE = args.smoke
     print("name,metric,value")
     for b in BENCHES:
-        if names and not any(n in b.__name__ for n in names):
+        if args.names and not any(n in b.__name__ for n in args.names):
             continue
         b()
     print(f"# {len(ROWS)} rows ok")

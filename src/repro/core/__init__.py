@@ -27,13 +27,15 @@ from repro.core.registry import ResourceRegistry
 from repro.core.statestore import ConfigMap, StateStore
 from repro.core.objectstore import NoSuchKey, ObjectStore
 from repro.core.secrets import SecretNotFound, SecretStore
-from repro.core.rest import (FaultProfile, ResourceManagerDirectory,
-                             RestClient, RestServer, TransportError)
+from repro.core.rest import (Channel, FaultProfile,
+                             ResourceManagerDirectory, RestClient,
+                             RestServer, TransportError)
 from repro.core.backends.base import (BATCH_STATUS_CHUNK, Capability,
                                       resolve_adapter)
 from repro.core.api import Bridge, JobHandle
-from repro.core.controller import ControllerPod, JobProtocol
-from repro.core.monitor import MonitorRuntime, MonitorTask
+from repro.core.controller import ControllerPod, JobProtocol, TickObs
+from repro.core.monitor import (AdaptiveCadence, Cadence, FixedCadence,
+                                MonitorRuntime, MonitorTask)
 from repro.core.operator import BridgeOperator, default_adapters
 from repro.core.scheduler import (Candidate, LoadAwareScheduler, LoadProbe,
                                   plan_placement, plan_slices)

@@ -38,6 +38,9 @@ class ClusterJob:
     end_time: Optional[float] = None
     exit_code: Optional[int] = None
     reason: str = ""
+    # cluster events version at this job's last state transition (watch/
+    # long-poll support: lets a watcher ask "did THESE ids change since v?")
+    events_stamp: int = 0
     # files produced by the job, downloadable via the manager's API
     outputs: Dict[str, bytes] = field(default_factory=dict)
     _cancel: threading.Event = field(default_factory=threading.Event, repr=False)
@@ -101,6 +104,7 @@ class Capability(enum.Enum):
     QUEUE_LOAD = "queue_load"        # exposes queue depth/slots for scheduling
     NATIVE_ARRAYS = "native_arrays"  # one submission fans out N indices
     BATCH_STATUS = "batch_status"    # one request polls many ids (squeue -j)
+    WATCH = "watch"                  # events-version long-poll (skip idle polls)
 
 
 class ResourceAdapter:
@@ -185,6 +189,30 @@ class ResourceAdapter:
         """Queue depth/slots (requires Capability.QUEUE_LOAD)."""
         return None
 
+    def watch_events(self, since: int = -1,
+                     ids: Optional[List[str]] = None,
+                     wait: float = 0.0) -> Optional[int]:
+        """Events-version probe/long-poll (requires Capability.WATCH).
+
+        Returns the manager's current global events version when anything
+        relevant changed after ``since`` (``ids=None`` means ANY change; an
+        id the manager no longer knows counts as changed), or None when
+        nothing did within ``wait`` seconds (the server answers 204).  The
+        server additionally caps ``wait`` to the client's timeout."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not declare WATCH")
+
+    def events_version_cached(self, max_age: float) -> int:
+        """Global events version, amortized across every CR on the endpoint
+        via the shared channel's memo cache: at most one probe request per
+        ``max_age`` window however many slices consult it (requires
+        Capability.WATCH)."""
+        fetch = lambda: self.watch_events(since=-1)  # since=-1: always 200
+        channel = getattr(self.client, "channel", None)
+        if channel is None:
+            return fetch()
+        return channel.memo("events_version", max_age, fetch)
+
 
 def normalized_queue_load(q: Optional[Dict[str, int]]) -> Optional[float]:
     """The one definition of 'how loaded is this resource': (queued +
@@ -232,11 +260,52 @@ class SimulatedCluster:
         self.files: Dict[str, bytes] = {}
         self._next_id = start_numbering
         self._lock = threading.RLock()
+        # monotonically increasing events version: bumped (under the lock)
+        # on EVERY job state transition; watchers long-poll it via the
+        # condition so a ``GET /jobs/events?since=`` wakes on the change
+        self._events_version = 0
+        self._events_cv = threading.Condition(self._lock)
         self._threads: List[threading.Thread] = []
         self._stop = threading.Event()
         self._sched = threading.Thread(target=self._schedule_loop, daemon=True,
                                        name=f"{name}-sched")
         self._sched.start()
+
+    # -- events version (watch/long-poll substrate) -------------------------
+
+    def _bump_events(self, job: Optional[ClusterJob] = None) -> None:
+        """Publish one state transition to watchers.  Caller holds _lock."""
+        self._events_version += 1
+        if job is not None:
+            job.events_stamp = self._events_version
+        self._events_cv.notify_all()
+
+    def events_version(self) -> int:
+        with self._lock:
+            return self._events_version
+
+    def wait_events(self, since: int, timeout: float = 0.0,
+                    ids: Optional[List[str]] = None) -> "tuple[int, bool]":
+        """Long-poll primitive: block until an event relevant to ``ids``
+        (any event when ``ids`` is None; a vanished id counts as changed)
+        is newer than ``since``, or ``timeout`` elapses.  Returns
+        (current global version, relevant_change_seen)."""
+        def relevant() -> bool:
+            if ids is None:
+                return self._events_version > since
+            return any(j is None or j.events_stamp > since
+                       for j in (self.jobs.get(i) for i in ids))
+
+        deadline = time.time() + max(timeout, 0.0)
+        with self._events_cv:
+            changed = relevant()
+            while not changed:
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    break
+                self._events_cv.wait(remaining)
+                changed = relevant()
+            return self._events_version, changed
 
     # -- control surface (what REST facades call) ---------------------------
 
@@ -248,6 +317,7 @@ class SimulatedCluster:
             job = ClusterJob(id=jid, script=script, properties=dict(properties or {}),
                              params=dict(params or {}))
             self.jobs[jid] = job
+            self._bump_events(job)
             return job
 
     def get(self, job_id: str) -> Optional[ClusterJob]:
@@ -271,6 +341,7 @@ class SimulatedCluster:
             if job.state == QUEUED:
                 job.state = CANCELLED
                 job.end_time = time.time()
+                self._bump_events(job)
                 return "cancelled"
         job._cancel.set()
         return "cancelled"
@@ -293,6 +364,8 @@ class SimulatedCluster:
         self._stop.set()
         for j in list(self.jobs.values()):
             j._cancel.set()
+        with self._lock:
+            self._bump_events()  # release any in-flight long-poll waiters
         self._sched.join(timeout=2)
 
     # -- scheduler --------------------------------------------------------
@@ -310,6 +383,7 @@ class SimulatedCluster:
                 for job in to_start:
                     job.state = RUNNING
                     job.start_time = time.time()
+                    self._bump_events(job)
                     t = threading.Thread(target=self._run_job, args=(job,),
                                          daemon=True, name=f"{self.name}-{job.id}")
                     self._threads.append(t)
@@ -331,3 +405,4 @@ class SimulatedCluster:
                 job.state = COMPLETED
             else:
                 job.state = FAILED
+            self._bump_events(job)

@@ -130,8 +130,21 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         load = cluster.queue_load()
         return HttpResponse(200, {"queues": [dict(name="normal", **load)]})
 
+    def events(groups, _body, budget) -> HttpResponse:
+        # long-poll watch (see the slurm dialect): 200 {"version"} when an
+        # event relevant to ``ids`` is newer than ``since``, 204 otherwise
+        since = int(groups.get("since", "-1") or -1)
+        ids = [s for s in groups.get("ids", "").split(",") if s] or None
+        wait = min(float(groups.get("wait", "0") or 0), budget)
+        version, changed = cluster.wait_events(since, timeout=wait, ids=ids)
+        if not changed:
+            return HttpResponse(204)
+        return HttpResponse(200, {"version": version})
+
     srv.route("POST", "/platform/ws/jobs/submit", submit)
     srv.route("GET", "/platform/ws/jobs", jobsinfo)
+    # registered BEFORE the {id} route: "events" must not match as an id
+    srv.route("GET", "/platform/ws/jobs/events", events, kind="watch")
     srv.route("GET", "/platform/ws/jobs/{id}", jobinfo)
     srv.route("POST", "/platform/ws/jobs/{id}/kill", kill)
     srv.route("PUT", "/platform/ws/files/{name}", upload)
@@ -149,6 +162,7 @@ class LSFAdapter(B.ResourceAdapter):
         B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
         B.Capability.UPLOAD, B.Capability.DOWNLOAD, B.Capability.QUEUE_LOAD,
         B.Capability.BATCH_STATUS, B.Capability.NATIVE_ARRAYS,
+        B.Capability.WATCH,
     })
 
     def submit(self, script, properties, params) -> str:
@@ -206,6 +220,19 @@ class LSFAdapter(B.ResourceAdapter):
 
     def cancel(self, job_id: str) -> None:
         self.client.post(f"/platform/ws/jobs/{job_id}/kill")
+
+    def watch_events(self, since=-1, ids=None, wait=0.0):
+        q = f"since={since}"
+        if ids:
+            q += "&ids=" + ",".join(ids)
+        if wait:
+            q += f"&wait={wait}"
+        r = self.client.get("/platform/ws/jobs/events?" + q)
+        if r.status == 204:
+            return None
+        if not r.ok:
+            raise B.SubmitError(f"lsf events: HTTP {r.status}")
+        return int(r.json["version"])
 
     def upload(self, name: str, data: bytes) -> bool:
         r = self.client.put(f"/platform/ws/files/{name}",

@@ -91,6 +91,19 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
             return HttpResponse(409, {"error": "job already terminal"})
         return HttpResponse(200, {})
 
+    def events(groups, _body, budget) -> HttpResponse:
+        # long-poll watch: answer as soon as an event relevant to ``ids``
+        # (any event without ids) is newer than ``since``; 204 when nothing
+        # changed within min(wait, client timeout) — "no content" is the
+        # cheap steady-state answer that lets a watcher skip its status poll
+        since = int(groups.get("since", "-1") or -1)
+        ids = [s for s in groups.get("ids", "").split(",") if s] or None
+        wait = min(float(groups.get("wait", "0") or 0), budget)
+        version, changed = cluster.wait_events(since, timeout=wait, ids=ids)
+        if not changed:
+            return HttpResponse(204)
+        return HttpResponse(200, {"version": version})
+
     def ping(_groups, _body) -> HttpResponse:
         return HttpResponse(200, {"pings": [{"ping": "UP"}]})
 
@@ -99,6 +112,7 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         return HttpResponse(200, {"partitions": [dict(name="batch", **load)]})
 
     srv.route("POST", "/slurm/v0.0.37/job/submit", submit)
+    srv.route("GET", "/slurm/v0.0.37/jobs/events", events, kind="watch")
     srv.route("GET", "/slurm/v0.0.37/jobs", get_jobs)
     srv.route("GET", "/slurm/v0.0.37/job/{id}", get_job)
     srv.route("DELETE", "/slurm/v0.0.37/job/{id}", cancel)
@@ -110,11 +124,12 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
 class SlurmAdapter(B.ResourceAdapter):
     image = "slurmpod"
     # Slurm REST 21.08: no file staging (paper §5.2), but sbatch arrays,
-    # scancel-of-pending, and squeue-style multi-id status are native
+    # scancel-of-pending, squeue-style multi-id status, and an events-
+    # version long-poll are native
     capabilities = frozenset({
         B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
         B.Capability.QUEUE_LOAD, B.Capability.NATIVE_ARRAYS,
-        B.Capability.BATCH_STATUS,
+        B.Capability.BATCH_STATUS, B.Capability.WATCH,
     })
 
     def submit(self, script, properties, params) -> str:
@@ -170,6 +185,19 @@ class SlurmAdapter(B.ResourceAdapter):
 
     def cancel(self, job_id: str) -> None:
         self.client.delete(f"/slurm/v0.0.37/job/{job_id}")
+
+    def watch_events(self, since=-1, ids=None, wait=0.0):
+        q = f"since={since}"
+        if ids:
+            q += "&ids=" + ",".join(ids)
+        if wait:
+            q += f"&wait={wait}"
+        r = self.client.get("/slurm/v0.0.37/jobs/events?" + q)
+        if r.status == 204:
+            return None
+        if not r.ok:
+            raise B.SubmitError(f"slurm events: HTTP {r.status}")
+        return int(r.json["version"])
 
     def queue_load(self) -> Optional[Dict[str, int]]:
         r = self.client.get("/slurm/v0.0.37/partitions")

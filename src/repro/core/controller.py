@@ -55,6 +55,7 @@ from __future__ import annotations
 import json
 import threading
 import time
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Mapping, Optional, Set, Tuple, Type
 
 from repro.core.backends import base as B
@@ -77,6 +78,21 @@ _CANON_TO_BRIDGE = {
 
 class PodKilled(BaseException):
     """Out-of-band pod termination (node failure / eviction)."""
+
+
+@dataclass
+class TickObs:
+    """What one monitor tick observed — the cadence hint the protocol hands
+    outward to its driver (``JobProtocol.observation(chain)``), consumed by
+    the per-chain ``Cadence`` policy (core/monitor.py) to pick the next
+    poll deadline."""
+    changed: bool = False   # some index's state (or the id set) moved
+    busy: bool = False      # a transition is expected soon: indices still
+                            # queued, a mixed done/running tail, an elastic
+                            # reconcile/drain in flight, or a kill
+    unknown: bool = False   # the ticked slice(s) were unreachable
+    skipped: bool = False   # watch: events version proved nothing changed,
+                            # the status request was skipped entirely
 
 
 def killable_sleep(killed: threading.Event, name: str, seconds: float,
@@ -111,7 +127,8 @@ class PlacementSlice:
     to own, and the (global index, remote id) pairs it currently runs."""
 
     __slots__ = ("k", "url", "image", "secret", "adapter", "plan_start",
-                 "plan_count", "pairs", "failures", "last_error")
+                 "plan_count", "pairs", "failures", "last_error",
+                 "events_seen")
 
     def __init__(self, k: int, url: str, image: str, secret: str,
                  adapter: B.ResourceAdapter, plan_start: int = 0,
@@ -129,6 +146,10 @@ class PlacementSlice:
         # consecutive unreachable polls (per-slice UNKNOWN accounting)
         self.failures = 0
         self.last_error = ""
+        # highest remote events version this slice's statuses are known
+        # current for (-1 until the first real poll): the watch fast path
+        # skips the status request while the version has not moved past it
+        self.events_seen = -1
 
     def indices(self) -> List[int]:
         return sorted(p[0] for p in self.pairs)
@@ -202,6 +223,15 @@ class JobProtocol:
         self._condemned: Set[str] = set()
         # last monitor-written snapshot, for write-coalescing
         self._last_pushed: Dict[str, str] = {}
+        # event-driven control plane: cadence mode from the cm ("fixed" |
+        # "adaptive" | "watch"), last tick observation per chain (the
+        # driver's cadence hint), and how many status requests the watch
+        # fast path has skipped (observability + tests)
+        self.cadence_mode = "fixed"
+        self._watch_enabled = False
+        self.watch_skips = 0
+        self._obs: Dict[Optional[int], TickObs] = {}
+        self._prev_states: Dict[Optional[int], Dict[int, str]] = {}
 
     # -- indexed slice map -------------------------------------------------
 
@@ -241,6 +271,10 @@ class JobProtocol:
         killed — ``exit_code`` is set); True when monitoring should begin."""
         cm_data = self.cm.data
         self.poll = float(cm_data.get("updateinterval", "20"))
+        # absent key == "fixed": legacy config maps keep today's byte shape
+        # and today's fixed-interval monitor behaviour
+        self.cadence_mode = cm_data.get("cadence", "fixed")
+        self._watch_enabled = self.cadence_mode == "watch"
         self._unknown_after = int(cm_data.get("unknown_after", "5"))
         self._retry_limit = int(cm_data.get("retry_limit", "0") or 0)
         self._backoff = float(cm_data.get("retry_backoff", "0") or 0)
@@ -450,6 +484,48 @@ class JobProtocol:
                 self.cm.update({"staging": f"failed:{name}"})
 
     # -- paper Fig. 3: monitor ---------------------------------------------
+
+    def make_cadence(self):
+        """The poll-cadence policy this CR's cm asked for, one instance per
+        scheduling chain (core/monitor.py owns the classes; imported lazily
+        because monitor imports this module at top level).  ``watch`` mode
+        keeps the fixed cadence — the transport, not the timer, provides its
+        savings — and ``fixed`` remains the default baseline."""
+        from repro.core.monitor import AdaptiveCadence, FixedCadence
+        if self.cadence_mode == "adaptive":
+            return AdaptiveCadence(self.poll)
+        return FixedCadence(self.poll)
+
+    def observation(self, chain: Optional[int] = None) -> Optional[TickObs]:
+        """What the given chain's most recent tick observed (None before the
+        first tick) — the driver feeds this to its ``Cadence``."""
+        with self._mu:
+            return self._obs.get(chain)
+
+    def _watch_check(self, sl: PlacementSlice, pairs: List[List[Any]],
+                     seen: int) -> Tuple[bool, Optional[int]]:
+        """Watch fast path: decide whether this slice's status request can
+        be skipped because the endpoint's events version proves nothing
+        relevant changed since ``seen``.  Returns (skip, advance) where
+        ``advance`` is the version to raise ``events_seen`` to (None: keep).
+
+        Two levels: (a) a channel-memo-cached GLOBAL version probe — one
+        request per endpoint per half-poll window, amortized across every CR
+        on the endpoint, answers the steady state; (b) only when the global
+        version moved, one filtered long-poll asking about OUR ids.  A 204
+        there proves every event in (seen, probe-version] belonged to other
+        CRs (the filtered answer is evaluated later than the probe), so the
+        watermark may advance past them.  Any transport failure falls back
+        to the plain status poll — watch is an optimisation, never a new
+        failure mode."""
+        gv = sl.adapter.events_version_cached(max(self.poll / 2, 0.001))
+        if gv <= seen:
+            return True, None
+        v = sl.adapter.watch_events(since=seen,
+                                    ids=[jid for _, jid in pairs])
+        if v is None:
+            return True, gv
+        return False, v
 
     def _push(self, updates: Dict[str, Any]) -> None:
         """Monitor-side write coalescing: only keys whose value actually
@@ -686,27 +762,57 @@ class JobProtocol:
         with self._mu:
             targets = (self._slices if slice_k is None
                        else [self._slices[slice_k]])
-            snapshot = [(sl, [list(p) for p in sl.pairs]) for sl in targets]
+            # watch eligibility is judged under the lock: the fast path may
+            # stand in for a status poll ONLY when the slice is quiescent
+            # (no kill, no drain, no stalled growth, nothing mid-retry) and
+            # every live index already has a last-known info to reuse
+            snapshot = []
+            for sl in targets:
+                pairs = [list(p) for p in sl.pairs]
+                watchable = (self._watch_enabled and bool(pairs)
+                             and not kill_requested and not self._condemned
+                             and stall_msg is None
+                             and sl.adapter.supports(B.Capability.WATCH)
+                             and all(p[0] in self._infos for p in pairs))
+                snapshot.append((sl, pairs, watchable, sl.events_seen))
 
         # the remote round-trip happens OUTSIDE the state lock: a slow
-        # resource must not stall another slice's tick
+        # resource must not stall another slice's tick.  ``infos is None``
+        # marks a watch-skipped slice: its last-known infos are provably
+        # current, so evaluation proceeds on them without a status request.
         polled, failed = [], []
-        for sl, pairs in snapshot:
+        skipped = False
+        for sl, pairs, watchable, seen in snapshot:
             if not pairs:
-                polled.append((sl, pairs, []))
+                polled.append((sl, pairs, [], None))
                 continue
+            advance = None
+            if watchable:
+                try:
+                    skip, advance = self._watch_check(sl, pairs, seen)
+                except (TransportError, B.SubmitError):
+                    skip = None  # fall through to the plain status poll
+                if skip:
+                    polled.append((sl, pairs, None, advance))
+                    skipped = True
+                    continue
             try:
                 infos = self._poll_statuses(sl.adapter,
                                             [jid for _, jid in pairs])
-                polled.append((sl, pairs, infos))
+                polled.append((sl, pairs, infos, advance))
             except (TransportError, B.SubmitError) as e:
                 failed.append((sl, e))
 
         with self._mu:
             imap = self._index_map()
-            for sl, pairs, infos in polled:
+            for sl, pairs, infos, advance in polled:
                 sl.failures = 0
                 sl.last_error = ""
+                if advance is not None:
+                    sl.events_seen = max(sl.events_seen, advance)
+                if infos is None:
+                    self.watch_skips += 1
+                    continue
                 for (idx, jid), info in zip(pairs, infos):
                     cur = imap.get(idx)
                     if cur is not None and cur[1] == jid:
@@ -724,17 +830,24 @@ class JobProtocol:
                         self._push(
                             {"jobStatus": UNKNOWN,
                              "message": f"{where}resource unreachable: {e}"})
+                self._obs[slice_k] = TickObs(unknown=True)
                 return False
             return self._evaluate(cm_now, desired, kill_requested, stall_msg,
-                                  {sl.k for sl, _, _ in polled})
+                                  {sl.k for sl, _, _, _ in polled},
+                                  chain=slice_k, had_failures=bool(failed),
+                                  skipped=skipped)
 
     def _evaluate(self, cm_now: Dict[str, str], desired: int,
                   kill_requested: bool, stall_msg: Optional[str],
-                  ticked: Set[int]) -> bool:
+                  ticked: Set[int], chain: Optional[int] = None,
+                  had_failures: bool = False,
+                  skipped: bool = False) -> bool:
         """The post-poll half of a tick (holding ``self._mu``): drain
         condemned indices, spend retry budget, aggregate, push status, act
-        on the kill flag, decide termination.  Per-slice remote actions
-        (cancel, resubmit) run only for the slices this tick polled."""
+        on the kill flag, decide termination, and record this chain's
+        ``TickObs`` for the driver's cadence.  Per-slice remote actions
+        (cancel, resubmit) run only for the slices this tick polled (a
+        watch-skipped slice counts: its states are provably current)."""
         imap = self._index_map()
         states = {
             i: (_CANON_TO_BRIDGE[self._infos[i]["state"]]
@@ -862,6 +975,21 @@ class JobProtocol:
                 and len(indices) == desired):
             updates["observed_generation"] = cm_now["generation"]
         self._push(updates)
+
+        # cadence hint: what this chain's tick saw.  "busy" flags phases
+        # where a transition is expected soon (indices still queued, a
+        # mixed done/running tail, drain/growth in flight, a kill) so an
+        # adaptive cadence holds its tight interval; "changed" resets a
+        # backed-off one; a quiet, fully-RUNNING steady state backs off.
+        terminal = sum(1 for i in live if states[i] in (DONE, FAILED, KILLED))
+        self._obs[chain] = TickObs(
+            changed=states != self._prev_states.get(chain),
+            busy=bool(kill_requested or self._condemned or stall_msg
+                      or any(states[i] == SUBMITTED for i in live)
+                      or 0 < terminal < len(live)),
+            unknown=had_failures or bool(unreachable),
+            skipped=skipped)
+        self._prev_states[chain] = dict(states)
 
         if kill_requested:
             for sl in self._slices:
@@ -999,8 +1127,11 @@ class ControllerPod:
         if not proto.start():
             self._exit(proto.exit_code)
             return
+        # the pod's inter-tick wait comes from the CR's cadence policy:
+        # FixedCadence reproduces the historical `sleep(poll)` exactly
+        cadence = proto.make_cadence()
         while True:
-            self._sleep(proto.poll)
+            self._sleep(cadence.next_delay(proto.observation(None)))
             if proto.tick():
                 self._exit(proto.exit_code)
                 return

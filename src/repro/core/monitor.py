@@ -49,11 +49,68 @@ from typing import Dict, List, Mapping, Optional, Tuple, Type
 
 from repro.core.backends import base as B
 from repro.core.controller import (ControllerPod, JobProtocol, PodKilled,
-                                   killable_sleep)
+                                   TickObs, killable_sleep)
 from repro.core.objectstore import ObjectStore
 from repro.core.rest import ResourceManagerDirectory
 from repro.core.secrets import SecretStore
 from repro.core.statestore import ConfigMap
+
+
+class Cadence:
+    """Poll-cadence policy for ONE scheduling chain: given what the last
+    tick observed (a ``TickObs``, or None before the first tick), decide the
+    delay until the chain's next tick.  Both protocol drivers consult it —
+    the ControllerPod thread between sleeps, the MonitorTask after each
+    step — so pod-per-cr and multiplexed mode pace identically."""
+
+    def next_delay(self, obs: Optional[TickObs]) -> float:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        """An out-of-band event (spec patch poke) invalidated the backoff:
+        snap back to the tight interval."""
+
+
+class FixedCadence(Cadence):
+    """The historical baseline: every ``interval`` seconds, regardless of
+    what the tick observed.  Default, and the benchmark reference point."""
+
+    def __init__(self, interval: float):
+        self.interval = interval
+
+    def next_delay(self, obs: Optional[TickObs]) -> float:
+        return self.interval
+
+
+class AdaptiveCadence(Cadence):
+    """Deadline arithmetic extracted from the drivers into policy: back off
+    a long-quiet RUNNING chain exponentially (up to ``MAX_FACTOR`` × base),
+    hold the TIGHT interval whenever a transition is expected soon (just
+    submitted, mixed done/running tail, reconcile/drain in flight, slice
+    unreachable — an UNKNOWN chain must notice recovery fast, so it PINS
+    tight rather than backing off), and drop back to base on any observed
+    state change."""
+
+    TIGHT_FACTOR = 0.25   # "expecting a transition" interval, × base
+    GROWTH = 2.0          # per-quiet-tick backoff multiplier
+    MAX_FACTOR = 8.0      # backoff ceiling, × base
+
+    def __init__(self, base: float):
+        self.base = base
+        self._cur = base * self.TIGHT_FACTOR
+
+    def next_delay(self, obs: Optional[TickObs]) -> float:
+        if obs is None or obs.unknown or obs.busy:
+            self._cur = self.base * self.TIGHT_FACTOR
+        elif obs.changed:
+            self._cur = self.base
+        else:
+            self._cur = min(max(self._cur, self.base) * self.GROWTH,
+                            self.base * self.MAX_FACTOR)
+        return self._cur
+
+    def reset(self) -> None:
+        self._cur = self.base * self.TIGHT_FACTOR
 
 
 class MonitorTask:
@@ -97,6 +154,10 @@ class MonitorTask:
         self._chain_locks: Dict[int, threading.Lock] = {0: threading.Lock()}
         # single-finalizer guard for the death barrier (see _die)
         self._dying = threading.Lock()
+        # one cadence policy per chain (created lazily after start() has
+        # parsed the cm's cadence mode): each slice backs off or tightens on
+        # ITS OWN observations, independent of its siblings
+        self._cadences: Dict[int, Cadence] = {}
         self._proto = JobProtocol(
             name, configmap, secrets, objectstore, directory, adapters,
             checkpoint=self._checkpoint, sleep=self._sleep,
@@ -120,6 +181,12 @@ class MonitorTask:
         global, so chain 0 carries the wake-up."""
         if not self._done.is_set():
             self._poke_pending = True
+            # a patch overrides any backed-off deadline RIGHT NOW: the
+            # zero-delay entry supersedes the old one on the heap, and the
+            # chain's cadence snaps back to tight for the reconcile
+            cad = self._cadences.get(0)
+            if cad is not None:
+                cad.reset()
             self._runtime.schedule(self, 0.0, 0)
 
     def alive(self) -> bool:
@@ -180,11 +247,11 @@ class MonitorTask:
                         self._chain_locks[k] = threading.Lock()
                     for k in range(1, n):
                         self._runtime.schedule(self, 0.0, k)
-                    return self._next_delay()
+                    return self._next_delay(chain)
                 if self._proto.tick(chain):
                     self._finish()
                     return None
-                return self._next_delay()
+                return self._next_delay(chain)
             except PodKilled:
                 return self._die(chain)
             except Exception as e:  # task crash — the operator restarts it
@@ -213,15 +280,20 @@ class MonitorTask:
                 l.release()
         return None
 
-    def _next_delay(self) -> float:
-        """Poll delay for the next step — zero when a poke or a kill arrived
-        mid-step (their immediate wake-up entries are superseded by this
-        step's own reschedule, so the zero delay stands in for them): the
-        patch is applied, or PodKilled observed, immediately."""
+    def _next_delay(self, chain: int = 0) -> float:
+        """Poll delay for the chain's next step, from its cadence policy —
+        zero when a poke or a kill arrived mid-step (their immediate wake-up
+        entries are superseded by this step's own reschedule, so the zero
+        delay stands in for them): the patch is applied, or PodKilled
+        observed, immediately."""
+        cad = self._cadences.get(chain)
+        if cad is None:
+            cad = self._cadences[chain] = self._proto.make_cadence()
         if self._killed.is_set() or self._poke_pending:
             self._poke_pending = False
+            cad.reset()
             return 0.0
-        return self._proto.poll
+        return cad.next_delay(self._proto.observation(chain))
 
     def _finish(self) -> None:
         self.exit_code = self._proto.exit_code

@@ -73,9 +73,12 @@ class BridgeOperator:
                  max_restarts: Optional[int] = None,
                  pod_min_sleep: float = 0.005,
                  mode: str = "multiplexed",
-                 monitor_workers: int = 4):
+                 monitor_workers: int = 4,
+                 cadence: str = "fixed"):
         if mode not in ("multiplexed", "pod-per-cr"):
             raise ValueError(f"unknown operator mode {mode!r}")
+        if cadence not in ("fixed", "adaptive", "watch"):
+            raise ValueError(f"unknown cadence mode {cadence!r}")
         self.registry = registry
         self.statestore = statestore
         self.secrets = secrets
@@ -86,6 +89,7 @@ class BridgeOperator:
         self.max_restarts = max_restarts
         self.pod_min_sleep = pod_min_sleep
         self.mode = mode
+        self.cadence = cadence
         self.runtime: Optional[MonitorRuntime] = (
             MonitorRuntime(workers=monitor_workers)
             if mode == "multiplexed" else None)
@@ -286,6 +290,10 @@ class BridgeOperator:
             "message": "",
             "generation": str(job.generation),
         }
+        # written only when non-default, so legacy config maps (and every
+        # pre-cadence consumer of their exact key set) keep today's shape
+        if self.cadence != "fixed":
+            data["cadence"] = self.cadence
         if s.s3storage:
             data["s3endpoint"] = s.s3storage.endpoint
             data["s3secret"] = s.s3storage.s3secret

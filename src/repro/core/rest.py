@@ -6,9 +6,23 @@ controller pods talk to backends EXCLUSIVELY through ``RestClient.request``
 (method, path, json) and never call backend internals.  The transport injects
 the unreliable-network character (latency, fault windows, auth failures) that
 the bridge's retry/UNKNOWN logic exists to survive.
+
+Two event-driven extensions live here:
+
+  * ``watch`` routes — a route kind whose handler may BLOCK until a
+    state-version advances or its wait budget expires (returning 204).  The
+    budget honors ``RestClient.timeout``: the server never holds a request
+    longer than the client is willing to wait.
+  * ``Channel`` — one keep-alive connection per endpoint.  Every client a
+    monitor holds for the same endpoint multiplexes its requests over the
+    shared channel (``ResourceManagerDirectory`` hands out one per URL), so
+    request/error counters — and the channel's memo cache, which amortizes
+    events-version probes across all CRs on the endpoint — are measured
+    where a real connection pool would sit.
 """
 from __future__ import annotations
 
+import math
 import random
 import re
 import threading
@@ -69,25 +83,56 @@ class FaultProfile:
 
 
 Handler = Callable[[Dict[str, str], Any], HttpResponse]
+# watch handlers additionally receive the wait budget (seconds) the server
+# grants them: min(what the query asked for, what the client will wait)
+WatchHandler = Callable[[Dict[str, str], Any, float], HttpResponse]
 
 
 class RestServer:
     """Route table + bearer-token auth for one simulated resource manager."""
 
     def __init__(self, token: str = "", fault: Optional[FaultProfile] = None):
-        self._routes: List[Tuple[str, re.Pattern, Handler]] = []
+        self._routes: List[Tuple[str, re.Pattern, Handler, str, str]] = []
         self._token = token
         self.fault = fault or FaultProfile()
         self.request_count = 0
         self._lock = threading.Lock()
+        # per-route request/error counters, keyed "METHOD /pattern"
+        self._stats: Dict[str, Dict[str, int]] = {}
 
-    def route(self, method: str, pattern: str, handler: Handler) -> None:
-        """pattern: '/jobs/{id}' -> named groups."""
+    def route(self, method: str, pattern: str, handler: Handler,
+              kind: str = "plain") -> None:
+        """pattern: '/jobs/{id}' -> named groups.  ``kind="watch"`` marks a
+        long-poll route: its handler gets a third argument (the wait budget
+        in seconds) and may block until a state-version advances or the
+        budget runs out (answering 204)."""
+        if kind not in ("plain", "watch"):
+            raise ValueError(f"unknown route kind {kind!r}")
         rx = re.compile("^" + re.sub(r"\{(\w+)\}", r"(?P<\1>[^/]+)", pattern) + "$")
-        self._routes.append((method.upper(), rx, handler))
+        self._routes.append((method.upper(), rx, handler, kind, pattern))
+
+    @property
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-route {"requests", "errors"} counters (copy)."""
+        with self._lock:
+            return {k: dict(v) for k, v in self._stats.items()}
+
+    def _count(self, key: str, error: bool) -> None:
+        with self._lock:
+            ent = self._stats.setdefault(key, {"requests": 0, "errors": 0})
+            ent["requests"] += 1
+            if error:
+                ent["errors"] += 1
 
     def handle(self, method: str, path: str, json_body: Any = None,
-               headers: Optional[Dict[str, str]] = None) -> HttpResponse:
+               headers: Optional[Dict[str, str]] = None,
+               timeout: Optional[float] = None) -> HttpResponse:
+        # the client gives up before a too-slow response can arrive — this is
+        # where RestClient.timeout actually bites (watch routes additionally
+        # cap their blocking wait to the same budget below)
+        if timeout is not None and self.fault.latency > timeout:
+            time.sleep(timeout)
+            raise TransportError(f"client timed out after {timeout}s")
         self.fault.check()
         with self._lock:
             self.request_count += 1
@@ -95,34 +140,106 @@ class RestServer:
         if self._token:
             auth = headers.get("Authorization", "")
             if auth != f"Bearer {self._token}":
+                self._count("(unauthorized)", error=True)
                 return HttpResponse(401, {"error": "unauthorized"})
         # query string: merged into the handler's groups dict (path groups
         # win on collision), so 'GET /jobs?ids=a,b' routes like 'GET /jobs'
         path, _, query = path.partition("?")
         params = dict(parse_qsl(query)) if query else {}
-        for m, rx, handler in self._routes:
+        for m, rx, handler, kind, pattern in self._routes:
             if m != method.upper():
                 continue
             match = rx.match(path)
             if match:
+                key = f"{m} {pattern}"
                 try:
-                    return handler({**params, **match.groupdict()}, json_body)
+                    if kind == "watch":
+                        budget = math.inf if timeout is None else timeout
+                        resp = handler({**params, **match.groupdict()},
+                                       json_body, budget)
+                    else:
+                        resp = handler({**params, **match.groupdict()},
+                                       json_body)
                 except Exception as e:  # backend bug -> 500, not a crash
-                    return HttpResponse(500, {"error": f"{type(e).__name__}: {e}"})
+                    resp = HttpResponse(500,
+                                        {"error": f"{type(e).__name__}: {e}"})
+                self._count(key, error=resp.status >= 400)
+                return resp
+        self._count("(unmatched)", error=True)
         return HttpResponse(404, {"error": f"no route {method} {path}"})
 
 
-class RestClient:
-    """What a controller pod holds: endpoint + credentials, nothing else."""
+class Channel:
+    """One keep-alive connection to ONE endpoint.
 
-    def __init__(self, server: RestServer, token: str = "", timeout: float = 5.0):
+    All of a monitor's requests to that endpoint flow through the shared
+    channel object (``ResourceManagerDirectory.connect`` hands every client
+    for a URL the same channel), which is where request/error counters and
+    the cross-client memo cache live.
+    """
+
+    def __init__(self, server: RestServer, url: str = ""):
         self._server = server
+        self.url = url
+        self.requests = 0
+        self.errors = 0
+        self._lock = threading.Lock()
+        self._memo: Dict[str, Tuple[Any, float]] = {}
+        self._memo_gates: Dict[str, threading.Lock] = {}
+
+    def request(self, method: str, path: str, json: Any = None,
+                headers: Optional[Dict[str, str]] = None,
+                timeout: Optional[float] = None) -> HttpResponse:
+        try:
+            resp = self._server.handle(method, path, json, headers,
+                                       timeout=timeout)
+        except Exception:
+            with self._lock:
+                self.requests += 1
+                self.errors += 1
+            raise
+        with self._lock:
+            self.requests += 1
+            if resp.status >= 400:
+                self.errors += 1
+        return resp
+
+    def memo(self, key: str, max_age: float, compute: Callable[[], Any]) -> Any:
+        """Endpoint-wide response cache with single-flight refresh: however
+        many clients share the channel, at most one re-computes a stale
+        entry (the rest read the cached value) — this is what keeps e.g.
+        events-version probes O(endpoints), not O(CRs)."""
+        now = time.time()
+        with self._lock:
+            ent = self._memo.get(key)
+            if ent is not None and now - ent[1] <= max_age:
+                return ent[0]
+            gate = self._memo_gates.setdefault(key, threading.Lock())
+        with gate:
+            with self._lock:
+                ent = self._memo.get(key)
+                if ent is not None and time.time() - ent[1] <= max_age:
+                    return ent[0]
+            value = compute()  # outside self._lock: it is a live request
+            with self._lock:
+                self._memo[key] = (value, time.time())
+            return value
+
+
+class RestClient:
+    """What a controller pod holds: endpoint + credentials, nothing else.
+    Requests ride the endpoint's (possibly shared) ``Channel``."""
+
+    def __init__(self, server, token: str = "", timeout: float = 5.0):
+        self.channel = server if isinstance(server, Channel) \
+            else Channel(server)
         self._token = token
         self.timeout = timeout
 
     def request(self, method: str, path: str, json: Any = None) -> HttpResponse:
         headers = {"Authorization": f"Bearer {self._token}"} if self._token else {}
-        return self._server.handle(method, path, json, headers)
+        return self.channel.request(method, path, json, headers,
+                                    timeout=self.timeout)
 
     def get(self, path: str) -> HttpResponse:
         return self.request("GET", path)
@@ -138,18 +255,34 @@ class RestClient:
 
 
 class ResourceManagerDirectory:
-    """Maps resourceURL -> RestServer (DNS + ingress analogue)."""
+    """Maps resourceURL -> RestServer (DNS + ingress analogue).  Keeps ONE
+    ``Channel`` per URL: every client connected through the directory to the
+    same endpoint shares it."""
 
     def __init__(self) -> None:
         self._servers: Dict[str, RestServer] = {}
+        self._channels: Dict[str, Channel] = {}
+        self._lock = threading.Lock()
 
     def register(self, url: str, server: RestServer) -> None:
         self._servers[url] = server
 
-    def connect(self, url: str, token: str = "") -> RestClient:
+    def channel(self, url: str) -> Channel:
         if url not in self._servers:
             raise TransportError(f"cannot resolve {url!r}")
-        return RestClient(self._servers[url], token)
+        with self._lock:
+            ch = self._channels.get(url)
+            if ch is None:
+                ch = self._channels[url] = Channel(self._servers[url], url)
+            return ch
+
+    def channels(self) -> Dict[str, Channel]:
+        """Live per-endpoint channels (for stats/observability)."""
+        with self._lock:
+            return dict(self._channels)
+
+    def connect(self, url: str, token: str = "") -> RestClient:
+        return RestClient(self.channel(url), token)
 
     def urls(self) -> List[str]:
         return sorted(self._servers)

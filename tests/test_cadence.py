@@ -1,0 +1,304 @@
+"""Event-driven control plane: cadence policies, watch/long-poll transport,
+per-endpoint channels, and the client-timeout contract.
+
+Three layers under test:
+  * the ``Cadence`` policy objects themselves (pure deadline arithmetic),
+  * the transport substrate (watch routes, ``Channel`` multiplexing/memo,
+    ``RestClient.timeout`` enforcement),
+  * the integrated protocol (watch-mode ticks skip status requests; a spec
+    patch overrides a backed-off adaptive deadline; dialects without
+    Capability.WATCH never see a watch or batch verb).
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (AdaptiveCadence, ArraySpec, BridgeEnvironment,
+                        TOKENS,
+                        Capability, Channel, DONE, FixedCadence, RUNNING,
+                        TickObs, TransportError, RestClient, URLS)
+from repro.core.backends import base as B
+from repro.core.backends.quantum import QuantumAdapter
+from repro.core.backends.ray import RayAdapter
+from repro.core.backends.slurm import SlurmAdapter, make_server
+from repro.core.rest import FaultProfile
+
+
+def _wait(predicate, timeout=10, interval=0.005):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# cadence policy arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_cadence_ignores_observations():
+    cad = FixedCadence(0.5)
+    for obs in (None, TickObs(changed=True), TickObs(busy=True),
+                TickObs(unknown=True), TickObs()):
+        assert cad.next_delay(obs) == 0.5
+
+
+def test_adaptive_cadence_backs_off_and_resets():
+    cad = AdaptiveCadence(1.0)
+    tight = AdaptiveCadence.TIGHT_FACTOR  # 0.25
+    # before the first tick: expect a transition soon (just submitted)
+    assert cad.next_delay(None) == pytest.approx(tight)
+    # a state change drops to base; quiet ticks then double up to the cap
+    assert cad.next_delay(TickObs(changed=True)) == pytest.approx(1.0)
+    assert cad.next_delay(TickObs()) == pytest.approx(2.0)
+    assert cad.next_delay(TickObs()) == pytest.approx(4.0)
+    assert cad.next_delay(TickObs()) == pytest.approx(8.0)
+    assert cad.next_delay(TickObs()) == pytest.approx(8.0)  # capped
+    # busy (transition expected) snaps back to tight, however backed off
+    assert cad.next_delay(TickObs(busy=True)) == pytest.approx(tight)
+    # reset (spec-patch poke) does the same out-of-band
+    cad.next_delay(TickObs(changed=True))
+    cad.next_delay(TickObs())
+    cad.reset()
+    assert cad.next_delay(TickObs()) >= 1.0  # resumes from base, not 2.0
+
+
+def test_adaptive_cadence_unknown_pins_tight():
+    """An unreachable slice must be re-checked at the TIGHT interval — a
+    chain must never back off while it cannot see its resource (recovery
+    would otherwise be observed up to MAX_FACTOR intervals late)."""
+    cad = AdaptiveCadence(1.0)
+    tight = 1.0 * AdaptiveCadence.TIGHT_FACTOR
+    cad.next_delay(TickObs(changed=True))
+    cad.next_delay(TickObs())  # backed off to 2.0
+    for _ in range(5):
+        assert cad.next_delay(TickObs(unknown=True)) == pytest.approx(tight)
+
+
+# ---------------------------------------------------------------------------
+# transport: client timeout, watch routes, channels
+# ---------------------------------------------------------------------------
+
+
+def _cluster_and_client(timeout=5.0, latency=0.0):
+    cluster = B.SimulatedCluster("t", slots=4, default_duration=0.05)
+    srv = make_server(cluster, token="tok",
+                      fault=FaultProfile(latency=latency))
+    client = RestClient(srv, token="tok", timeout=timeout)
+    return cluster, srv, client
+
+
+def test_client_timeout_enforced_on_slow_server():
+    """RestClient.timeout is a real contract now: a response slower than the
+    client's budget surfaces as a TransportError, not a silent stall."""
+    cluster, srv, client = _cluster_and_client(timeout=0.05, latency=0.3)
+    t0 = time.time()
+    with pytest.raises(TransportError):
+        client.get("/slurm/v0.0.37/ping")
+    assert time.time() - t0 < 0.25  # gave up at ~timeout, not ~latency
+    cluster.shutdown()
+
+
+def test_watch_route_expires_within_client_timeout():
+    """A watch long-poll with a huge requested wait is capped to the
+    client's timeout and answers 204 (no content) at expiry."""
+    cluster, srv, client = _cluster_and_client(timeout=0.3)
+    adapter = SlurmAdapter(client)
+    v0 = cluster.events_version()
+    t0 = time.time()
+    assert adapter.watch_events(since=v0 + 100, wait=30.0) is None
+    elapsed = time.time() - t0
+    assert 0.2 <= elapsed < 2.0  # waited ~timeout, nowhere near 30s
+    cluster.shutdown()
+
+
+def test_watch_route_wakes_on_relevant_event():
+    """A blocked watch answers as soon as a relevant transition lands, and
+    a filtered watch ignores OTHER jobs' events."""
+    cluster, srv, client = _cluster_and_client(timeout=5.0)
+    adapter = SlurmAdapter(client)
+    ours = cluster.submit("s", {"WallSeconds": "30"}, {})
+    other = cluster.submit("s", {"WallSeconds": "30"}, {})
+    # let both QUEUED->RUNNING transitions land first: our own job's start
+    # event would otherwise (correctly) satisfy the watch immediately
+    assert _wait(lambda: ours.state == B.RUNNING and other.state == B.RUNNING)
+    v0 = cluster.events_version()
+    # filtered on OUR id: the other job's cancel must not wake it
+    result = {}
+
+    def watch():
+        result["v"] = adapter.watch_events(since=v0, ids=[ours.id], wait=3.0)
+
+    t = threading.Thread(target=watch)
+    t.start()
+    time.sleep(0.05)
+    cluster.cancel(other.id)  # irrelevant event
+    time.sleep(0.2)
+    assert t.is_alive()  # still waiting: the event was filtered out
+    cluster.cancel(ours.id)
+    t.join(timeout=3)
+    assert not t.is_alive()
+    assert result["v"] is not None and result["v"] > v0
+    cluster.shutdown()
+
+
+def test_directory_shares_one_channel_per_endpoint():
+    """Every client the directory hands out for one URL multiplexes over
+    the SAME channel object, whose counters see all their requests."""
+    with BridgeEnvironment() as env:
+        c1 = env.directory.connect(URLS["slurm"], TOKENS["slurm"])
+        c2 = env.directory.connect(URLS["slurm"], TOKENS["slurm"])
+        other = env.directory.connect(URLS["lsf"], TOKENS["lsf"])
+        assert c1.channel is c2.channel
+        assert other.channel is not c1.channel
+        before = c1.channel.requests
+        c1.get("/slurm/v0.0.37/ping")
+        c2.get("/slurm/v0.0.37/ping")
+        assert c1.channel.requests == before + 2
+        assert env.directory.channels()[URLS["slurm"]] is c1.channel
+
+
+def test_channel_memo_amortizes_and_refreshes():
+    """channel.memo: one compute per max_age window however many callers;
+    a stale entry is recomputed exactly once."""
+    cluster, srv, client = _cluster_and_client()
+    ch = client.channel
+    calls = []
+
+    def compute():
+        calls.append(1)
+        return len(calls)
+
+    assert ch.memo("k", 10.0, compute) == 1
+    assert ch.memo("k", 10.0, compute) == 1  # cached
+    assert len(calls) == 1
+    assert ch.memo("k", 0.0, compute) == 2   # max_age 0: always stale
+    cluster.shutdown()
+
+
+def test_server_per_route_stats():
+    cluster, srv, client = _cluster_and_client()
+    client.get("/slurm/v0.0.37/ping")
+    client.get("/slurm/v0.0.37/ping")
+    client.get("/slurm/v0.0.37/job/does-not-exist")
+    stats = srv.stats
+    assert stats["GET /slurm/v0.0.37/ping"] == {"requests": 2, "errors": 0}
+    assert stats["GET /slurm/v0.0.37/job/{id}"]["errors"] == 1
+    cluster.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# integrated protocol behaviour
+# ---------------------------------------------------------------------------
+
+
+def _proto_of(env, handle):
+    pod = env.operator.pods[handle.job().uid]
+    return pod._proto
+
+
+@pytest.mark.parametrize("cadence", ["adaptive", "watch"])
+def test_event_modes_converge_like_fixed(cadence):
+    """Lifecycle parity: an array CR runs to DONE with per-index states
+    under both event-driven cadences, exactly as under fixed."""
+    with BridgeEnvironment(default_duration=0.1,
+                           operator_kwargs={"cadence": cadence}) as env:
+        h = env.bridge.submit("ev", env.make_spec(
+            "slurm", script="s", updateinterval=0.03,
+            array=ArraySpec(count=4)))
+        assert h.wait(timeout=30).status.state == DONE
+        assert h.job().status.index_states == {str(i): DONE
+                                               for i in range(4)}
+
+
+def test_watch_mode_skips_status_requests():
+    """The watch fast path must actually skip status polls during a quiet
+    RUNNING plateau — and still observe the terminal transition."""
+    with BridgeEnvironment(default_duration=0.6,
+                           operator_kwargs={"cadence": "watch"}) as env:
+        h = env.bridge.submit("w", env.make_spec(
+            "slurm", script="s", updateinterval=0.05,
+            jobproperties={"WallSeconds": "0.6"}))
+        assert _wait(lambda: h.status().state == RUNNING, timeout=10)
+        proto = _proto_of(env, h)
+        assert h.wait(timeout=30).status.state == DONE
+        assert proto.watch_skips > 0
+
+
+def test_poke_overrides_backed_off_deadline_multiplexed():
+    """Satellite-spec: a spec patch must take effect NOW even when the
+    adaptive cadence has backed the chain's deadline off — the poke entry
+    supersedes the heap entry and resets the cadence."""
+    with BridgeEnvironment(slots=8, default_duration=600,
+                           operator_kwargs={"mode": "multiplexed",
+                                            "cadence": "adaptive"}) as env:
+        h = env.bridge.submit("el", env.make_spec(
+            "slurm", script="s", updateinterval=0.5,
+            jobproperties={"WallSeconds": "600"},
+            array=ArraySpec(count=2)))
+        assert _wait(lambda: h.status().state == RUNNING, timeout=15)
+        # let the quiet RUNNING plateau back the cadence off past 2x base
+        time.sleep(3.0)
+        t0 = time.time()
+        h.scale(4)
+        assert _wait(
+            lambda: len([s for s in h.status().job_id.split(",") if s]) == 4,
+            timeout=10)
+        # far sooner than the backed-off deadline (>= 2*base = 1s away on
+        # average, up to 4s); generous bound for slow CI
+        assert time.time() - t0 < 2.5
+
+
+# ---------------------------------------------------------------------------
+# capability gating: dialects without WATCH/BATCH_STATUS never see the verbs
+# ---------------------------------------------------------------------------
+
+
+class _SpyQuantumAdapter(QuantumAdapter):
+    forbidden_calls = []
+
+    def status_batch(self, job_ids):
+        type(self).forbidden_calls.append(("status_batch", job_ids))
+        raise AssertionError("status_batch called without BATCH_STATUS")
+
+    def watch_events(self, since=-1, ids=None, wait=0.0):
+        type(self).forbidden_calls.append(("watch_events", since))
+        raise AssertionError("watch_events called without WATCH")
+
+
+class _SpyRayAdapter(RayAdapter):
+    forbidden_calls = []
+
+    def status_batch(self, job_ids):
+        type(self).forbidden_calls.append(("status_batch", job_ids))
+        raise AssertionError("status_batch called without BATCH_STATUS")
+
+    def watch_events(self, since=-1, ids=None, wait=0.0):
+        type(self).forbidden_calls.append(("watch_events", since))
+        raise AssertionError("watch_events called without WATCH")
+
+
+@pytest.mark.parametrize("kind,spy", [("quantum", _SpyQuantumAdapter),
+                                      ("ray", _SpyRayAdapter)])
+@pytest.mark.parametrize("cadence", ["fixed", "watch"])
+def test_unwatchable_dialects_never_see_batch_or_watch_verbs(kind, spy,
+                                                             cadence):
+    """Regression: quantum/ray declare neither BATCH_STATUS nor WATCH, so an
+    array CR on them must converge through per-id status polls alone — even
+    when the operator runs in watch mode (transparent fallback)."""
+    assert Capability.WATCH not in spy.capabilities
+    assert Capability.BATCH_STATUS not in spy.capabilities
+    spy.forbidden_calls = []
+    with BridgeEnvironment(default_duration=0.05,
+                           operator_kwargs={"cadence": cadence}) as env:
+        env.operator.adapters[spy.image] = spy
+        h = env.bridge.submit("nb", env.make_spec(
+            kind, script="s", updateinterval=0.03, array=ArraySpec(count=3)))
+        assert h.wait(timeout=30).status.state == DONE
+        assert h.job().status.index_states == {str(i): DONE for i in range(3)}
+        assert spy.forbidden_calls == []
+        if cadence == "watch":
+            assert _proto_of(env, h).watch_skips == 0

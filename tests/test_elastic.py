@@ -34,6 +34,13 @@ from repro.core.backends.lsf import LSFAdapter
 from repro.core.backends.slurm import SlurmAdapter
 
 MODES = ["multiplexed", "pod-per-cr"]
+# (mode, cadence) matrix: both runtimes under the default fixed cadence,
+# plus the event-driven cadences on the multiplexed runtime.  Every
+# assertion below is cadence-agnostic — the lifecycle invariants must hold
+# regardless of how tick deadlines are scheduled or whether a status poll
+# was watch-elided.
+OPERATORS = [(m, "fixed") for m in MODES] + [
+    ("multiplexed", "adaptive"), ("multiplexed", "watch")]
 
 
 class FanoutLSFAdapter(LSFAdapter):
@@ -99,8 +106,8 @@ def _assert_remote_matches_desired(jobs, desired):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("mode", MODES)
-def test_scale_32_up_48_down_8_exact_delta_with_midpatch_kill(mode):
+@pytest.mark.parametrize("mode,cadence", OPERATORS)
+def test_scale_32_up_48_down_8_exact_delta_with_midpatch_kill(mode, cadence):
     """Scaling a running 32-index array to 48 then 8 submits exactly 16 new
     jobs and cancels exactly 40 — zero resubmissions of live indices — and a
     controller pod killed mid-patch resumes the half-applied patch."""
@@ -108,7 +115,8 @@ def test_scale_32_up_48_down_8_exact_delta_with_midpatch_kill(mode):
     # lands while the 16-index delta fan-out is in flight
     fp = {"slurm": FaultProfile(latency=0.004, seed=42)}
     with BridgeEnvironment(default_duration=120, slots=4, fault_profiles=fp,
-                           operator_kwargs={"mode": mode}) as env:
+                           operator_kwargs={"mode": mode,
+                                            "cadence": cadence}) as env:
         h = env.bridge.submit("elastic", env.make_spec(
             "slurm", script="member", updateinterval=0.02,
             jobproperties={"WallSeconds": "120"}, array=ArraySpec(count=32)))
@@ -147,15 +155,22 @@ def test_scale_32_up_48_down_8_exact_delta_with_midpatch_kill(mode):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("mode,kind,seed", [
-    ("multiplexed", "slurm", 101),   # native arrays + batched status
-    ("multiplexed", "lsf", 202),     # facade fan-out (NATIVE_ARRAYS withheld)
-    ("pod-per-cr", "slurm", 303),
-    ("pod-per-cr", "lsf", 404),
-    ("multiplexed", "sliced", 505),  # sharded placement: slurm + lsf slices
-    ("pod-per-cr", "sliced", 606),
+@pytest.mark.parametrize("mode,kind,seed,cadence", [
+    ("multiplexed", "slurm", 101, "fixed"),  # native arrays, batched status
+    ("multiplexed", "lsf", 202, "fixed"),    # fan-out (NATIVE_ARRAYS gone)
+    ("pod-per-cr", "slurm", 303, "fixed"),
+    ("pod-per-cr", "lsf", 404, "fixed"),
+    ("multiplexed", "sliced", 505, "fixed"),  # sharded: slurm + lsf slices
+    ("pod-per-cr", "sliced", 606, "fixed"),
+    # event-driven cadences under the same chaos: back-off must never delay
+    # a patch (poke resets the deadline) and watch-elided ticks must never
+    # hide a transition from the invariant checks
+    ("multiplexed", "slurm", 707, "adaptive"),
+    ("multiplexed", "sliced", 808, "adaptive"),
+    ("multiplexed", "slurm", 909, "watch"),
+    ("multiplexed", "sliced", 1010, "watch"),
 ])
-def test_chaos_lifecycle(mode, kind, seed):
+def test_chaos_lifecycle(mode, kind, seed, cadence):
     """Seeded random op interleavings (deterministic op sequence + seeded
     fault injection) must preserve both lifecycle invariants — including on
     a SLICED array, where a kill can land mid-rebalance and the final live
@@ -165,7 +180,8 @@ def test_chaos_lifecycle(mode, kind, seed):
     fp = {k: FaultProfile(drop_rate=0.02, seed=seed + i)
           for i, k in enumerate(kinds)}
     with BridgeEnvironment(default_duration=300, slots=6, fault_profiles=fp,
-                           operator_kwargs={"mode": mode}) as env:
+                           operator_kwargs={"mode": mode,
+                                            "cadence": cadence}) as env:
         placement = None
         if kind == "lsf":
             env.operator.adapters[FanoutLSFAdapter.image] = FanoutLSFAdapter

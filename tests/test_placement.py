@@ -30,6 +30,12 @@ from repro.core import (ArraySpec, BridgeEnvironment, DONE, FaultProfile,
 from repro.core.backends import base as B
 
 MODES = ["multiplexed", "pod-per-cr"]
+# (mode, cadence) matrix: both runtimes under the default fixed cadence,
+# plus the event-driven cadences on the multiplexed runtime.  Sliced CRs
+# exercise per-slice watch watermarks and per-chain cadence state; none of
+# the assertions below depend on tick timing.
+OPERATORS = [(m, "fixed") for m in MODES] + [
+    ("multiplexed", "adaptive"), ("multiplexed", "watch")]
 
 
 def _wait(predicate, timeout=30, interval=0.005):
@@ -70,14 +76,15 @@ def _index_of(cluster_job):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("mode", MODES)
-def test_spread_64_across_two_resources_runs_to_done(mode):
+@pytest.mark.parametrize("mode,cadence", OPERATORS)
+def test_spread_64_across_two_resources_runs_to_done(mode, cadence):
     """A 64-index array spread over two UNEVEN resources (8 vs 4 slots)
     splits load-proportionally (43/21), submits each slice natively in one
     call, runs to DONE in both operator modes, and reports per-slice status
     through placements()."""
     with BridgeEnvironment(default_duration=0.1, slots=8,
-                           operator_kwargs={"mode": mode}) as env:
+                           operator_kwargs={"mode": mode,
+                                            "cadence": cadence}) as env:
         env.clusters["lsf"].slots = 4  # uneven capacity: free 8 vs free 4
         h = env.bridge.submit("shard", env.make_spec(
             "slurm", script="member", updateinterval=0.02,
@@ -117,14 +124,16 @@ def test_spread_64_across_two_resources_runs_to_done(mode):
         assert len([t for t in cm["slice_1_id"].split(",") if t]) == 21
 
 
-@pytest.mark.parametrize("mode", MODES)
-def test_scale_up_routes_delta_to_least_loaded_slice_with_midkill(mode):
+@pytest.mark.parametrize("mode,cadence", OPERATORS)
+def test_scale_up_routes_delta_to_least_loaded_slice_with_midkill(
+        mode, cadence):
     """Acceptance: JobHandle.scale() on a sliced job converges
     (wait_reconciled) with the delta routed to the least-loaded slice, and
     a pod killed mid-rebalance resumes without double-submitting."""
     fp = {"lsf": FaultProfile(latency=0.004)}  # widen the mid-fanout window
     with BridgeEnvironment(default_duration=600, slots=8, fault_profiles=fp,
-                           operator_kwargs={"mode": mode}) as env:
+                           operator_kwargs={"mode": mode,
+                                            "cadence": cadence}) as env:
         env.clusters["lsf"].slots = 4
         h = env.bridge.submit("rebal", env.make_spec(
             "slurm", script="member", updateinterval=0.02,
@@ -172,13 +181,14 @@ def test_scale_up_routes_delta_to_least_loaded_slice_with_midkill(mode):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("mode", MODES)
-def test_pod_restart_resumes_all_slices_without_resubmission(mode):
+@pytest.mark.parametrize("mode,cadence", OPERATORS)
+def test_pod_restart_resumes_all_slices_without_resubmission(mode, cadence):
     """The slice plan is assigned once, at config-map creation: a pod killed
     after submission resumes EVERY slice from its slice_{k}_id keys — zero
     new remote jobs across both resources."""
     with BridgeEnvironment(default_duration=600, slots=8,
-                           operator_kwargs={"mode": mode}) as env:
+                           operator_kwargs={"mode": mode,
+                                            "cadence": cadence}) as env:
         h = env.bridge.submit("resume", env.make_spec(
             "slurm", script="member", updateinterval=0.02,
             jobproperties={"WallSeconds": "600"},
@@ -289,14 +299,15 @@ def test_slow_slice_does_not_stall_healthy_slice_polling():
             f"the slow slice is stalling it")
 
 
-@pytest.mark.parametrize("mode", MODES)
-def test_unreachable_slice_surfaces_unknown_not_masked(mode):
+@pytest.mark.parametrize("mode,cadence", OPERATORS)
+def test_unreachable_slice_surfaces_unknown_not_masked(mode, cadence):
     """One slice's resource going dark marks the CR UNKNOWN (naming the
     slice) even while the healthy slice keeps answering — the aggregate
     from fresh+stale data must not mask the blackout — and the CR recovers
     once the resource answers again."""
     with BridgeEnvironment(default_duration=600, slots=8,
-                           operator_kwargs={"mode": mode}) as env:
+                           operator_kwargs={"mode": mode,
+                                            "cadence": cadence}) as env:
         h = env.bridge.submit("dark", env.make_spec(
             "slurm", script="member", updateinterval=0.02,
             jobproperties={"WallSeconds": "600"},
