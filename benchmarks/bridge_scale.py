@@ -171,6 +171,133 @@ def run_sliced_case(mode: str, count: int, *, slurm_slots: int = 8,
     }
 
 
+def run_service_case(mode: str, *, replicas: int = 4, threads: int = 4,
+                     warm_s: float = 1.0, post_s: float = 1.0,
+                     interval: float = 0.02) -> dict:
+    """BridgeService serving scenario: ``replicas`` echo replicas spread
+    over TWO resource managers, a thread pool driving the request router,
+    one replica killed mid-traffic.  Measures request throughput, p50/p99
+    latency, and time-to-recover (kill -> replacement ready), and asserts
+    the serving contract right here: zero lost requests, zero requests
+    routed to the dead replica after its endpoint is dropped."""
+    from repro.core import (HealthProbeSpec, IMAGES, PlacementCandidate,
+                            PlacementSpec, URLS)
+
+    env = BridgeEnvironment(slots=max(replicas * 2, 8),
+                            operator_kwargs={"mode": mode})
+    try:
+        env.start()
+        health = HealthProbeSpec(failure_threshold=3,
+                                 startup_failure_threshold=50)
+        placement = PlacementSpec(candidates=[
+            PlacementCandidate(URLS[k], IMAGES[k], f"{k}-secret")
+            for k in ("slurm", "lsf")], strategy="spread")
+        h = env.bridge.submit_service("svc-bench", env.make_service_spec(
+            "slurm", replicas=replicas, script="serve",
+            updateinterval=interval, health=health, placement=placement))
+        h.wait_ready(timeout=60)
+        split = {}
+        for e in h.endpoints():
+            kind = "slurm" if e["resourceURL"] == URLS["slurm"] else "lsf"
+            split[kind] = split.get(kind, 0) + 1
+        if len(split) < 2:
+            raise RuntimeError(f"replicas not spread over 2 managers: {split}")
+
+        router = h.router(request_timeout=30)
+        stop = threading.Event()
+        lock = threading.Lock()
+        lat: list = []
+        failures: list = []
+
+        def traffic(tid: int) -> None:
+            i = 0
+            while not stop.is_set():
+                t0 = time.time()
+                try:
+                    out = router.request({"t": tid, "i": i})
+                    if out["echo"] != {"t": tid, "i": i}:
+                        with lock:
+                            failures.append(("bad-echo", out))
+                    else:
+                        with lock:
+                            lat.append(time.time() - t0)
+                except Exception as exc:
+                    with lock:
+                        failures.append(("error", repr(exc)))
+                i += 1
+
+        t_start = time.time()
+        ths = [threading.Thread(target=traffic, args=(t,))
+               for t in range(threads)]
+        for t in ths:
+            t.start()
+        time.sleep(warm_s)
+
+        victim = h.endpoints()[0]
+        vkind = "slurm" if victim["resourceURL"] == URLS["slurm"] else "lsf"
+        vjob = env.clusters[vkind].jobs[victim["job_id"]]
+        t_kill = time.time()
+        env.clusters[vkind].cancel_if_live(victim["job_id"])
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            if (victim["job_id"] not in
+                    [e["job_id"] for e in h.endpoints()]
+                    and h.ready_replicas() == replicas):
+                break
+            time.sleep(0.005)
+        recovery = time.time() - t_kill
+        if h.ready_replicas() != replicas:
+            raise RuntimeError(
+                f"service never recovered: ready={h.ready_replicas()}")
+        # drain window, then snapshot: anything the router sends the dead
+        # replica from here on is a routing-to-condemned bug
+        time.sleep(0.05)
+        attempted_at_drop = router.stats().get(
+            victim["job_id"], {}).get("requests", 0)
+        delivered_at_drop = vjob.invocations
+
+        time.sleep(post_s)
+        stop.set()
+        for t in ths:
+            t.join(timeout=60)
+        elapsed = time.time() - t_start
+
+        routed_dead = (router.stats().get(victim["job_id"], {})
+                       .get("requests", 0) - attempted_at_drop)
+        delivered_dead = vjob.invocations - delivered_at_drop
+        if failures:
+            raise RuntimeError(
+                f"lost/failed requests under replica kill: {failures[:3]}")
+        if routed_dead or delivered_dead:
+            raise RuntimeError(
+                f"requests routed to the dead replica after its drop: "
+                f"attempted={routed_dead} delivered={delivered_dead}")
+        # a DEAD replica (terminal remote job) is detected by the very next
+        # status poll — budget it like the probe path plus generous slack
+        budget = health.failure_threshold * interval + 5.0
+        if recovery > budget:
+            raise RuntimeError(
+                f"recovery took {recovery:.2f}s (budget {budget:.2f}s)")
+
+        lat.sort()
+        return {
+            "label": f"{mode}/service-{replicas}rep",
+            "mode": mode, "replicas": replicas, "threads": threads,
+            "replica_split": split,
+            "requests_total": len(lat),
+            "errors": len(failures),
+            "throughput_rps": round(len(lat) / elapsed, 1),
+            "latency_p50_ms": round(lat[len(lat) // 2] * 1e3, 3) if lat else None,
+            "latency_p99_ms": round(
+                lat[min(int(len(lat) * 0.99), len(lat) - 1)] * 1e3, 3)
+                if lat else None,
+            "recovery_s": round(recovery, 3),
+            "requests_to_dead_after_drop": routed_dead + delivered_dead,
+        }
+    finally:
+        env.stop()
+
+
 def _coarse_payload(job, cluster) -> int:
     """Event-wait job body for the large-fleet scenario: identical
     semantics to sleep_payload's run-for-WallSeconds, but waiting on the
@@ -357,6 +484,7 @@ def main() -> int:
         resize = (8, 16, 2)
         sliced = dict(count=16, slurm_slots=4, lsf_slots=2, duration=0.2)
         event = dict(crs=32, interval=0.2, dur_lo=1.5, dur_hi=2.5)
+        service = dict(replicas=4, threads=4, warm_s=0.5, post_s=0.5)
     else:
         counts, cr_counts = [1, 64, 256], [1, 16, 64]
         # jobs long enough that the run is dominated by steady-state RUNNING
@@ -368,6 +496,7 @@ def main() -> int:
         # steady state the event-driven control plane optimises) plus a
         # staggered drain (constant churn, the conservative re-poll path)
         event = dict(crs=1000, interval=0.5, dur_lo=6.0, dur_hi=8.0)
+        service = dict(replicas=6, threads=8, warm_s=2.0, post_s=2.0)
 
     baseline_count = counts[-1]
 
@@ -377,7 +506,7 @@ def main() -> int:
                           "event": event},
                "array_scaling": [], "baselines": [], "cr_scaling": [],
                "cr_scaling_event": [], "single_job": [], "resize": [],
-               "sliced_placement": []}
+               "sliced_placement": [], "service_scale": []}
 
     print("== array scaling (one CR, N indices) ==")
     for mode in MODES:
@@ -474,6 +603,15 @@ def main() -> int:
               f"pinned={r['wall_time_s_single_resource']:>6.2f}s "
               f"({r['speedup_x']}x)")
 
+    print("== service scale (replicated serving, replica kill mid-traffic) ==")
+    for mode in MODES:
+        r = run_service_case(mode, interval=interval, **service)
+        results["service_scale"].append(r)
+        print(f"  {r['label']:<24} rps={r['throughput_rps']:>7.1f} "
+              f"p99={r['latency_p99_ms']:>7.3f}ms "
+              f"recover={r['recovery_s']:>6.3f}s "
+              f"dead-routed={r['requests_to_dead_after_drop']}")
+
     print("== single-job wall time (latency regression guard) ==")
     for mode in MODES:
         walls = [run_case(mode, count=1, duration=0.1)["wall_time_s"]
@@ -523,6 +661,13 @@ def main() -> int:
                 "staleness_p99_s": r["status_staleness_p99_s"],
                 "monitor_threads_peak": r["monitor_threads_peak"]}
             for r in results["cr_scaling_event"]},
+        "service_scale": {
+            r["mode"]: {"throughput_rps": r["throughput_rps"],
+                        "latency_p99_ms": r["latency_p99_ms"],
+                        "recovery_s": r["recovery_s"],
+                        "requests_to_dead_after_drop":
+                            r["requests_to_dead_after_drop"]}
+            for r in results["service_scale"]},
     }
 
     out = os.path.abspath(args.out)
@@ -537,6 +682,12 @@ def main() -> int:
           f"flushes {h['cm_flushes_always_write']} -> "
           f"{h['cm_flushes_coalesced']} ({h['cm_flush_reduction_x']}x), "
           f"mux threads {h['multiplexed_threads_by_cr_count']}")
+    sv = h["service_scale"]
+    print("service scale: "
+          + ", ".join(f"{m}: {v['throughput_rps']} rps "
+                      f"p99={v['latency_p99_ms']}ms "
+                      f"recover={v['recovery_s']}s"
+                      for m, v in sv.items()))
     ev = h["event_driven"]
     print(f"event-driven @ {event['crs']} CRs: requests "
           + " vs ".join(f"{c}={ev[c]['rest_requests']}"

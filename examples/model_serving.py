@@ -1,0 +1,135 @@
+"""Model serving over the bridge: a BridgeService hosts REAL ServingEngine
+replicas on two jaxlocal resource managers, and the request router
+load-balances generate calls across them — then one replica is killed
+mid-traffic and the service heals without losing a single accepted request.
+
+What this demonstrates end-to-end:
+
+  * ``spec.placement`` (spread) lands the 2 replicas on 2 different
+    simulated resource managers;
+  * each replica is a long-lived serve-mode remote job hosting a
+    continuous-batching ``ServingEngine`` behind ``POST .../invoke``;
+  * ``ServiceHandle.router()`` picks the least-loaded READY replica per
+    request and retries replica faults on the surviving replica;
+  * a killed replica is condemned and resubmitted under the same
+    at-most-once bookkeeping job arrays use, and readyReplicas converges
+    back to spec.
+
+  PYTHONPATH=src python examples/model_serving.py
+"""
+import json
+import threading
+import time
+
+from repro.core import (BridgeEnvironment, HealthProbeSpec, IMAGES,
+                        PlacementCandidate, PlacementSpec, TOKENS, URLS)
+from repro.core.backends import jaxlocal as JX
+
+MAX_NEW = 4
+
+
+def main() -> None:
+    with BridgeEnvironment(slots=8) as env:
+        # a SECOND jaxlocal resource manager: same dialect and token, its
+        # own URL and job-id range — the service spreads replicas over both
+        url2 = "https://jax.pod1.example.com"
+        cluster2 = JX.make_jaxlocal_cluster(env.s3, name="jaxlocal2",
+                                            slots=8, start_numbering=8000)
+        env.clusters["jaxlocal2"] = cluster2  # env.stop() shuts it down too
+        srv2 = JX.make_server(cluster2, token=TOKENS["jaxlocal"])
+        env.servers["jaxlocal2"] = srv2
+        env.directory.register(url2, srv2)
+
+        script = json.dumps({"mode": "serve", "arch": "gemma-2b",
+                             "max_batch": 4, "max_len": 48,
+                             "prefill_len": 8, "seed": 0})
+        spec = env.make_service_spec(
+            "jaxlocal", replicas=2, script=script, updateinterval=0.05,
+            # generous startup budget: a replica spends ticks loading weights
+            health=HealthProbeSpec(failure_threshold=5,
+                                   startup_failure_threshold=2000),
+            placement=PlacementSpec(candidates=[
+                PlacementCandidate(URLS["jaxlocal"], IMAGES["jaxlocal"],
+                                   "jaxlocal-secret"),
+                PlacementCandidate(url2, IMAGES["jaxlocal"],
+                                   "jaxlocal-secret"),
+            ], strategy="spread"))
+
+        handle = env.bridge.submit_service("llm", spec)
+        t0 = time.time()
+        handle.wait_ready(timeout=120)
+        print(f"2 replicas ready in {time.time() - t0:.1f}s:")
+        for e in handle.endpoints():
+            print(f"  replica {e['replica']}: job {e['job_id']} on "
+                  f"{e['resourceURL']}")
+        urls = {e["resourceURL"] for e in handle.endpoints()}
+        assert len(urls) == 2, "replicas must land on BOTH managers"
+
+        router = handle.router(request_timeout=90)
+        stop = threading.Event()
+        completed, failures = [], []
+
+        def traffic(tid):
+            i = 0
+            while not stop.is_set():
+                try:
+                    out = router.request({"prompt": [1 + tid, 2, 3, i % 50],
+                                          "max_new_tokens": MAX_NEW})
+                    if len(out["tokens"]) != MAX_NEW:
+                        failures.append((tid, i, out))
+                    completed.append(out["served_by"])
+                except Exception as exc:
+                    failures.append((tid, i, repr(exc)))
+                i += 1
+
+        threads = [threading.Thread(target=traffic, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        time.sleep(2.0)  # traffic flowing across both replicas
+
+        victim = handle.endpoints()[0]
+        vcluster = (env.clusters["jaxlocal"]
+                    if victim["resourceURL"] == URLS["jaxlocal"]
+                    else cluster2)
+        print(f"killing replica {victim['replica']} "
+              f"(job {victim['job_id']}) mid-traffic...")
+        t_kill = time.time()
+        vcluster.cancel_if_live(victim["job_id"])
+
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            ids = [e["job_id"] for e in handle.endpoints()]
+            if (victim["job_id"] not in ids
+                    and handle.ready_replicas() == 2):
+                break
+            time.sleep(0.05)
+        recovery = time.time() - t_kill
+        assert handle.ready_replicas() == 2, "service never recovered"
+        print(f"replaced within {recovery:.1f}s; readyReplicas back to 2")
+
+        time.sleep(1.0)  # traffic over the healed set
+        stop.set()
+        for t in threads:
+            t.join(timeout=120)
+
+        assert not failures, f"lost/failed requests: {failures[:3]}"
+        by_replica = {}
+        for jid in completed:
+            by_replica[jid] = by_replica.get(jid, 0) + 1
+        print(f"{len(completed)} requests served, zero lost: {by_replica}")
+        assert len(by_replica) >= 2, "router never balanced across replicas"
+
+        stats = router.stats()
+        for jid, s in sorted(stats.items()):
+            p99 = f"{s['p99_s']:.3f}s" if s["p99_s"] is not None else "n/a"
+            print(f"  job {jid}: {s['requests']} reqs, {s['errors']} errors, "
+                  f"p99={p99}")
+
+        handle.cancel()
+        svc = handle.wait(timeout=60)
+        print(f"final: {svc.status.state}")
+
+
+if __name__ == "__main__":
+    main()

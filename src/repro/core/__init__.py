@@ -14,15 +14,22 @@ Public surface:
   BridgeOperator                    — the reconciler (operator.py)
   LoadAwareScheduler                — paper §7 future work (scheduler.py)
   BridgeEnvironment                 — cluster-in-a-box wiring (cluster.py)
+  BridgeService / BridgeServiceSpec — replicated serving CRD (resource.py)
+  ServiceProtocol                   — health-checked reconcile (service.py)
+  ServiceHandle / ServiceEndpoint   — serving client + router (router.py)
 """
 from repro.core.resource import (API_V1ALPHA1, API_V1BETA1, API_VERSIONS,
                                  ArraySpec, BridgeJob, BridgeJobSpec,
-                                 BridgeJobStatus, ConversionError, JobData,
+                                 BridgeJobStatus, BridgeService,
+                                 BridgeServiceSpec, BridgeServiceStatus,
+                                 ConversionError, HealthProbeSpec, JobData,
                                  PlacementCandidate, PlacementSpec,
-                                 RetryPolicy, S3Storage, ValidationError,
+                                 RetryPolicy, S3Storage, SERVICE_KIND,
+                                 ValidationError,
                                  PENDING, SUBMITTED, RUNNING, DONE, FAILED,
                                  KILLED, UNKNOWN, TERMINAL_STATES,
-                                 convert, load_bridgejob)
+                                 convert, load_bridgejob, service_spec_from_dict,
+                                 service_spec_to_dict)
 from repro.core.registry import ResourceRegistry
 from repro.core.statestore import ConfigMap, StateStore
 from repro.core.objectstore import NoSuchKey, ObjectStore
@@ -39,4 +46,7 @@ from repro.core.monitor import (AdaptiveCadence, Cadence, FixedCadence,
 from repro.core.operator import BridgeOperator, default_adapters
 from repro.core.scheduler import (Candidate, LoadAwareScheduler, LoadProbe,
                                   plan_placement, plan_slices)
+from repro.core.service import ServiceProtocol
+from repro.core.router import (NoReadyReplicas, ServiceEndpoint,
+                               ServiceHandle)
 from repro.core.cluster import IMAGES, TOKENS, URLS, BridgeEnvironment

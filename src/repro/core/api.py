@@ -138,6 +138,31 @@ class Bridge:
     def handle(self, name: str, namespace: str = "default") -> JobHandle:
         return JobHandle(self, name, namespace)
 
+    # -- BridgeService (long-running serving workloads) --------------------
+
+    def submit_service(self, name: str, spec,
+                       namespace: str = "default"):
+        """Create a BridgeService CR.  ``spec`` may be a
+        ``BridgeServiceSpec`` or a v1beta1 spec dict; returns a
+        ``ServiceHandle`` (scale / wait_ready / router)."""
+        from repro.core.resource import (BridgeService, BridgeServiceSpec,
+                                         service_spec_from_dict)
+        from repro.core.router import ServiceHandle
+        if isinstance(spec, dict):
+            spec = service_spec_from_dict(spec)
+        if not isinstance(spec, BridgeServiceSpec):
+            raise ValidationError(
+                f"submit_service wants a BridgeServiceSpec, got "
+                f"{type(spec).__name__}")
+        self.registry.create(BridgeService(name=name, spec=spec,
+                                           namespace=namespace))
+        return ServiceHandle(self, name, namespace)
+
+    def service(self, name: str, namespace: str = "default"):
+        """A ``ServiceHandle`` over an existing BridgeService CR."""
+        from repro.core.router import ServiceHandle
+        return ServiceHandle(self, name, namespace)
+
     def wait(self, name: str, namespace: str = "default",
              timeout: float = 30.0) -> BridgeJob:
         """Block until the job reaches a terminal state."""

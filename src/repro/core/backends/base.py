@@ -43,6 +43,13 @@ class ClusterJob:
     events_stamp: int = 0
     # files produced by the job, downloadable via the manager's API
     outputs: Dict[str, bytes] = field(default_factory=dict)
+    # serve-mode jobs (long-lived replicas): the payload installs a request
+    # handler once it can take traffic — health answers 200 iff the job is
+    # RUNNING with a handler installed and not flagged unhealthy
+    handler: Optional[Callable[[Any], Any]] = field(default=None, repr=False)
+    unhealthy: threading.Event = field(default_factory=threading.Event,
+                                       repr=False)
+    invocations: int = 0
     _cancel: threading.Event = field(default_factory=threading.Event, repr=False)
 
     def snapshot(self) -> Dict[str, Any]:
@@ -58,8 +65,41 @@ class ClusterJob:
 Payload = Callable[[ClusterJob, "SimulatedCluster"], int]
 
 
+def serve_loop(job: ClusterJob, cluster: "SimulatedCluster") -> int:
+    """Long-lived serve-mode replica: install an echo handler and run until
+    cancelled.  Serve jobs NEVER auto-complete — walltime expiry must not be
+    mistaken for success on a replica whose whole point is staying up.
+
+    Chaos knobs (properties): ``CrashAfter`` fails the replica after N
+    seconds (handler removed first, so health goes 503 before FAILED);
+    ``ServeLatency`` adds per-request artificial service time.
+    """
+    latency = float(job.properties.get("ServeLatency", "0") or 0)
+
+    def handler(body: Any) -> Any:
+        if latency:
+            time.sleep(latency)
+        return {"echo": body, "served_by": job.id}
+
+    crash_after = float(job.properties.get("CrashAfter", "0") or 0)
+    deadline = time.time() + crash_after if crash_after > 0 else None
+    job.handler = handler
+    try:
+        while not job._cancel.is_set():
+            if deadline is not None and time.time() >= deadline:
+                job.handler = None
+                job.reason = "replica crashed (CrashAfter)"
+                return 1
+            time.sleep(0.005)
+        return -1
+    finally:
+        job.handler = None
+
+
 def sleep_payload(job: ClusterJob, cluster: "SimulatedCluster") -> int:
     """Default black-box job: run for WallSeconds, optionally fail, write outputs."""
+    if job.properties.get("Serve", "") == "true":
+        return serve_loop(job, cluster)
     dur = float(job.properties.get("WallSeconds", cluster.default_duration))
     deadline = time.time() + dur
     while time.time() < deadline:
@@ -105,6 +145,7 @@ class Capability(enum.Enum):
     NATIVE_ARRAYS = "native_arrays"  # one submission fans out N indices
     BATCH_STATUS = "batch_status"    # one request polls many ids (squeue -j)
     WATCH = "watch"                  # events-version long-poll (skip idle polls)
+    SERVE = "serve"                  # health-probe + invoke long-lived jobs
 
 
 class ResourceAdapter:
@@ -202,6 +243,21 @@ class ResourceAdapter:
         raise NotImplementedError(
             f"{type(self).__name__} does not declare WATCH")
 
+    def probe_health(self, job_id: str) -> bool:
+        """True iff the serve-mode job answers its health route 200
+        (requires Capability.SERVE).  A 4xx/5xx answer is False; transport
+        failures raise, so callers can tell replica-dead from
+        manager-unreachable."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not declare SERVE")
+
+    def invoke(self, job_id: str, payload: Any) -> Any:
+        """POST one request to a serve-mode job and return its response body
+        (requires Capability.SERVE).  Raises ``InvokeError`` on a non-2xx
+        answer and ``TransportError`` when the manager is unreachable."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not declare SERVE")
+
     def events_version_cached(self, max_age: float) -> int:
         """Global events version, amortized across every CR on the endpoint
         via the shared channel's memo cache: at most one probe request per
@@ -242,6 +298,19 @@ def resolve_adapter(adapters: Mapping[str, Type[ResourceAdapter]],
 
 class SubmitError(RuntimeError):
     """Submission rejected by the resource manager (4xx/5xx, quota, ...)."""
+
+
+class InvokeError(RuntimeError):
+    """A serve-mode request reached the manager but was refused or failed
+    (replica unready, handler crash, job gone).  Distinct from
+    ``TransportError`` — the HTTP round-trip itself succeeded.  Carries the
+    HTTP status so routers can tell "unready, retry elsewhere" (503) from
+    "handler bug" (500)."""
+
+    def __init__(self, status: int, detail: str = ""):
+        super().__init__(f"invoke failed ({status}): {detail}")
+        self.status = status
+        self.detail = detail
 
 
 class SimulatedCluster:
@@ -345,6 +414,36 @@ class SimulatedCluster:
                 return "cancelled"
         job._cancel.set()
         return "cancelled"
+
+    # -- serve-mode surface (health + invoke, shared by the REST dialects) --
+
+    def serve_health(self, job_id: str) -> "tuple[int, Dict[str, Any]]":
+        """(http_status, body) for a replica health probe: 200 iff the job is
+        RUNNING with its handler installed and not flagged unhealthy."""
+        job = self.get(job_id)
+        if job is None:
+            return 404, {"error": f"job {job_id} not found"}
+        if (job.state != RUNNING or job.handler is None
+                or job.unhealthy.is_set()):
+            return 503, {"status": "unready", "state": job.state}
+        return 200, {"status": "ok", "state": job.state}
+
+    def serve_invoke(self, job_id: str, body: Any) -> "tuple[int, Any]":
+        """(http_status, response_body) for one request to a replica.  The
+        handler runs OUTSIDE the cluster lock — requests are the data plane
+        and must not serialize against the scheduler."""
+        job = self.get(job_id)
+        if job is None:
+            return 404, {"error": f"job {job_id} not found"}
+        handler = job.handler
+        if job.state != RUNNING or handler is None or job.unhealthy.is_set():
+            return 503, {"error": "replica unready", "state": job.state}
+        with self._lock:
+            job.invocations += 1
+        try:
+            return 200, handler(body)
+        except Exception as e:
+            return 500, {"error": f"{type(e).__name__}: {e}"}
 
     def queue_load(self) -> Dict[str, int]:
         with self._lock:

@@ -125,9 +125,78 @@ def train_job(spec: Dict[str, Any], store: ObjectStore,
             "start_step": start_step}
 
 
+def serve_job(spec: Dict[str, Any], job: B.ClusterJob,
+              cluster: B.SimulatedCluster) -> int:
+    """Serve-mode replica: host a real ``ServingEngine`` behind the cluster's
+    ``POST /.../invoke`` route until cancelled.
+
+    The payload thread is the engine pump (continuous batching over the
+    shared KV cache); REST worker threads call ``job.handler`` which enqueues
+    a request and parks on a condition variable until the pump moves it to
+    ``finished``.  A replica killed mid-request raises out of the handler
+    (HTTP 500), which the service router treats as a replica fault and
+    retries elsewhere — accepted requests are never silently dropped.
+    Serve jobs NEVER auto-complete: only a cancel ends them.
+    """
+    from repro.configs.base import get_smoke_config
+    from repro.serving.engine import ServingEngine
+    from repro.steps import init_model
+
+    arch = spec.get("arch", "gemma-2b")
+    max_len = int(spec.get("max_len", 64))
+    prefill_len = int(spec.get("prefill_len", 16))
+    cfg = get_smoke_config(arch, **dict(spec.get("config_overrides", {})))
+    _, params = init_model(cfg, seed=int(spec.get("seed", 0)),
+                           max_seq=max_len)
+    eng = ServingEngine(cfg, params,
+                        max_batch=int(spec.get("max_batch", 4)),
+                        max_len=max_len, prefill_len=prefill_len)
+    cond = threading.Condition()
+    results: Dict[int, Any] = {}
+
+    def handler(body: Any) -> Dict[str, Any]:
+        body = body or {}
+        prompt = [int(t) for t in body.get("prompt", [])]
+        with cond:
+            if job._cancel.is_set():
+                raise RuntimeError("replica shutting down")
+            rid = eng.submit(prompt,
+                             max_new_tokens=int(body.get("max_new_tokens", 8)),
+                             eos_id=body.get("eos_id"))
+            cond.notify_all()
+            while rid not in results:
+                if job._cancel.is_set():
+                    raise RuntimeError("replica cancelled mid-request")
+                cond.wait(timeout=0.05)
+            req = results.pop(rid)
+        return {"tokens": req.generated, "served_by": job.id, "arch": arch}
+
+    job.handler = handler
+    try:
+        while not job._cancel.is_set():
+            with cond:
+                busy = (bool(eng.pending)
+                        or any(s is not None for s in eng.slots))
+                if not busy:
+                    cond.wait(timeout=0.02)
+                    continue
+                eng.step()
+                if eng.finished:
+                    results.update(eng.finished)
+                    eng.finished.clear()
+                    cond.notify_all()
+        return -1
+    finally:
+        job.handler = None
+        with cond:
+            cond.notify_all()  # release parked handlers to see the cancel
+
+
 def jax_train_payload(store: ObjectStore) -> B.Payload:
     def run(job: B.ClusterJob, cluster: B.SimulatedCluster) -> int:
         spec = json.loads(job.script)
+        if spec.get("mode") == "serve":
+            return serve_job(spec, job, cluster)
         result = train_job(spec, store, cancel=job._cancel)
         job.outputs[job.properties.get("OutputFileName", "train.out")] = (
             json.dumps({k: v for k, v in result.items() if k != "history"})
@@ -145,10 +214,13 @@ def jax_train_payload(store: ObjectStore) -> B.Payload:
 
 
 def make_jaxlocal_cluster(store: ObjectStore, name: str = "jaxlocal",
-                          slots: int = 2) -> B.SimulatedCluster:
+                          slots: int = 2,
+                          start_numbering: int = 7000) -> B.SimulatedCluster:
+    # start_numbering is per-cluster so a second jaxlocal resource (serving
+    # across managers) hands out non-overlapping job ids
     return B.SimulatedCluster(name=name, slots=slots,
                               payload=jax_train_payload(store),
-                              start_numbering=7000)
+                              start_numbering=start_numbering)
 
 
 def make_server(cluster: B.SimulatedCluster, token: str = "",

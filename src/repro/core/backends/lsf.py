@@ -126,6 +126,14 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
             return HttpResponse(404, {"error": "no such file"})
         return HttpResponse(200, {"data": base64.b64encode(data).decode()})
 
+    def health(groups, _body) -> HttpResponse:
+        status, payload = cluster.serve_health(groups["id"])
+        return HttpResponse(status, payload)
+
+    def invoke(groups, body) -> HttpResponse:
+        status, payload = cluster.serve_invoke(groups["id"], body)
+        return HttpResponse(status, payload)
+
     def queues(_groups, _body) -> HttpResponse:
         load = cluster.queue_load()
         return HttpResponse(200, {"queues": [dict(name="normal", **load)]})
@@ -147,6 +155,8 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
     srv.route("GET", "/platform/ws/jobs/events", events, kind="watch")
     srv.route("GET", "/platform/ws/jobs/{id}", jobinfo)
     srv.route("POST", "/platform/ws/jobs/{id}/kill", kill)
+    srv.route("GET", "/platform/ws/jobs/{id}/health", health)
+    srv.route("POST", "/platform/ws/jobs/{id}/invoke", invoke)
     srv.route("PUT", "/platform/ws/files/{name}", upload)
     srv.route("GET", "/platform/ws/files/{name}", download)
     srv.route("GET", "/platform/ws/queues", queues)
@@ -162,7 +172,7 @@ class LSFAdapter(B.ResourceAdapter):
         B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
         B.Capability.UPLOAD, B.Capability.DOWNLOAD, B.Capability.QUEUE_LOAD,
         B.Capability.BATCH_STATUS, B.Capability.NATIVE_ARRAYS,
-        B.Capability.WATCH,
+        B.Capability.WATCH, B.Capability.SERVE,
     })
 
     def submit(self, script, properties, params) -> str:
@@ -220,6 +230,16 @@ class LSFAdapter(B.ResourceAdapter):
 
     def cancel(self, job_id: str) -> None:
         self.client.post(f"/platform/ws/jobs/{job_id}/kill")
+
+    def probe_health(self, job_id: str) -> bool:
+        return self.client.get(f"/platform/ws/jobs/{job_id}/health").ok
+
+    def invoke(self, job_id: str, payload: Any) -> Any:
+        r = self.client.post(f"/platform/ws/jobs/{job_id}/invoke", payload)
+        if not r.ok:
+            detail = r.json.get("error", "") if isinstance(r.json, dict) else ""
+            raise B.InvokeError(r.status, detail)
+        return r.json
 
     def watch_events(self, since=-1, ids=None, wait=0.0):
         q = f"since={since}"

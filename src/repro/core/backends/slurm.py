@@ -104,6 +104,14 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
             return HttpResponse(204)
         return HttpResponse(200, {"version": version})
 
+    def health(groups, _body) -> HttpResponse:
+        status, payload = cluster.serve_health(groups["id"])
+        return HttpResponse(status, payload)
+
+    def invoke(groups, body) -> HttpResponse:
+        status, payload = cluster.serve_invoke(groups["id"], body)
+        return HttpResponse(status, payload)
+
     def ping(_groups, _body) -> HttpResponse:
         return HttpResponse(200, {"pings": [{"ping": "UP"}]})
 
@@ -114,6 +122,8 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
     srv.route("POST", "/slurm/v0.0.37/job/submit", submit)
     srv.route("GET", "/slurm/v0.0.37/jobs/events", events, kind="watch")
     srv.route("GET", "/slurm/v0.0.37/jobs", get_jobs)
+    srv.route("GET", "/slurm/v0.0.37/job/{id}/health", health)
+    srv.route("POST", "/slurm/v0.0.37/job/{id}/invoke", invoke)
     srv.route("GET", "/slurm/v0.0.37/job/{id}", get_job)
     srv.route("DELETE", "/slurm/v0.0.37/job/{id}", cancel)
     srv.route("GET", "/slurm/v0.0.37/ping", ping)
@@ -130,6 +140,7 @@ class SlurmAdapter(B.ResourceAdapter):
         B.Capability.CANCEL, B.Capability.CANCEL_QUEUED,
         B.Capability.QUEUE_LOAD, B.Capability.NATIVE_ARRAYS,
         B.Capability.BATCH_STATUS, B.Capability.WATCH,
+        B.Capability.SERVE,
     })
 
     def submit(self, script, properties, params) -> str:
@@ -185,6 +196,16 @@ class SlurmAdapter(B.ResourceAdapter):
 
     def cancel(self, job_id: str) -> None:
         self.client.delete(f"/slurm/v0.0.37/job/{job_id}")
+
+    def probe_health(self, job_id: str) -> bool:
+        return self.client.get(f"/slurm/v0.0.37/job/{job_id}/health").ok
+
+    def invoke(self, job_id: str, payload: Any) -> Any:
+        r = self.client.post(f"/slurm/v0.0.37/job/{job_id}/invoke", payload)
+        if not r.ok:
+            detail = r.json.get("error", "") if isinstance(r.json, dict) else ""
+            raise B.InvokeError(r.status, detail)
+        return r.json
 
     def watch_events(self, since=-1, ids=None, wait=0.0):
         q = f"since={since}"

@@ -21,7 +21,8 @@ from repro.core.backends import slurm as SLB
 from repro.core.objectstore import ObjectStore
 from repro.core.operator import BridgeOperator, default_adapters
 from repro.core.registry import ResourceRegistry
-from repro.core.resource import (ArraySpec, BridgeJob, BridgeJobSpec, JobData,
+from repro.core.resource import (ArraySpec, BridgeJob, BridgeJobSpec,
+                                 BridgeServiceSpec, HealthProbeSpec, JobData,
                                  PlacementSpec, RetryPolicy, S3Storage)
 from repro.core.rest import FaultProfile, ResourceManagerDirectory
 from repro.core.secrets import SecretStore
@@ -143,6 +144,28 @@ class BridgeEnvironment:
             ttl_seconds_after_finished=ttl_seconds_after_finished,
             dependencies=list(dependencies or []),
             placement=placement)
+
+    def make_service_spec(self, kind: str, *, replicas: int = 1,
+                          script: str = "", scriptlocation: str = "inline",
+                          jobproperties: Optional[Dict[str, str]] = None,
+                          jobparams: Optional[Dict[str, str]] = None,
+                          updateinterval: float = 0.02,
+                          health: Optional[HealthProbeSpec] = None,
+                          placement: Optional[PlacementSpec] = None,
+                          unknown_after: int = 5) -> BridgeServiceSpec:
+        """BridgeService spec whose replica template targets one of the
+        built-in backends (``placement`` makes ``kind`` just the fallback
+        target, exactly like ``make_spec``)."""
+        template = self.make_spec(kind, script=script,
+                                  scriptlocation=scriptlocation,
+                                  jobproperties=jobproperties,
+                                  jobparams=jobparams,
+                                  updateinterval=updateinterval)
+        return BridgeServiceSpec(template=template, replicas=replicas,
+                                 placement=placement,
+                                 health=health or HealthProbeSpec(),
+                                 updateinterval=updateinterval,
+                                 unknown_after=unknown_after)
 
     def submit(self, name: str, spec: BridgeJobSpec,
                namespace: str = "default") -> BridgeJob:

@@ -232,6 +232,8 @@ class JobProtocol:
         self.watch_skips = 0
         self._obs: Dict[Optional[int], TickObs] = {}
         self._prev_states: Dict[Optional[int], Dict[int, str]] = {}
+        # lazily-built LoadProbe over this job's own slices (scale-up routing)
+        self._slice_probe = None
 
     # -- indexed slice map -------------------------------------------------
 
@@ -387,7 +389,11 @@ class JobProtocol:
                     for sl, todo in todo_by_slice:
                         contiguous = todo == list(range(todo[0],
                                                         todo[0] + len(todo)))
-                        if (count > 1 and not sl.pairs and contiguous
+                        # len(todo) > 1: a slice holding ONE index of a
+                        # sharded array is just a job — array dialects
+                        # (sbatch --array=i-i) reject degenerate ranges
+                        if (count > 1 and len(todo) > 1 and not sl.pairs
+                                and contiguous
                                 and sl.adapter.supports(
                                     B.Capability.NATIVE_ARRAYS)):
                             # native fan-out: one submission call covers the
@@ -555,24 +561,32 @@ class JobProtocol:
     # -- elastic arrays: spec-patch reconcile (delta submit / cancel) -------
 
     def _least_loaded_slice(self) -> PlacementSlice:
-        """Rebalancing target for scale-up: the slice whose resource reports
-        the lowest normalized queue load (ties broken toward fewer owned
-        indices).  Slices without QUEUE_LOAD — or unreachable right now —
-        fall back to an index-count comparison.  Called WITHOUT _mu held
-        (the probes are remote round-trips); slice list is immutable after
-        start() and pair counts are only a tie-break heuristic."""
+        """Rebalancing target for scale-up, routed through the shared
+        ``LoadProbe`` machinery (core/scheduler.py): the slice whose resource
+        reports the lowest normalized queue load (ties broken toward fewer
+        owned indices).  The probe's TTL cache is kept to a fraction of the
+        poll interval — a failed probe invalidates its entry rather than
+        negative-caching it, so an endpoint that just recovered is
+        re-considered immediately.  Slices without QUEUE_LOAD — or
+        unreachable right now — fall back to an index-count comparison.
+        Called WITHOUT _mu held (the probes are remote round-trips); slice
+        list is immutable after start() and pair counts are only a tie-break
+        heuristic."""
         if len(self._slices) == 1:
             return self._slices[0]
-        scored = []
-        for sl in self._slices:
-            load = None
-            if sl.adapter.supports(B.Capability.QUEUE_LOAD):
-                try:
-                    load = B.normalized_queue_load(sl.adapter.queue_load())
-                except (TransportError, B.SubmitError):
-                    load = None
-            scored.append((load, sl))
-        with_load = [(l, sl) for l, sl in scored if l is not None]
+        from repro.core.scheduler import Candidate, LoadProbe
+        if self._slice_probe is None:
+            by_target = {(sl.url, sl.image, sl.secret): sl.adapter
+                         for sl in self._slices}
+            self._slice_probe = LoadProbe(
+                lambda url, image, secret: by_target[(url, image, secret)],
+                ttl=min(max(self.poll / 2, 0.0), 0.5))
+        cands = [Candidate(sl.url, sl.image, sl.secret)
+                 for sl in self._slices]
+        loads = self._slice_probe.query_all(cands)
+        with_load = [(B.normalized_queue_load(q), sl)
+                     for q, sl in zip(loads, self._slices)
+                     if B.normalized_queue_load(q) is not None]
         if with_load:
             return min(with_load,
                        key=lambda t: (t[0], len(t[1].pairs), t[1].k))[1]
@@ -1055,6 +1069,27 @@ class JobProtocol:
         self.exit_code = code
 
 
+def make_protocol(name: str, configmap: ConfigMap, secrets: SecretStore,
+                  objectstore: ObjectStore,
+                  directory: ResourceManagerDirectory,
+                  adapters: Mapping[str, Type[B.ResourceAdapter]],
+                  checkpoint: Callable[[], None],
+                  sleep: Callable[[float], None],
+                  min_sleep: float = 0.005) -> JobProtocol:
+    """Reconcile-protocol dispatch: the config map's ``kind`` key picks the
+    state machine — ``BridgeService`` gets the long-running ServiceProtocol,
+    everything else (including every legacy cm, which has no ``kind`` key)
+    the run-to-terminal JobProtocol.  Both drivers (ControllerPod,
+    MonitorTask) construct through here, so a pod restarted over a service
+    cm resumes as a service."""
+    cls: Type[JobProtocol] = JobProtocol
+    if configmap.get("kind", "") == "BridgeService":
+        from repro.core.service import ServiceProtocol  # avoids import cycle
+        cls = ServiceProtocol
+    return cls(name, configmap, secrets, objectstore, directory, adapters,
+               checkpoint=checkpoint, sleep=sleep, min_sleep=min_sleep)
+
+
 class ControllerPod:
     # pod phases (Kubernetes-like)
     PENDING = "Pending"
@@ -1074,7 +1109,7 @@ class ControllerPod:
         self.exit_code: Optional[int] = None
         self.error: str = ""
         self._killed = threading.Event()
-        self._proto = JobProtocol(
+        self._proto = make_protocol(
             name, configmap, secrets, objectstore, directory, adapters,
             checkpoint=self._checkpoint, sleep=self._sleep,
             min_sleep=min_sleep)

@@ -49,7 +49,7 @@ from typing import Dict, List, Mapping, Optional, Tuple, Type
 
 from repro.core.backends import base as B
 from repro.core.controller import (ControllerPod, JobProtocol, PodKilled,
-                                   TickObs, killable_sleep)
+                                   TickObs, killable_sleep, make_protocol)
 from repro.core.objectstore import ObjectStore
 from repro.core.rest import ResourceManagerDirectory
 from repro.core.secrets import SecretStore
@@ -158,7 +158,7 @@ class MonitorTask:
         # parsed the cm's cadence mode): each slice backs off or tightens on
         # ITS OWN observations, independent of its siblings
         self._cadences: Dict[int, Cadence] = {}
-        self._proto = JobProtocol(
+        self._proto = make_protocol(
             name, configmap, secrets, objectstore, directory, adapters,
             checkpoint=self._checkpoint, sleep=self._sleep,
             min_sleep=min_sleep)

@@ -44,8 +44,8 @@ from repro.core.monitor import MonitorRuntime
 from repro.core.objectstore import ObjectStore
 from repro.core.registry import ResourceRegistry
 from repro.core.resource import (ALL_STATES, BridgeJob, DONE, FAILED, KILLED,
-                                 PENDING, RUNNING, SUBMITTED, TERMINAL_STATES,
-                                 UNKNOWN)
+                                 PENDING, RUNNING, SERVICE_KIND, SUBMITTED,
+                                 TERMINAL_STATES, UNKNOWN)
 from repro.core.rest import ResourceManagerDirectory
 from repro.core.scheduler import LoadProbe, plan_placement
 from repro.core.secrets import SecretStore
@@ -189,7 +189,11 @@ class BridgeOperator:
         if cm.get("generation") == str(job.generation):
             return
         updates = {"generation": str(job.generation)}
-        if job.spec.array is not None:
+        if getattr(job, "kind", None) == SERVICE_KIND:
+            # a BridgeService's elastic knob is spec.replicas, carried on
+            # the same cm key the array reconcile machinery diffs against
+            updates["array_count"] = str(job.spec.replicas)
+        elif job.spec.array is not None:
             updates["array_count"] = str(job.spec.array.count)
             updates["indexed_params"] = json.dumps(
                 job.spec.array.indexed_params)
@@ -210,7 +214,10 @@ class BridgeOperator:
         plan = None
         if (job.spec.placement and job.spec.placement.candidates
                 and not self.statestore.exists(self.cm_name(job))):
-            count = job.spec.array.count if job.spec.array else 1
+            if getattr(job, "kind", None) == SERVICE_KIND:
+                count = job.spec.replicas
+            else:
+                count = job.spec.array.count if job.spec.array else 1
             plan = plan_placement(count, job.spec.placement,
                                   self._load_probe)
         with self._lock:
@@ -271,6 +278,8 @@ class BridgeOperator:
         today's shape); a multi-slice plan additionally records the
         ``slices`` key the controller fans out over, with slice 0 mirrored
         into the legacy keys for observability."""
+        if getattr(job, "kind", None) == SERVICE_KIND:
+            return self._service_cm_payload(job, plan)
         s = job.spec
         data = {
             "resourceURL": plan[0]["resourceURL"] if plan else s.resourceURL,
@@ -305,6 +314,53 @@ class BridgeOperator:
         if s.retry and (s.retry.limit or s.retry.backoff_seconds):
             data["retry_limit"] = str(s.retry.limit)
             data["retry_backoff"] = str(s.retry.backoff_seconds)
+        if plan and len(plan) > 1:
+            data["slices"] = json.dumps(plan)
+        return data
+
+    def _service_cm_payload(self, job, plan: Optional[list] = None) -> Dict[str, str]:
+        """Config-map shape for a BridgeService.
+
+        The service reuses the elastic-array substrate: replicas ride the
+        ``array_count`` key (always written — a one-replica service is still
+        a service), the template supplies the per-replica job payload, and
+        the ``kind`` key tells the pod driver to run the ServiceProtocol.
+        ``"Serve": "true"`` is stamped into the job properties so simulated
+        clusters host a long-lived serve loop instead of a batch payload.
+        """
+        s = job.spec
+        t = s.template
+        props = dict(t.jobproperties)
+        props["Serve"] = "true"
+        data = {
+            "kind": SERVICE_KIND,
+            "resourceURL": plan[0]["resourceURL"] if plan else t.resourceURL,
+            "image": plan[0]["image"] if plan else t.image,
+            "resourcesecret": (plan[0]["resourcesecret"] if plan
+                               else t.resourcesecret),
+            "updateinterval": str(s.updateinterval),
+            "jobscript": t.jobdata.jobscript,
+            "scriptlocation": t.jobdata.scriptlocation,
+            "additionaldata": t.jobdata.additionaldata,
+            "jobproperties": json.dumps(props),
+            "jobparams": json.dumps(t.jobdata.jobparams),
+            "unknown_after": str(s.unknown_after),
+            "id": "",
+            "jobStatus": PENDING,
+            "kill": "true" if s.kill else "false",
+            "message": "",
+            "generation": str(job.generation),
+            "array_count": str(s.replicas),
+            "health_failure_threshold": str(s.health.failure_threshold),
+            "health_startup_threshold": str(s.health.startup_failure_threshold),
+        }
+        if self.cadence != "fixed":
+            data["cadence"] = self.cadence
+        if t.s3storage:
+            data["s3endpoint"] = t.s3storage.endpoint
+            data["s3secret"] = t.s3storage.s3secret
+            data["s3uploadfiles"] = t.s3storage.uploadfiles
+            data["s3uploadbucket"] = t.s3storage.uploadbucket
         if plan and len(plan) > 1:
             data["slices"] = json.dumps(plan)
         return data
@@ -388,6 +444,10 @@ class BridgeOperator:
             fields["placements"] = json.loads(data["placements"])
         if data.get("observed_generation"):
             fields["observed_generation"] = int(data["observed_generation"])
+        if data.get("kind") == SERVICE_KIND:
+            fields["ready_replicas"] = int(data.get("ready_replicas", "0") or 0)
+            if data.get("endpoints"):
+                fields["endpoints"] = json.loads(data["endpoints"])
         if any(getattr(job.status, k) != v for k, v in fields.items()):
             self.registry.update_status(job.name, job.namespace, **fields)
 

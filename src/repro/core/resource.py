@@ -293,6 +293,10 @@ class BridgeJob:
     resource_version: int = 0
     deleted: bool = False
 
+    # class-level kind tag — BridgeService carries SERVICE_KIND; the operator
+    # dispatches on this without isinstance checks
+    kind = KIND
+
     @property
     def uid(self) -> str:
         return f"{self.namespace}/{self.name}"
@@ -492,3 +496,234 @@ def _beta_key_is_default(spec: Dict[str, Any], key: str) -> bool:
 def load_bridgejob(text: str) -> BridgeJob:
     """Parse a BridgeJob (either API version) from its JSON serialization."""
     return BridgeJob.from_dict(json.loads(text))
+
+
+# ---------------------------------------------------------------------------
+# BridgeService — long-running replicated serving workloads (v1beta1 only)
+# ---------------------------------------------------------------------------
+#
+# Where a BridgeJob runs to DONE, a BridgeService keeps ``spec.replicas``
+# remote jobs ALIVE: each replica is a long-lived serve-mode job on an
+# external resource, health-checked through the adapter REST channel every
+# reconcile tick, and condemned + resubmitted (under the same persisted
+# condemned-set / at-most-once invariants as elastic arrays) when it dies or
+# stops answering its health probe.  ``status.endpoints`` publishes one entry
+# per live replica — the request router (core/router.py) load-balances over
+# the ``ready`` subset.
+
+SERVICE_KIND = "BridgeService"
+
+
+@dataclass(frozen=True)
+class HealthProbeSpec:
+    """spec.health — when is a RUNNING replica considered dead?
+
+    A replica is probed on every reconcile tick (cadence =
+    ``spec.updateinterval``).  After ``failure_threshold`` CONSECUTIVE failed
+    probes it is condemned and replaced.  Before its first successful probe a
+    replica gets the larger ``startup_failure_threshold`` budget, so a model
+    server that spends several ticks loading weights is not condemned while
+    booting (the startupProbe/livenessProbe split, collapsed into one probe).
+    """
+    failure_threshold: int = 3
+    startup_failure_threshold: int = 10
+
+    def validate(self) -> None:
+        if self.failure_threshold < 1:
+            raise ValidationError("spec.health.failure_threshold must be >= 1")
+        if self.startup_failure_threshold < 1:
+            raise ValidationError(
+                "spec.health.startup_failure_threshold must be >= 1")
+
+
+@dataclass(frozen=True)
+class BridgeServiceSpec:
+    """spec of a BridgeService.
+
+    ``template`` reuses the BridgeJob target/payload shape (resourceURL,
+    image, resourcesecret, jobdata, jobproperties, s3storage) but must not
+    carry orchestration fields of its own — array/retry/placement/
+    dependencies/ttl belong to the service, which fans the template out into
+    ``replicas`` live remote jobs.
+    """
+    template: BridgeJobSpec
+    replicas: int = 1
+    placement: Optional[PlacementSpec] = None
+    health: HealthProbeSpec = field(default_factory=HealthProbeSpec)
+    updateinterval: float = 20.0
+    kill: bool = False
+    unknown_after: int = 5
+    ttl_seconds_after_finished: Optional[float] = None
+    dependencies: List[str] = field(default_factory=list)
+
+    def validate(self) -> None:
+        if self.replicas < 1:
+            raise ValidationError("spec.replicas must be >= 1")
+        if self.updateinterval <= 0:
+            raise ValidationError("spec.updateinterval must be > 0")
+        self.health.validate()
+        t = self.template
+        if t is None:
+            raise ValidationError("spec.template is required")
+        placed = bool(self.placement and self.placement.candidates)
+        if not placed and not (t.resourceURL and t.image and t.resourcesecret):
+            raise ValidationError(
+                "spec.template needs resourceURL/image/resourcesecret "
+                "unless spec.placement provides candidates")
+        if (t.array or t.retry or t.placement or t.dependencies
+                or t.ttl_seconds_after_finished is not None):
+            raise ValidationError(
+                "spec.template must not set array/retry/placement/"
+                "dependencies/ttl — the service owns replica orchestration")
+        if t.kill:
+            raise ValidationError("spec.template.kill is not a field; "
+                                  "set spec.kill on the service")
+        if t.jobdata.scriptlocation not in SCRIPT_LOCATIONS:
+            raise ValidationError(
+                f"spec.template.jobdata.scriptlocation "
+                f"{t.jobdata.scriptlocation!r} not in {SCRIPT_LOCATIONS}")
+        if self.placement is not None:
+            self.placement.validate()
+        if (self.ttl_seconds_after_finished is not None
+                and self.ttl_seconds_after_finished < 0):
+            raise ValidationError("spec.ttlSecondsAfterFinished must be >= 0")
+        for dep in self.dependencies:
+            if not dep or not isinstance(dep, str):
+                raise ValidationError(
+                    f"spec.dependencies entries must be job names, got {dep!r}")
+
+
+@dataclass
+class BridgeServiceStatus:
+    """Mirrors the service config map.
+
+    ``endpoints`` carries one entry per live replica:
+    ``{"replica": i, "slice": k, "resourceURL": ..., "image": ...,
+    "resourcesecret": ..., "job_id": ..., "ready": bool}`` — ``ready`` flips
+    false in the SAME reconcile tick the replica is condemned, which is what
+    lets the router drain it before routing another request its way.
+    """
+    state: str = PENDING
+    message: str = ""
+    job_id: str = ""
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
+    restarts: int = 0              # controller-pod restarts (operator-level)
+    ready_replicas: int = 0
+    endpoints: List[Dict[str, Any]] = field(default_factory=list)
+    index_states: Dict[str, str] = field(default_factory=dict)
+    observed_generation: int = 0
+    placements: List[Dict[str, Any]] = field(default_factory=list)
+
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+
+@dataclass
+class BridgeService:
+    """A full BridgeService CR.  Duck-types BridgeJob for the registry and
+    operator stores: uid/spec.validate()/status.terminal()/generation/
+    resource_version/deleted all behave identically."""
+    name: str
+    spec: BridgeServiceSpec
+    namespace: str = "default"
+    status: BridgeServiceStatus = field(default_factory=BridgeServiceStatus)
+    generation: int = 1
+    resource_version: int = 0
+    deleted: bool = False
+
+    kind = SERVICE_KIND
+
+    @property
+    def uid(self) -> str:
+        return f"{self.namespace}/{self.name}"
+
+    def to_dict(self, version: Optional[str] = None) -> Dict[str, Any]:
+        if version is None:
+            version = API_V1BETA1
+        if version != API_V1BETA1:
+            raise ConversionError(
+                f"{SERVICE_KIND} is served at {API_V1BETA1} only")
+        return {
+            "apiVersion": API_V1BETA1,
+            "kind": SERVICE_KIND,
+            "metadata": {"name": self.name, "namespace": self.namespace,
+                         "generation": self.generation},
+            "spec": service_spec_to_dict(self.spec),
+            "status": dataclasses.asdict(self.status),
+        }
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "BridgeService":
+        if d.get("kind") != SERVICE_KIND:
+            raise ValidationError(f"kind {d.get('kind')!r} != {SERVICE_KIND}")
+        if d.get("apiVersion", API_V1BETA1) != API_V1BETA1:
+            raise ConversionError(
+                f"{SERVICE_KIND} is served at {API_V1BETA1} only")
+        meta = d.get("metadata", {})
+        spec = service_spec_from_dict(d.get("spec", {}))
+        svc = BridgeService(name=meta.get("name", ""), spec=spec,
+                            namespace=meta.get("namespace", "default"),
+                            generation=int(meta.get("generation", 1)))
+        status = d.get("status") or {}
+        if "observed_generation" in status:
+            svc.status.observed_generation = int(status["observed_generation"])
+        if status.get("endpoints"):
+            svc.status.endpoints = [dict(e) for e in status["endpoints"]]
+        if not svc.name:
+            raise ValidationError("metadata.name is required")
+        spec.validate()
+        return svc
+
+
+def service_spec_to_dict(s: BridgeServiceSpec) -> Dict[str, Any]:
+    d: Dict[str, Any] = {
+        "replicas": s.replicas,
+        "template": _spec_to_dict(s.template, API_V1BETA1),
+        "health": dataclasses.asdict(s.health),
+        "updateinterval": s.updateinterval,
+        "kill": s.kill,
+        "unknown_after": s.unknown_after,
+    }
+    if s.placement and s.placement.candidates:
+        d["placement"] = {
+            "candidates": [dataclasses.asdict(c)
+                           for c in s.placement.candidates],
+            "strategy": s.placement.strategy,
+            "maxSlices": s.placement.max_slices,
+        }
+    if s.ttl_seconds_after_finished is not None:
+        d["ttlSecondsAfterFinished"] = s.ttl_seconds_after_finished
+    if s.dependencies:
+        d["dependencies"] = list(s.dependencies)
+    return d
+
+
+def service_spec_from_dict(d: Dict[str, Any]) -> BridgeServiceSpec:
+    h = d.get("health", {})
+    plc = d.get("placement")
+    ttl = d.get("ttlSecondsAfterFinished")
+    return BridgeServiceSpec(
+        template=spec_from_dict(d.get("template", {})),
+        replicas=int(d.get("replicas", 1)),
+        placement=None if plc is None else PlacementSpec(
+            candidates=[PlacementCandidate(
+                resourceURL=c.get("resourceURL", ""),
+                image=c.get("image", ""),
+                resourcesecret=c.get("resourcesecret", ""),
+                weight=float(c.get("weight", 1.0)),
+            ) for c in plc.get("candidates", [])],
+            strategy=plc.get("strategy", "single"),
+            max_slices=int(plc.get("maxSlices", 0)),
+        ),
+        health=HealthProbeSpec(
+            failure_threshold=int(h.get("failure_threshold", 3)),
+            startup_failure_threshold=int(
+                h.get("startup_failure_threshold", 10)),
+        ),
+        updateinterval=float(d.get("updateinterval", 20.0)),
+        kill=bool(d.get("kill", False)),
+        unknown_after=int(d.get("unknown_after", 5)),
+        ttl_seconds_after_finished=None if ttl is None else float(ttl),
+        dependencies=list(d.get("dependencies", [])),
+    )

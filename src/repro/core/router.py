@@ -1,0 +1,281 @@
+"""Request routing for BridgeService — the data-plane half of serving.
+
+``ServiceHandle`` is the kubectl-style control surface over one BridgeService
+CR (scale / kill / wait-ready, mirroring ``JobHandle``).  ``ServiceEndpoint``
+is the request router: it load-balances invocations across the replicas the
+service reports READY, re-resolving ``status.endpoints`` from the registry on
+every request so that a condemned replica is drained the same tick the
+control plane flips its ``ready`` flag.
+
+Routing policy is least-outstanding-requests: among ready replicas, pick the
+one with the fewest in-flight invocations (ties broken by total request
+count, then replica index).  Adapter connections are cached per
+``(resourceURL, image, resourcesecret)`` target, so every endpoint on the
+same resource manager shares one ``Channel`` — connection reuse is the
+channel memo's job, not the router's.
+
+Delivery contract: a request is retried on another replica when the attempt
+fails in a way that indicts the REPLICA (transport error, 404 gone,
+503 unready, 5xx crash) — so killing a replica mid-traffic loses no accepted
+request.  The failed replica is locally suspended for a short TTL to stop
+the router hammering it before the control plane condemns it.  The flip side
+is at-least-once execution across replicas on failure: a replica that dies
+AFTER executing but before replying will have its request re-executed
+elsewhere.  Status codes that indict the REQUEST (4xx other than 404) are
+raised to the caller unretried.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+from repro.core.backends import base as B
+from repro.core.resource import (BridgeService, BridgeServiceSpec,
+                                 BridgeServiceStatus, ValidationError)
+from repro.core.rest import TransportError
+
+
+class NoReadyReplicas(RuntimeError):
+    """No replica answered within the request budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceHandle:
+    """A client-side reference to one BridgeService CR."""
+    bridge: Any
+    name: str
+    namespace: str = "default"
+
+    def service(self) -> Optional[BridgeService]:
+        return self.bridge.registry.get(self.name, self.namespace)
+
+    def status(self) -> BridgeServiceStatus:
+        svc = self.service()
+        if svc is None:
+            raise KeyError(
+                f"BridgeService {self.namespace}/{self.name} not found")
+        return svc.status
+
+    def endpoints(self) -> List[dict]:
+        """``status.endpoints`` — one dict per replica:
+        {replica, slice, resourceURL, image, resourcesecret, job_id, ready}."""
+        return [dict(e) for e in self.status().endpoints]
+
+    def ready_replicas(self) -> int:
+        return self.status().ready_replicas
+
+    def wait_ready(self, replicas: Optional[int] = None,
+                   timeout: float = 30.0) -> BridgeService:
+        """Block until at least ``replicas`` (default: spec.replicas) report
+        ready, or raise TimeoutError.  A terminal service can never become
+        ready and fails fast."""
+        deadline = time.time() + timeout
+        svc = None
+        while time.time() < deadline:
+            svc = self.service()
+            if svc is not None:
+                want = replicas if replicas is not None else svc.spec.replicas
+                if svc.status.ready_replicas >= want:
+                    return svc
+                if svc.status.terminal():
+                    raise NoReadyReplicas(
+                        f"BridgeService {self.namespace}/{self.name} is "
+                        f"terminal ({svc.status.state})")
+            time.sleep(0.01)
+        raise TimeoutError(
+            f"BridgeService {self.namespace}/{self.name} not ready after "
+            f"{timeout}s (ready={svc.status.ready_replicas if svc else '?'})")
+
+    def scale(self, replicas: int) -> "ServiceHandle":
+        """Resize the service to ``replicas``; the reconciler submits or
+        condemns exactly the delta (scale-down drains the highest replica
+        indices first)."""
+        if replicas < 1:
+            raise ValidationError("service replicas must be >= 1")
+
+        def guarded(spec: BridgeServiceSpec) -> BridgeServiceSpec:
+            cur = self.service()
+            if cur is not None and cur.status.terminal():
+                raise ValidationError(
+                    f"cannot scale terminal BridgeService "
+                    f"{self.namespace}/{self.name} ({cur.status.state})")
+            return dataclasses.replace(spec, replicas=replicas)
+
+        self.bridge.registry.update_spec(self.name, guarded, self.namespace)
+        return self
+
+    def wait_reconciled(self, timeout: float = 30.0) -> BridgeService:
+        return self.bridge.wait_reconciled(self.name, self.namespace,
+                                           timeout=timeout)
+
+    def cancel(self) -> None:
+        """Kill the service: cancel every replica, settle the CR KILLED."""
+        self.bridge.registry.update_spec(
+            self.name, lambda s: dataclasses.replace(s, kill=True),
+            self.namespace)
+
+    def wait(self, timeout: float = 30.0) -> BridgeService:
+        """Block until terminal (only a kill makes a service terminal)."""
+        return self.bridge.wait(self.name, self.namespace, timeout=timeout)
+
+    def delete(self) -> None:
+        self.bridge.delete(self.name, self.namespace)
+
+    def router(self, **kwargs) -> "ServiceEndpoint":
+        return ServiceEndpoint(self.bridge, self.name, self.namespace,
+                               **kwargs)
+
+
+class ServiceEndpoint:
+    """Load-balancing request router over one BridgeService's replicas."""
+
+    def __init__(self, bridge: Any, name: str, namespace: str = "default",
+                 request_timeout: float = 30.0,
+                 suspend_ttl: float = 0.5,
+                 latency_window: int = 256):
+        self.bridge = bridge
+        self.name = name
+        self.namespace = namespace
+        self.request_timeout = request_timeout
+        self.suspend_ttl = suspend_ttl
+        self._latency_window = latency_window
+        self._mu = threading.Lock()
+        # adapter per target: all endpoints behind one manager share a Channel
+        self._adapters: Dict[tuple, B.ResourceAdapter] = {}
+        # job_id -> suspended-until (local short fuse after a failed attempt)
+        self._down: Dict[str, float] = {}
+        # job_id -> live counters for THIS replica incarnation
+        self._stats: Dict[str, Dict[str, Any]] = {}
+
+    # -- endpoint resolution ----------------------------------------------
+
+    def _ready_endpoints(self) -> List[dict]:
+        svc = self.bridge.registry.get(self.name, self.namespace)
+        if svc is None:
+            raise KeyError(
+                f"BridgeService {self.namespace}/{self.name} not found")
+        now = time.time()
+        eps = []
+        for e in svc.status.endpoints:
+            if not e.get("ready") or not e.get("job_id"):
+                continue
+            if self._down.get(e["job_id"], 0.0) > now:
+                continue
+            eps.append(e)
+        return eps
+
+    def _adapter_for(self, ep: dict) -> B.ResourceAdapter:
+        key = (ep["resourceURL"], ep["image"], ep["resourcesecret"])
+        with self._mu:
+            ad = self._adapters.get(key)
+        if ad is None:
+            ad = self.bridge.connect_adapter(*key)
+            with self._mu:
+                ad = self._adapters.setdefault(key, ad)
+        return ad
+
+    def _entry(self, ep: dict) -> Dict[str, Any]:
+        jid = ep["job_id"]
+        with self._mu:
+            st = self._stats.get(jid)
+            if st is None:
+                st = self._stats[jid] = {
+                    "replica": ep["replica"], "job_id": jid,
+                    "requests": 0, "errors": 0, "outstanding": 0,
+                    "latencies": deque(maxlen=self._latency_window),
+                }
+        return st
+
+    def _pick(self, eps: List[dict]) -> dict:
+        """Least outstanding requests; ties fall to fewest total requests,
+        then lowest replica index (deterministic)."""
+        def load(ep):
+            st = self._entry(ep)
+            return (st["outstanding"], st["requests"], ep["replica"])
+        return min(eps, key=load)
+
+    # -- the request path --------------------------------------------------
+
+    @staticmethod
+    def _replica_fault(exc: Exception) -> bool:
+        """True when the failure indicts the replica (retry elsewhere)."""
+        if isinstance(exc, TransportError):
+            return True
+        if isinstance(exc, B.InvokeError):
+            return exc.status == 404 or exc.status >= 500
+        return False
+
+    def request(self, payload: Any,
+                timeout: Optional[float] = None) -> Any:
+        """Route one invocation to the least-loaded ready replica.
+
+        Replica-fault failures are retried on another replica until the
+        request budget runs out; request-fault failures (4xx) raise
+        immediately.  With no ready replica, the call parks and re-resolves
+        until one appears or the budget is spent."""
+        deadline = time.time() + (timeout if timeout is not None
+                                  else self.request_timeout)
+        last_exc: Optional[Exception] = None
+        while True:
+            eps = self._ready_endpoints()
+            if not eps:
+                if time.time() >= deadline:
+                    raise NoReadyReplicas(
+                        f"no ready replica for {self.namespace}/{self.name} "
+                        f"within the request budget"
+                    ) from last_exc
+                time.sleep(0.01)
+                continue
+            ep = self._pick(eps)
+            st = self._entry(ep)
+            adapter = self._adapter_for(ep)
+            with self._mu:
+                st["requests"] += 1
+                st["outstanding"] += 1
+            t0 = time.time()
+            try:
+                result = adapter.invoke(ep["job_id"], payload)
+            except Exception as exc:
+                with self._mu:
+                    st["outstanding"] -= 1
+                    st["errors"] += 1
+                if not self._replica_fault(exc):
+                    raise
+                last_exc = exc
+                # short local suspension: stop re-picking a replica the
+                # control plane has not yet condemned
+                with self._mu:
+                    self._down[ep["job_id"]] = time.time() + self.suspend_ttl
+                if time.time() >= deadline:
+                    raise NoReadyReplicas(
+                        f"request to {self.namespace}/{self.name} exhausted "
+                        f"its budget retrying failed replicas") from exc
+                continue
+            with self._mu:
+                st["outstanding"] -= 1
+                st["latencies"].append(time.time() - t0)
+            return result
+
+    __call__ = request
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> Dict[str, Dict[str, Any]]:
+        """Per-replica-incarnation counters, keyed by remote job id:
+        {replica, job_id, requests, errors, outstanding, p50_s, p99_s}."""
+        out: Dict[str, Dict[str, Any]] = {}
+        with self._mu:
+            for jid, st in self._stats.items():
+                lat = sorted(st["latencies"])
+                out[jid] = {
+                    "replica": st["replica"], "job_id": jid,
+                    "requests": st["requests"], "errors": st["errors"],
+                    "outstanding": st["outstanding"],
+                    "p50_s": lat[len(lat) // 2] if lat else None,
+                    "p99_s": lat[min(len(lat) - 1,
+                                     int(len(lat) * 0.99))] if lat else None,
+                }
+        return out

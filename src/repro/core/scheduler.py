@@ -30,7 +30,8 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.api import Bridge, JobHandle
-from repro.core.backends.base import Capability, normalized_queue_load
+from repro.core.backends.base import (Capability, SubmitError,
+                                      normalized_queue_load)
 from repro.core.resource import (BridgeJob, BridgeJobSpec, DONE,
                                  PlacementSpec, ValidationError)
 from repro.core.rest import TransportError
@@ -74,7 +75,7 @@ class LoadProbe:
             if adapter is None or not adapter.supports(Capability.QUEUE_LOAD):
                 return None
             q = adapter.queue_load()
-        except (TransportError, KeyError):
+        except (TransportError, SubmitError, KeyError):
             return None
         if normalized_queue_load(q) is None:
             return None
@@ -89,7 +90,14 @@ class LoadProbe:
                 return hit[1]
         q = self._probe(cand)
         with self._lock:
-            self._cache[key] = (time.time(), q)
+            if q is None:
+                # a FAILED probe invalidates the entry instead of negative-
+                # caching it: the next query re-probes immediately, rather
+                # than serving "unreachable" for a full TTL window after the
+                # target has already recovered
+                self._cache.pop(key, None)
+            else:
+                self._cache[key] = (time.time(), q)
         return q
 
     def query_all(self, cands: List[Candidate]) -> List[Optional[dict]]:

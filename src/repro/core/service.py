@@ -1,0 +1,386 @@
+"""ServiceProtocol — the reconcile loop behind a BridgeService CR.
+
+A BridgeJob runs to DONE; a BridgeService keeps ``spec.replicas`` remote
+jobs ALIVE.  The protocol subclasses ``JobProtocol`` so everything the batch
+machinery already guarantees keeps holding here — submit-if-no-id resume
+from the config map, the persisted condemned set, per-slice polling chains,
+at-most-once cancel delivery, ``LoadProbe``-routed scale-up — and changes
+exactly the lifecycle semantics:
+
+  * a replica is a long-lived serve-mode job (the operator injects
+    ``Serve: true`` into its jobproperties): it NEVER counts as terminal
+    progress.  A replica observed terminal (crashed, completed, cancelled
+    out-of-band) is replaced in place with a fresh remote submission;
+  * every RUNNING replica is health-checked through the adapter's REST
+    channel (``Capability.SERVE``) each tick.  ``failure_threshold``
+    consecutive failed probes condemn it — the SAME persisted condemned set
+    elastic scale-down uses — after which it is cancelled, drained, and
+    resubmitted under the existing at-most-once invariants.  Before its
+    first successful probe a replica gets the larger
+    ``startup_failure_threshold`` budget (model servers load weights);
+  * ``spec.replicas`` patches reuse the elastic reconcile verbatim:
+    scale-down condemns the highest indices (drained then DROPPED, not
+    replaced), scale-up routes the delta through ``LoadProbe`` to the
+    least-loaded slice;
+  * the only terminal state is a kill: ``spec.kill`` cancels every replica
+    and the CR ends KILLED once all are down.
+
+Each tick publishes ``ready_replicas`` and a per-replica ``endpoints`` list
+into the config map (mirrored to ``status`` by the operator).  An endpoint's
+``ready`` flag flips false in the SAME tick its replica is condemned — that
+is the contract the request router (core/router.py) drains on — and because
+endpoints live in the config map they survive operator/controller pod death
+like every other piece of bridge state.
+
+Cadence: services pin ``FixedCadence`` regardless of the operator's
+configured mode.  Adaptive backoff and watch-skip both exist to AVOID
+touching a quiescent endpoint, but the health probe is the workload here —
+the probe period IS the detection SLA (recovery budget ≈ failure_threshold ×
+updateinterval + resubmit latency), so ticks must not stretch.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from repro.core.backends import base as B
+from repro.core.controller import (JobProtocol, PlacementSlice, TickObs,
+                                   _CANON_TO_BRIDGE, _encode_pairs)
+from repro.core.objectstore import NoSuchKey
+from repro.core.resource import (DONE, FAILED, KILLED, RUNNING, SUBMITTED,
+                                 UNKNOWN)
+from repro.core.rest import TransportError
+from repro.core.statestore import slice_key
+
+
+class ServiceProtocol(JobProtocol):
+    """One BridgeService's reconcile state machine (see module docstring)."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._fail_threshold = 3
+        self._startup_threshold = 10
+        # consecutive failed health probes per live jid
+        self._hfail: Dict[str, int] = {}
+        # last probe answer per jid (readiness), and jids that have EVER
+        # answered healthy (switches startup budget -> steady-state budget)
+        self._hok: Dict[str, bool] = {}
+        self._hever: Set[str] = set()
+        # per-replica-index replacement counts, persisted in the cm
+        self._replaced: Dict[str, int] = {}
+        self._prev_ready: Dict[Optional[int], List[int]] = {}
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> bool:
+        cm_data = self.cm.data
+        self._fail_threshold = max(
+            int(cm_data.get("health_failure_threshold", "3") or 3), 1)
+        self._startup_threshold = max(
+            int(cm_data.get("health_startup_threshold", "10") or 10),
+            self._fail_threshold)
+        self._replaced = {
+            k: int(v) for k, v in
+            json.loads(cm_data.get("replica_restarts", "{}") or "{}").items()}
+        if not super().start():
+            return False
+        # the watch fast path skips status polls on quiescent endpoints;
+        # a service's health probes must run EVERY tick regardless
+        self._watch_enabled = False
+        return True
+
+    def make_cadence(self):
+        from repro.core.monitor import FixedCadence
+        return FixedCadence(self.poll)
+
+    # -- health probing ----------------------------------------------------
+
+    def _probe_replica(self, sl: PlacementSlice, jid: str) -> bool:
+        """One health probe over the adapter REST channel.  The slice's
+        status poll just succeeded, so a transport failure here is scored as
+        an unhealthy answer (the replica, not the manager, is the suspect)."""
+        if not sl.adapter.supports(B.Capability.SERVE):
+            # dialects without a health route: liveness (RUNNING) is all the
+            # signal there is, treat the replica as healthy
+            return True
+        try:
+            return sl.adapter.probe_health(jid)
+        except (TransportError, B.SubmitError):
+            return False
+
+    # -- one monitor tick --------------------------------------------------
+
+    def tick(self, slice_k: Optional[int] = None) -> bool:
+        cm_now = self.cm.data
+        kill_requested = cm_now.get("kill", "false") == "true"
+        desired = max(int(cm_now.get("array_count", "1") or "1"), 1)
+
+        stall_msg = None
+        if not kill_requested:
+            stall_msg = self._reconcile_scale(cm_now, desired)
+
+        with self._mu:
+            targets = (self._slices if slice_k is None
+                       else [self._slices[slice_k]])
+            snapshot = [(sl, [list(p) for p in sl.pairs]) for sl in targets]
+
+        # status poll + health probes run OUTSIDE the state lock
+        polled: List[Tuple[PlacementSlice, list, list, Dict[str, bool]]] = []
+        failed: List[Tuple[PlacementSlice, Exception]] = []
+        for sl, pairs in snapshot:
+            if not pairs:
+                polled.append((sl, pairs, [], {}))
+                continue
+            try:
+                infos = self._poll_statuses(sl.adapter,
+                                            [jid for _, jid in pairs])
+            except (TransportError, B.SubmitError) as e:
+                failed.append((sl, e))
+                continue
+            health: Dict[str, bool] = {}
+            if not kill_requested:
+                for (idx, jid), info in zip(pairs, infos):
+                    if (info.get("state") == B.RUNNING
+                            and jid not in self._cancel_sent):
+                        health[jid] = self._probe_replica(sl, jid)
+            polled.append((sl, pairs, infos, health))
+
+        with self._mu:
+            imap = self._index_map()
+            for sl, pairs, infos, health in polled:
+                sl.failures = 0
+                sl.last_error = ""
+                for (idx, jid), info in zip(pairs, infos):
+                    cur = imap.get(idx)
+                    if cur is not None and cur[1] == jid:
+                        self._infos[idx] = info
+                for jid, ok in health.items():
+                    self._hok[jid] = ok
+                    if ok:
+                        self._hever.add(jid)
+                        self._hfail[jid] = 0
+                    else:
+                        self._hfail[jid] = self._hfail.get(jid, 0) + 1
+            for sl, e in failed:
+                sl.failures += 1
+                sl.last_error = str(e)
+            if not polled:
+                for sl, e in failed:
+                    if sl.failures >= self._unknown_after:
+                        where = f"slice {sl.k} " if self._sliced else ""
+                        self._push(
+                            {"jobStatus": UNKNOWN,
+                             "message": f"{where}resource unreachable: {e}"})
+                self._obs[slice_k] = TickObs(unknown=True, busy=True)
+                return False
+            return self._evaluate_service(
+                cm_now, desired, kill_requested, stall_msg,
+                {sl.k for sl, _, _, _ in polled}, chain=slice_k,
+                had_failures=bool(failed))
+
+    # -- post-poll evaluation (holds self._mu) -----------------------------
+
+    def _condemn(self, jid: str) -> None:
+        self._condemned.add(jid)
+        self._push({"condemned": ",".join(sorted(self._condemned))})
+
+    def _forget_jid(self, jid: str) -> None:
+        self._condemned.discard(jid)
+        self._cancel_sent.discard(jid)
+        self._hfail.pop(jid, None)
+        self._hok.pop(jid, None)
+        self._hever.discard(jid)
+
+    def _drop_replica(self, sl: PlacementSlice, idx: int, jid: str) -> None:
+        """Scale-down GC: the drained replica's index position disappears."""
+        sl.pairs = [p for p in sl.pairs if p[0] != idx]
+        self._forget_jid(jid)
+        self._infos.pop(idx, None)
+        self._replaced.pop(str(idx), None)
+        updates: Dict[str, Any] = {"id": ",".join(self._global_ids())}
+        if self._condemned:
+            updates["condemned"] = ",".join(sorted(self._condemned))
+        else:
+            self.cm.prune(["condemned"])
+            self._last_pushed.pop("condemned", None)
+        if self._sliced:
+            updates[slice_key(sl.k, "id")] = _encode_pairs(sl.pairs)
+        updates["replica_restarts"] = json.dumps(self._replaced)
+        self._push(updates)
+
+    def _respawn_replica(self, sl: PlacementSlice, idx: int, old_jid: str,
+                         cm_now: Dict[str, str], desired: int) -> bool:
+        """Replace a dead replica in place: fresh remote submission under the
+        SAME global index on the SAME slice.  Only ever called once the old
+        remote job is terminal — the at-most-once-while-live invariant is
+        what the condemn/cancel/drain sequence upstream guarantees.
+        Transient submit failure leaves the dead pair for the next tick."""
+        try:
+            script = self._fetch_script(cm_now)
+            properties = json.loads(cm_now.get("jobproperties", "{}"))
+            params = self._index_params(cm_now, idx, desired)
+            new_id = (sl.adapter.resubmit_index(script, properties, params,
+                                                idx)
+                      if desired > 1
+                      else sl.adapter.submit(script, properties, params))
+        except (B.SubmitError, TransportError, NoSuchKey, KeyError,
+                ValueError):
+            return False
+        for p in sl.pairs:
+            if p[0] == idx:
+                p[1] = new_id
+                break
+        self._forget_jid(old_jid)
+        self._infos.pop(idx, None)
+        self._replaced[str(idx)] = self._replaced.get(str(idx), 0) + 1
+        updates: Dict[str, Any] = {"id": ",".join(self._global_ids()),
+                                   "replica_restarts":
+                                   json.dumps(self._replaced)}
+        if not self._condemned:
+            self.cm.prune(["condemned"])
+            self._last_pushed.pop("condemned", None)
+        else:
+            updates["condemned"] = ",".join(sorted(self._condemned))
+        if self._sliced:
+            updates[slice_key(sl.k, "id")] = _encode_pairs(sl.pairs)
+        self._push(updates)
+        return True
+
+    def _evaluate_service(self, cm_now: Dict[str, str], desired: int,
+                          kill_requested: bool, stall_msg: Optional[str],
+                          ticked: Set[int], chain: Optional[int] = None,
+                          had_failures: bool = False) -> bool:
+        imap = self._index_map()
+        states = {
+            i: (_CANON_TO_BRIDGE[self._infos[i]["state"]]
+                if i in self._infos else SUBMITTED)
+            for i in imap}
+
+        if not kill_requested:
+            # 1. condemn replicas whose consecutive failed probes exhausted
+            #    their budget (startup budget until the first healthy answer)
+            for i in sorted(imap):
+                sl, jid = imap[i]
+                if jid in self._condemned or states[i] != RUNNING:
+                    continue
+                budget = (self._fail_threshold if jid in self._hever
+                          else self._startup_threshold)
+                if self._hfail.get(jid, 0) >= budget:
+                    self._condemn(jid)
+
+            # 2. deliver cancels for the condemned (health OR scale-down),
+            #    on the slices this tick polled
+            for sl in self._slices:
+                if sl.k not in ticked or not sl.adapter.supports(
+                        B.Capability.CANCEL):
+                    continue
+                cq = sl.adapter.supports(B.Capability.CANCEL_QUEUED)
+                for idx, jid in sorted(sl.pairs, reverse=True):
+                    if jid in self._condemned:
+                        self._try_cancel(sl.adapter, jid,
+                                         states.get(idx, SUBMITTED), cq)
+
+            # 3. act on every TERMINAL replica: an index position beyond the
+            #    desired count was condemned by scale-down and is dropped;
+            #    anything else — condemned-and-drained or died on its own —
+            #    is respawned in place (services replace forever; there is
+            #    no retry budget to exhaust because staying up is the spec)
+            for i in sorted(imap, reverse=True):
+                sl, jid = imap[i]
+                if states[i] not in (DONE, FAILED, KILLED):
+                    continue
+                if sl.k not in ticked:
+                    continue  # that slice's chain owns the action
+                if i >= desired:
+                    self._drop_replica(sl, i, jid)
+                    states.pop(i, None)
+                elif self._respawn_replica(sl, i, jid, cm_now, desired):
+                    states[i] = SUBMITTED
+            imap = self._index_map()
+
+        indices = sorted(imap)
+        ready = [i for i in indices
+                 if imap[i][1] not in self._condemned
+                 and imap[i][1] not in self._cancel_sent
+                 and states.get(i) == RUNNING
+                 and self._hok.get(imap[i][1], False)]
+
+        # 4. endpoints: one entry per tracked replica; ``ready`` flips false
+        #    the same tick the replica is condemned (the router's drain cue)
+        ready_set = set(ready)
+        endpoints = []
+        for i in indices:
+            sl, jid = imap[i]
+            endpoints.append({
+                "replica": i, "slice": sl.k, "resourceURL": sl.url,
+                "image": sl.image, "resourcesecret": sl.secret,
+                "job_id": jid, "ready": i in ready_set,
+            })
+
+        finished = kill_requested and all(
+            states.get(i) in (DONE, FAILED, KILLED) for i in indices)
+        if finished:
+            agg = KILLED
+        elif kill_requested:
+            agg = RUNNING if ready else SUBMITTED
+        else:
+            agg = RUNNING if ready else SUBMITTED
+        message = stall_msg or f"{len(ready)}/{desired} replicas ready"
+        unreachable = [sl for sl in self._slices
+                       if sl.failures >= self._unknown_after]
+        if unreachable and not finished:
+            agg = UNKNOWN
+            message = "; ".join(
+                (f"slice {sl.k} " if self._sliced else "")
+                + f"resource unreachable: {sl.last_error}"
+                for sl in unreachable)
+
+        updates: Dict[str, Any] = {
+            "jobStatus": agg, "message": message,
+            "ready_replicas": str(len(ready)),
+            "endpoints": json.dumps(endpoints),
+            "index_states": json.dumps({str(i): states.get(i, SUBMITTED)
+                                        for i in indices}),
+        }
+        if self._sliced:
+            updates["placements"] = json.dumps(
+                self._placements_snapshot(states))
+        starts = [self._infos[i].get("start_time") for i in indices
+                  if self._infos.get(i, {}).get("start_time")]
+        if starts:
+            updates["start_time"] = str(min(starts))
+        if finished:
+            ends = [self._infos[i].get("end_time") for i in indices
+                    if self._infos.get(i, {}).get("end_time")]
+            updates["end_time"] = str(max(ends) if ends else time.time())
+        if (cm_now.get("generation") and not self._condemned
+                and not kill_requested and len(indices) == desired):
+            updates["observed_generation"] = cm_now["generation"]
+        self._push(updates)
+
+        self._obs[chain] = TickObs(
+            changed=(states != self._prev_states.get(chain)
+                     or ready != self._prev_ready.get(chain)),
+            # a service at full readiness is still "busy": the health probe
+            # is the workload, so the cadence must never back off (enforced
+            # twice — make_cadence pins FixedCadence anyway)
+            busy=True,
+            unknown=had_failures or bool(unreachable))
+        self._prev_states[chain] = dict(states)
+        self._prev_ready[chain] = list(ready)
+
+        if kill_requested:
+            for sl in self._slices:
+                if sl.k not in ticked or not sl.adapter.supports(
+                        B.Capability.CANCEL):
+                    continue
+                cq = sl.adapter.supports(B.Capability.CANCEL_QUEUED)
+                for idx, jid in list(sl.pairs):
+                    self._try_cancel(sl.adapter, jid,
+                                     states.get(idx, SUBMITTED), cq)
+
+        if finished:
+            self._exit(1)  # a killed service is KILLED, never DONE
+            return True
+        return False

@@ -70,6 +70,24 @@ def test_rank_caches_probes_within_ttl(env):
     assert all(env.servers[k].request_count > after_first[k] for k in req0)
 
 
+def test_failed_probe_invalidates_cache_entry(env):
+    """Satellite: a FAILED probe must drop the candidate's cache entry, not
+    negative-cache it — once the target recovers, the very next query sees
+    the live value instead of serving None for the rest of the TTL window."""
+    sched = LoadAwareScheduler(env.bridge, _candidates(), load_ttl=30.0)
+    probe = sched.probe
+    cand = _candidates()[0]  # slurm
+    assert probe.query(cand) is not None, "baseline probe reaches the target"
+    probe.invalidate()
+    env.servers["slurm"].fault.begin_outage()
+    assert probe.query(cand) is None, "outage observed"
+    env.servers["slurm"].fault.end_outage()
+    # with a 30s TTL, a negative-cached failure would pin None here; the fix
+    # re-probes immediately because the failed entry was invalidated
+    assert probe.query(cand) is not None, (
+        "recovered target still served from a stale failed-probe entry")
+
+
 def test_rank_probes_candidates_concurrently():
     """Satellite: a many-candidate rank() costs ~one round-trip time, not
     the sum of serialized probes."""

@@ -1,0 +1,305 @@
+"""BridgeService: replicated serving with health-checked replicas and a
+load-balanced request router — the chaos suite.
+
+The tentpole guarantees under test:
+
+  * replicas are long-lived: a serve-mode remote job is never treated as
+    terminal-success (walltime expiry included) — only a kill ends the
+    service;
+  * a replica that dies (or stops answering its health probe while RUNNING)
+    is condemned and replaced IN PLACE within the health-check budget, under
+    the same at-most-once-while-live invariants as job arrays: a live
+    replica's remote job is never resubmitted;
+  * the router only ever routes to replicas the control plane reports ready
+    — a condemned replica is drained the same tick its probe budget runs
+    out, and the cluster-side ``invocations`` counter proves no request
+    reached it after the drop;
+  * ``status.endpoints`` lives in the config map, so it survives operator
+    pod death: the restarted pod resumes monitoring the SAME remote jobs.
+
+Both operator modes run the same ServiceProtocol and every assertion is
+cadence-agnostic (services pin a fixed probe cadence regardless of the
+operator's cadence flag), so the suite runs the full (mode, cadence) matrix
+on the lifecycle + chaos paths.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ArraySpec, BridgeEnvironment, BridgeService,
+                        BridgeServiceSpec, HealthProbeSpec, IMAGES, KILLED,
+                        PlacementCandidate, PlacementSpec, RUNNING, URLS,
+                        ValidationError)
+from repro.core.backends import base as B
+
+MODES = ["multiplexed", "pod-per-cr"]
+OPERATORS = [(m, "fixed") for m in MODES] + [
+    ("multiplexed", "adaptive"), ("multiplexed", "watch")]
+
+# every slurm probe tick is one GET per replica; keep the interval small so
+# the health budget (threshold x interval) stays well under test timeouts
+INTERVAL = 0.02
+HEALTH = HealthProbeSpec(failure_threshold=3, startup_failure_threshold=50)
+
+
+def _wait(predicate, timeout=30, interval=0.005):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def _env(mode="multiplexed", cadence="fixed", **kw):
+    # serve replicas hold a cluster slot for life, so give the simulated
+    # managers headroom beyond the default 4 slots
+    kw.setdefault("slots", 8)
+    return BridgeEnvironment(
+        operator_kwargs=dict(mode=mode, cadence=cadence), **kw)
+
+
+def _service(env, name="svc", replicas=2, kind="slurm", **kw):
+    spec = env.make_service_spec(kind, replicas=replicas, script="serve",
+                                 updateinterval=INTERVAL,
+                                 health=kw.pop("health", HEALTH), **kw)
+    return env.bridge.submit_service(name, spec)
+
+
+def _job_ids(handle):
+    return sorted(e["job_id"] for e in handle.endpoints())
+
+
+# ---------------------------------------------------------------------------
+# CRD layer
+# ---------------------------------------------------------------------------
+
+
+def test_service_crd_round_trip():
+    env = BridgeEnvironment()  # not started: only the spec factory is used
+    spec = env.make_service_spec("slurm", replicas=3, script="serve",
+                                 health=HealthProbeSpec(failure_threshold=5))
+    svc = BridgeService(name="svc", spec=spec)
+    doc = svc.to_dict()
+    assert doc["kind"] == "BridgeService"
+    assert doc["spec"]["replicas"] == 3
+    assert doc["spec"]["health"]["failure_threshold"] == 5
+    back = BridgeService.from_dict(doc)
+    assert back.spec == spec
+
+
+def test_service_spec_validation():
+    env = BridgeEnvironment()
+    spec = env.make_service_spec("slurm", script="serve")
+    with pytest.raises(ValidationError):
+        BridgeServiceSpec(template=spec.template, replicas=0).validate()
+    with pytest.raises(ValidationError):
+        BridgeServiceSpec(
+            template=env.make_spec("slurm", script="serve",
+                                   array=ArraySpec(count=2))).validate()
+    with pytest.raises(ValidationError):
+        BridgeServiceSpec(
+            template=spec.template,
+            health=HealthProbeSpec(failure_threshold=0)).validate()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: ready / scale / kill
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,cadence", OPERATORS)
+def test_service_lifecycle(mode, cadence):
+    with _env(mode, cadence) as env:
+        h = _service(env, replicas=3)
+        svc = h.wait_ready(timeout=20)
+        assert svc.status.state == RUNNING
+        assert svc.status.ready_replicas == 3
+        ids = _job_ids(h)
+        assert len(set(ids)) == 3, "each replica is its own remote job"
+
+        # scale up: existing replicas keep their remote jobs (at most once)
+        h.scale(5)
+        h.wait_reconciled(timeout=20)
+        h.wait_ready(replicas=5, timeout=20)
+        assert set(ids) <= set(_job_ids(h)), "scale-up resubmitted a live replica"
+
+        # scale down: highest replica indices drained, the rest untouched
+        before = {e["replica"]: e["job_id"] for e in h.endpoints()}
+        h.scale(2)
+        h.wait_reconciled(timeout=20)
+        assert _wait(lambda: len(h.endpoints()) == 2
+                     and h.ready_replicas() == 2, timeout=20)
+        after = {e["replica"]: e["job_id"] for e in h.endpoints()}
+        assert set(after) == {0, 1}
+        assert all(after[i] == before[i] for i in after), (
+            "scale-down touched a surviving replica")
+
+        h.cancel()
+        svc = h.wait(timeout=20)
+        assert svc.status.state == KILLED
+        # every remote job the service ever owned is terminal
+        assert _wait(lambda: all(
+            j.state in (B.COMPLETED, B.FAILED, B.CANCELLED)
+            for j in env.clusters["slurm"].jobs.values()), timeout=10)
+
+
+def test_serve_jobs_never_complete_on_walltime():
+    """A serve replica outlives the cluster's walltime default — expiry must
+    not be mistaken for success (the whole point is staying up)."""
+    with _env(default_duration=0.05) as env:  # tiny default walltime
+        h = _service(env, replicas=1,
+                     jobproperties={"WallSeconds": "0.05"})
+        h.wait_ready(timeout=20)
+        time.sleep(0.5)  # 10x the walltime
+        assert h.ready_replicas() == 1
+        assert h.status().state == RUNNING
+        jid = h.endpoints()[0]["job_id"]
+        assert env.clusters["slurm"].jobs[jid].state == B.RUNNING
+        h.cancel()
+        h.wait(timeout=20)
+
+
+def test_service_scale_guard():
+    with _env() as env:
+        h = _service(env, replicas=1)
+        h.wait_ready(timeout=20)
+        with pytest.raises(ValidationError):
+            h.scale(0)
+        h.cancel()
+        h.wait(timeout=20)
+        with pytest.raises(ValidationError):
+            h.scale(3)
+
+
+# ---------------------------------------------------------------------------
+# placement: replicas spread over multiple resource managers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_service_spreads_replicas_across_resources(mode):
+    with _env(mode) as env:
+        placement = PlacementSpec(candidates=[
+            PlacementCandidate(URLS["slurm"], IMAGES["slurm"], "slurm-secret"),
+            PlacementCandidate(URLS["lsf"], IMAGES["lsf"], "lsf-secret"),
+        ], strategy="spread")
+        h = _service(env, replicas=4, placement=placement)
+        h.wait_ready(timeout=20)
+        urls = {e["resourceURL"] for e in h.endpoints()}
+        assert urls == {URLS["slurm"], URLS["lsf"]}, (
+            "spread placement must land replicas on both managers")
+        # requests flow to replicas on BOTH managers
+        r = h.router(request_timeout=10)
+        for i in range(8):
+            assert r.request({"i": i})["echo"] == {"i": i}
+        served = {s["job_id"] for s in r.stats().values() if s["requests"]}
+        assert len(served) >= 2
+        h.cancel()
+        h.wait(timeout=20)
+
+
+# ---------------------------------------------------------------------------
+# chaos: replica death, unhealthy replicas, router drain, pod death
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,cadence", OPERATORS)
+def test_replica_kill_mid_traffic_is_replaced_within_budget(mode, cadence):
+    """Kill a replica's remote job while the router is under load: no
+    accepted request is lost, the replica is replaced with a fresh remote
+    job within the health-check budget, and readyReplicas converges."""
+    with _env(mode, cadence) as env:
+        h = _service(env, replicas=2)
+        h.wait_ready(timeout=20)
+        router = h.router(request_timeout=15)
+
+        stop = threading.Event()
+        failures = []
+
+        def traffic():
+            i = 0
+            while not stop.is_set():
+                try:
+                    out = router.request({"seq": i})
+                    if out["echo"] != {"seq": i}:
+                        failures.append(("bad-echo", i, out))
+                except Exception as exc:  # lost accepted request
+                    failures.append(("error", i, repr(exc)))
+                i += 1
+
+        threads = [threading.Thread(target=traffic) for _ in range(3)]
+        for t in threads:
+            t.start()
+        time.sleep(0.1)  # requests in flight
+
+        victim = h.endpoints()[0]["job_id"]
+        t_kill = time.time()
+        env.clusters["slurm"].cancel_if_live(victim)
+        assert _wait(lambda: victim not in _job_ids(h)
+                     and h.ready_replicas() == 2, timeout=20), (
+            "killed replica not replaced")
+        recovery = time.time() - t_kill
+        # terminal replicas are detected in one status poll; allow generous
+        # scheduling slack on top of the probe budget
+        budget = HEALTH.failure_threshold * INTERVAL
+        assert recovery < budget + 5.0, f"recovery took {recovery:.2f}s"
+
+        time.sleep(0.1)  # traffic over the recovered set
+        stop.set()
+        for t in threads:
+            t.join(timeout=20)
+        assert not failures, failures[:5]
+        assert victim not in _job_ids(h)
+        h.cancel()
+        h.wait(timeout=20)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_unhealthy_running_replica_condemned_and_drained(mode):
+    """A replica that keeps RUNNING but fails its health probe is condemned
+    after failure_threshold consecutive misses, drained (ready=False, zero
+    further routed requests) and replaced."""
+    with _env(mode) as env:
+        h = _service(env, replicas=2)
+        h.wait_ready(timeout=20)
+        victim = h.endpoints()[0]["job_id"]
+        vjob = env.clusters["slurm"].jobs[victim]
+        vjob.unhealthy.set()  # probe now 503s; the job itself keeps running
+        assert _wait(lambda: victim not in _job_ids(h), timeout=20), (
+            "unhealthy replica never condemned")
+        assert _wait(lambda: h.ready_replicas() == 2, timeout=20)
+        # drained: after the drop, no request ever reaches the condemned job
+        drained_at = vjob.invocations
+        r = h.router(request_timeout=10)
+        for i in range(10):
+            r.request({"i": i})
+        assert vjob.invocations == drained_at, (
+            "router sent traffic to a condemned replica")
+        h.cancel()
+        h.wait(timeout=20)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_endpoints_survive_operator_pod_death(mode):
+    """The endpoint map is config-map state: killing the controller pod must
+    not lose it, and the restarted pod resumes the SAME remote jobs (a live
+    replica is never resubmitted)."""
+    with _env(mode) as env:
+        h = _service(env, replicas=2)
+        h.wait_ready(timeout=20)
+        ids = _job_ids(h)
+        submitted_before = len(env.clusters["slurm"].jobs)
+
+        env.operator.pods["default/svc"].kill_pod()
+        # operator notices, restarts the pod, and readiness converges again
+        assert _wait(lambda: h.service().status.restarts >= 1, timeout=20)
+        assert _wait(lambda: h.ready_replicas() == 2, timeout=20)
+        assert _job_ids(h) == ids, "pod restart resubmitted live replicas"
+        assert len(env.clusters["slurm"].jobs) == submitted_before
+        # endpoints stayed routable THROUGH the restart window
+        r = h.router(request_timeout=10)
+        assert r.request({"alive": 1})["echo"] == {"alive": 1}
+        h.cancel()
+        h.wait(timeout=20)
