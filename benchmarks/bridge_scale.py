@@ -262,16 +262,22 @@ def run_service_case(mode: str, *, replicas: int = 4, threads: int = 4,
             t.join(timeout=60)
         elapsed = time.time() - t_start
 
+        # delivered is the contract: the condemned replica never SERVES
+        # another request.  A stale *attempt* is legal — a client thread may
+        # have resolved the endpoint list just before the kill and only get
+        # scheduled again much later; its attempt faults on the dead replica
+        # and is retried on a survivor (the at-least-once delivery contract),
+        # which the zero-failed-requests assert above already covers.
         routed_dead = (router.stats().get(victim["job_id"], {})
                        .get("requests", 0) - attempted_at_drop)
         delivered_dead = vjob.invocations - delivered_at_drop
         if failures:
             raise RuntimeError(
                 f"lost/failed requests under replica kill: {failures[:3]}")
-        if routed_dead or delivered_dead:
+        if delivered_dead:
             raise RuntimeError(
-                f"requests routed to the dead replica after its drop: "
-                f"attempted={routed_dead} delivered={delivered_dead}")
+                f"requests delivered to the dead replica after its drop: "
+                f"{delivered_dead}")
         # a DEAD replica (terminal remote job) is detected by the very next
         # status poll — budget it like the probe path plus generous slack
         budget = health.failure_threshold * interval + 5.0
@@ -292,7 +298,8 @@ def run_service_case(mode: str, *, replicas: int = 4, threads: int = 4,
                 lat[min(int(len(lat) * 0.99), len(lat) - 1)] * 1e3, 3)
                 if lat else None,
             "recovery_s": round(recovery, 3),
-            "requests_to_dead_after_drop": routed_dead + delivered_dead,
+            "requests_to_dead_after_drop": delivered_dead,
+            "stale_attempts_after_drop": routed_dead,
         }
     finally:
         env.stop()
@@ -470,6 +477,108 @@ def run_resize_case(mode: str, start: int, up: int, down: int, *,
         env.stop()
 
 
+def run_failover_case(mode: str, *, count: int = 16, threshold: int = 3,
+                      interval: float = 0.02, duration: float = 1.0) -> dict:
+    """Slice-failover chaos scenario: a ``count``-index array spread over
+    TWO resources, one killed mid-array (endpoint blackout + power-off).
+    Measures detection latency (kill -> LOST recorded in the cm) and
+    evacuation latency (kill -> CR DONE again), and asserts the recovery
+    contract right here: zero lost indices, zero duplicated completions,
+    detection within the policy budget."""
+    from repro.core import (FailoverSpec, FaultProfile, IMAGES,
+                            PlacementCandidate, PlacementSpec, URLS)
+
+    fp = FaultProfile(seed=42)
+    env = BridgeEnvironment(slots=max(count, 8), default_duration=duration,
+                            fault_profiles={"slurm": fp},
+                            operator_kwargs={"mode": mode})
+    try:
+        env.start()
+        placement = PlacementSpec(
+            candidates=[PlacementCandidate(URLS[k], IMAGES[k], f"{k}-secret")
+                        for k in ("slurm", "lsf")],
+            strategy="spread",
+            failover=FailoverSpec(enabled=True,
+                                  unreachable_threshold=threshold))
+        h = env.bridge.submit("failover", env.make_spec(
+            "slurm", script="bench", updateinterval=interval,
+            jobproperties={"WallSeconds": str(duration)},
+            array=ArraySpec(count=count), placement=placement))
+        cm_name = "default/failover-bridge-cm"
+        deadline = time.time() + 120
+        while (len([s for s in h.status().job_id.split(",") if s]) < count
+               and time.time() < deadline):
+            time.sleep(0.005)
+
+        # kill one of the two resources mid-array
+        t_kill = time.time()
+        fp.schedule_blackout()
+        env.clusters["slurm"].power_off()
+
+        # detection: the LOST flag landing in the persisted slice defs
+        t_detect = None
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            defs = json.loads(env.statestore.get(cm_name).get("slices")
+                              or "[]")
+            if any(d.get("lost") for d in defs):
+                t_detect = time.time()
+                break
+            time.sleep(0.002)
+        if t_detect is None:
+            raise RuntimeError("failover never detected the dead slice")
+
+        job = h.wait(timeout=300)
+        t_done = time.time()
+        if job.status.state != DONE:
+            raise RuntimeError(f"failover scenario did not finish: "
+                               f"{job.status.state} {job.status.message}")
+
+        # the chaos invariant: every index completed exactly once while live
+        runs: dict = {}
+        for kind in ("slurm", "lsf"):
+            for j in env.clusters[kind].jobs.values():
+                if j.state != B.COMPLETED:
+                    continue
+                p = j.params
+                idx = int(p.get("SLURM_ARRAY_TASK_ID",
+                          p.get("BRIDGE_ARRAY_INDEX",
+                                int(p.get("LSB_JOBINDEX", 0)) - 1)))
+                runs[idx] = runs.get(idx, 0) + 1
+        missing = [i for i in range(count) if i not in runs]
+        duplicated = {i: n for i, n in runs.items() if n != 1}
+        if missing or duplicated:
+            raise RuntimeError(f"failover lost/duplicated indices: "
+                               f"missing={missing} dup={duplicated}")
+        # evacuated = the dead resource's unfinished indices (the ones that
+        # had to re-run elsewhere); its completed ones kept their results
+        evacuated = len({
+            int(j.params.get("SLURM_ARRAY_TASK_ID",
+                j.params.get("BRIDGE_ARRAY_INDEX",
+                             int(j.params.get("LSB_JOBINDEX", 0)) - 1)))
+            for j in env.clusters["slurm"].jobs.values()
+            if j.state != B.COMPLETED})
+        # detection budget: threshold failed polls, one per interval, plus
+        # generous slack for tick scheduling on a loaded box
+        budget = threshold * interval + 2.0
+        detect_s = t_detect - t_kill
+        if detect_s > budget:
+            raise RuntimeError(f"detection took {detect_s:.3f}s "
+                               f"(budget {budget:.3f}s)")
+        return {
+            "label": f"{mode}/failover-{count}ix",
+            "mode": mode, "array_count": count,
+            "unreachable_threshold": threshold, "interval": interval,
+            "detection_s": round(detect_s, 3),
+            "evacuation_s": round(t_done - t_kill, 3),
+            "evacuated_indices": evacuated,
+            "missing_indices": len(missing),
+            "duplicated_completions": len(duplicated),
+        }
+    finally:
+        env.stop()
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -485,6 +594,7 @@ def main() -> int:
         sliced = dict(count=16, slurm_slots=4, lsf_slots=2, duration=0.2)
         event = dict(crs=32, interval=0.2, dur_lo=1.5, dur_hi=2.5)
         service = dict(replicas=4, threads=4, warm_s=0.5, post_s=0.5)
+        failover = dict(count=8, threshold=3, interval=0.02, duration=0.4)
     else:
         counts, cr_counts = [1, 64, 256], [1, 16, 64]
         # jobs long enough that the run is dominated by steady-state RUNNING
@@ -497,6 +607,7 @@ def main() -> int:
         # staggered drain (constant churn, the conservative re-poll path)
         event = dict(crs=1000, interval=0.5, dur_lo=6.0, dur_hi=8.0)
         service = dict(replicas=6, threads=8, warm_s=2.0, post_s=2.0)
+        failover = dict(count=32, threshold=3, interval=0.02, duration=1.0)
 
     baseline_count = counts[-1]
 
@@ -506,7 +617,8 @@ def main() -> int:
                           "event": event},
                "array_scaling": [], "baselines": [], "cr_scaling": [],
                "cr_scaling_event": [], "single_job": [], "resize": [],
-               "sliced_placement": [], "service_scale": []}
+               "sliced_placement": [], "service_scale": [],
+               "slice_failover": []}
 
     print("== array scaling (one CR, N indices) ==")
     for mode in MODES:
@@ -612,6 +724,15 @@ def main() -> int:
               f"recover={r['recovery_s']:>6.3f}s "
               f"dead-routed={r['requests_to_dead_after_drop']}")
 
+    print("== slice failover (kill one of two resources mid-array) ==")
+    for mode in MODES:
+        r = run_failover_case(mode, **failover)
+        results["slice_failover"].append(r)
+        print(f"  {r['label']:<24} detect={r['detection_s']:>6.3f}s "
+              f"evacuate={r['evacuation_s']:>6.3f}s "
+              f"moved={r['evacuated_indices']:>3} "
+              f"lost={r['missing_indices']} dup={r['duplicated_completions']}")
+
     print("== single-job wall time (latency regression guard) ==")
     for mode in MODES:
         walls = [run_case(mode, count=1, duration=0.1)["wall_time_s"]
@@ -668,6 +789,13 @@ def main() -> int:
                         "requests_to_dead_after_drop":
                             r["requests_to_dead_after_drop"]}
             for r in results["service_scale"]},
+        "slice_failover": {
+            r["mode"]: {"detection_s": r["detection_s"],
+                        "evacuation_s": r["evacuation_s"],
+                        "evacuated_indices": r["evacuated_indices"],
+                        "missing_indices": r["missing_indices"],
+                        "duplicated_completions": r["duplicated_completions"]}
+            for r in results["slice_failover"]},
     }
 
     out = os.path.abspath(args.out)
@@ -688,6 +816,13 @@ def main() -> int:
                       f"p99={v['latency_p99_ms']}ms "
                       f"recover={v['recovery_s']}s"
                       for m, v in sv.items()))
+    fo = h["slice_failover"]
+    print("slice failover: "
+          + ", ".join(f"{m}: detect={v['detection_s']}s "
+                      f"evacuate={v['evacuation_s']}s "
+                      f"lost={v['missing_indices']} "
+                      f"dup={v['duplicated_completions']}"
+                      for m, v in fo.items()))
     ev = h["event_driven"]
     print(f"event-driven @ {event['crs']} CRs: requests "
           + " vs ".join(f"{c}={ev[c]['rest_requests']}"

@@ -22,12 +22,12 @@ from repro.core.resource import (API_V1ALPHA1, API_V1BETA1, API_VERSIONS,
                                  ArraySpec, BridgeJob, BridgeJobSpec,
                                  BridgeJobStatus, BridgeService,
                                  BridgeServiceSpec, BridgeServiceStatus,
-                                 ConversionError, HealthProbeSpec, JobData,
-                                 PlacementCandidate, PlacementSpec,
+                                 ConversionError, FailoverSpec, HealthProbeSpec,
+                                 JobData, PlacementCandidate, PlacementSpec,
                                  RetryPolicy, S3Storage, SERVICE_KIND,
                                  ValidationError,
                                  PENDING, SUBMITTED, RUNNING, DONE, FAILED,
-                                 KILLED, UNKNOWN, TERMINAL_STATES,
+                                 KILLED, UNKNOWN, LOST, TERMINAL_STATES,
                                  convert, load_bridgejob, service_spec_from_dict,
                                  service_spec_to_dict)
 from repro.core.registry import ResourceRegistry

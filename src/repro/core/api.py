@@ -83,7 +83,15 @@ class JobHandle:
     def placements(self) -> list:
         """Sharded placement: the job's per-slice status — one dict per
         slice ({slice, resourceURL, image, indices, state}).  Empty for
-        single-resource (unsliced) jobs."""
+        single-resource (unsliced) jobs.
+
+        Degradation and failover observability (slice failover, see
+        ``spec.placement.failover``): a slice mid-outage additionally
+        carries {failures, lastError, outageSeconds}; a slice whose
+        resource failed the failover policy is reported with
+        ``state: "LOST"`` plus ``migratedTo`` (the endpoints its
+        unfinished indices evacuated to) and keeps listing only the
+        terminal indices whose results it still holds."""
         return [dict(p) for p in self.status().placements]
 
     def outputs(self) -> Dict[str, bytes]:

@@ -325,6 +325,9 @@ class SimulatedCluster:
         self.payload = payload or sleep_payload
         self.id_prefix = id_prefix
         self.jobs: Dict[str, ClusterJob] = {}
+        # power_off(): the whole resource died — live jobs fail, nothing
+        # schedules, queue_load reports zero capacity
+        self.powered_off = False
         # staged files visible to jobs (upload/download area; LSF-style)
         self.files: Dict[str, bytes] = {}
         self._next_id = start_numbering
@@ -447,9 +450,34 @@ class SimulatedCluster:
 
     def queue_load(self) -> Dict[str, int]:
         with self._lock:
+            if self.powered_off:
+                # a dead resource has no schedulable capacity: slots=0 makes
+                # normalized_queue_load() return None, so planners skip it
+                return {"queued": 0, "running": 0, "slots": 0}
             q = sum(1 for j in self.jobs.values() if j.state == QUEUED)
             r = sum(1 for j in self.jobs.values() if j.state == RUNNING)
         return {"queued": q, "running": r, "slots": self.slots}
+
+    def power_off(self, reason: str = "resource powered off") -> None:
+        """Hard-kill the whole resource: every live job fails NOW (their
+        worker threads observe _cancel, but the terminal state is already
+        set and _run_job must not overwrite it) and nothing schedules until
+        ``power_on()``.  Chaos tests combine this with a FaultProfile
+        blackout on the REST facade to simulate a dead endpoint whose work
+        is really gone."""
+        with self._lock:
+            self.powered_off = True
+            for job in self.jobs.values():
+                if job.state not in TERMINAL:
+                    job.state = FAILED
+                    job.end_time = time.time()
+                    job.reason = reason
+                    job._cancel.set()
+                    self._bump_events(job)
+
+    def power_on(self) -> None:
+        with self._lock:
+            self.powered_off = False
 
     def upload(self, name: str, data: bytes) -> None:
         with self._lock:
@@ -475,7 +503,7 @@ class SimulatedCluster:
                 # reap finished workers — the list must not grow with job count
                 self._threads = [t for t in self._threads if t.is_alive()]
                 running = sum(1 for j in self.jobs.values() if j.state == RUNNING)
-                free = self.slots - running
+                free = 0 if self.powered_off else self.slots - running
                 to_start = [j for j in sorted(self.jobs.values(),
                                               key=lambda j: j.submit_time)
                             if j.state == QUEUED][:max(free, 0)]
@@ -496,6 +524,11 @@ class SimulatedCluster:
             job.reason = f"{type(e).__name__}: {e}"
             code = 1
         with self._lock:
+            if job.state in TERMINAL:
+                # power_off() (or another out-of-band kill) already decided
+                # this job's fate while the payload was unwinding — a late
+                # COMPLETED must not resurrect a job the bridge saw FAILED
+                return
             job.exit_code = code
             job.end_time = time.time()
             if job._cancel.is_set() or code == -1:

@@ -60,8 +60,8 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Set, Tuple, Typ
 
 from repro.core.backends import base as B
 from repro.core.objectstore import NoSuchKey, ObjectStore
-from repro.core.resource import (DONE, FAILED, KILLED, RUNNING, SUBMITTED,
-                                 UNKNOWN)
+from repro.core.resource import (DONE, FAILED, KILLED, LOST, RUNNING,
+                                 SUBMITTED, UNKNOWN)
 from repro.core.rest import ResourceManagerDirectory, TransportError
 from repro.core.secrets import SecretStore
 from repro.core.statestore import ConfigMap, StateStore, slice_key
@@ -74,6 +74,9 @@ _CANON_TO_BRIDGE = {
     B.FAILED: FAILED,
     B.CANCELLED: KILLED,
 }
+# bridge -> backend canonical (restart path: re-seed last-known infos for
+# terminal indices kept on a LOST slice, whose endpoint can never re-answer)
+_BRIDGE_TO_CANON = {v: k for k, v in _CANON_TO_BRIDGE.items()}
 
 
 class PodKilled(BaseException):
@@ -128,7 +131,7 @@ class PlacementSlice:
 
     __slots__ = ("k", "url", "image", "secret", "adapter", "plan_start",
                  "plan_count", "pairs", "failures", "last_error",
-                 "events_seen")
+                 "events_seen", "lost", "outage_start", "migrated_to")
 
     def __init__(self, k: int, url: str, image: str, secret: str,
                  adapter: B.ResourceAdapter, plan_start: int = 0,
@@ -150,6 +153,14 @@ class PlacementSlice:
         # current for (-1 until the first real poll): the watch fast path
         # skips the status request while the version has not moved past it
         self.events_seen = -1
+        # slice failover: a LOST slice's resource failed its policy; its
+        # unfinished indices were evacuated and it is never polled again
+        # (it keeps its terminal pairs so completed results survive)
+        self.lost = False
+        # wall time the current unreachable streak began (0 = reachable)
+        self.outage_start = 0.0
+        # where the evacuated indices went (status.placements observability)
+        self.migrated_to = ""
 
     def indices(self) -> List[int]:
         return sorted(p[0] for p in self.pairs)
@@ -234,6 +245,21 @@ class JobProtocol:
         self._prev_states: Dict[Optional[int], Dict[int, str]] = {}
         # lazily-built LoadProbe over this job's own slices (scale-up routing)
         self._slice_probe = None
+        # slice failover (spec.placement.failover): threshold 0 == disabled;
+        # candidates are the full placement pool the evacuation re-plans over
+        self._failover_threshold = 0
+        self._failover_grace = 0.0
+        self._fo_candidates: List[Dict[str, Any]] = []
+        self._fo_strategy = "spread"
+        self._fo_probe = None
+        # serializes evacuations (and the orphan reaper) the way _scale_lock
+        # serializes growth: the migration fan-out runs OUTSIDE _mu
+        self._failover_lock = threading.Lock()
+        # remote jobs left behind on a LOST slice: cancelled best-effort by
+        # the reaper once (if) the endpoint answers again, so a resource that
+        # recovers mid-evacuation never double-runs an index
+        self._orphans: List[Dict[str, Any]] = []
+        self._orphan_next = 0.0
 
     # -- indexed slice map -------------------------------------------------
 
@@ -284,6 +310,14 @@ class JobProtocol:
         self._attempts = {
             k: int(v) for k, v in
             json.loads(cm_data.get("retry_attempts", "{}") or "{}").items()}
+        # slice failover policy (absent keys == disabled: legacy cms keep
+        # today's byte shape and today's pin-UNKNOWN-forever behaviour)
+        self._failover_threshold = int(
+            cm_data.get("failover_threshold", "0") or 0)
+        self._failover_grace = float(cm_data.get("failover_grace", "0") or 0)
+        self._fo_candidates = json.loads(cm_data.get("candidates", "") or "[]")
+        self._fo_strategy = cm_data.get("placement_strategy", "spread")
+        self._orphans = json.loads(cm_data.get("orphans", "") or "[]")
 
         # v1beta1 job arrays: the config map carries the fan-out count; a
         # single v1alpha1 job is the count=1 degenerate case of the same path
@@ -307,6 +341,8 @@ class JobProtocol:
             sl = PlacementSlice(k, d["resourceURL"], d["image"],
                                 d["resourcesecret"], adapter,
                                 int(d.get("start", 0)), int(d.get("count", 0)))
+            sl.lost = bool(d.get("lost"))
+            sl.migrated_to = d.get("migratedTo", "")
             if self._sliced:
                 sl.pairs = _decode_pairs(cm_data.get(slice_key(k, "id"), ""))
             else:
@@ -324,6 +360,18 @@ class JobProtocol:
             self._condemned = {t for t in
                                cm_data.get("condemned", "").split(",")
                                if t and t in tracked}
+            # a LOST slice keeps its terminal pairs (completed results
+            # survive the migration) but its endpoint will never answer a
+            # poll again — re-seed their last-known states from the cm so
+            # the aggregate can still finish after a pod restart
+            idx_states = json.loads(cm_data.get("index_states", "") or "{}")
+            for sl in slices:
+                if not sl.lost:
+                    continue
+                for idx, _jid in sl.pairs:
+                    st = idx_states.get(str(idx))
+                    if st in _BRIDGE_TO_CANON:
+                        self._infos[idx] = {"state": _BRIDGE_TO_CANON[st]}
             missing = [i for i in range(count) if i not in self._index_map()]
         if missing:
             if not self._submit_initial(cm_data, count, missing):
@@ -335,12 +383,14 @@ class JobProtocol:
 
     def _planned_slice(self, idx: int) -> PlacementSlice:
         """The slice whose planned contiguous range owns global ``idx``;
-        indices beyond every plan (post-plan growth) go to the least-
-        populated slice."""
-        for sl in self._slices:
+        indices beyond every plan (post-plan growth) — and indices whose
+        planned slice is LOST (resuming an interrupted evacuation) — go to
+        the least-populated surviving slice."""
+        alive = [sl for sl in self._slices if not sl.lost] or self._slices
+        for sl in alive:
             if sl.plan_start <= idx < sl.plan_start + sl.plan_count:
                 return sl
-        return min(self._slices, key=lambda sl: (len(sl.pairs), sl.k))
+        return min(alive, key=lambda sl: (len(sl.pairs), sl.k))
 
     def _index_params(self, cm_data: Dict[str, str], index: int,
                       count: int) -> Dict[str, str]:
@@ -376,6 +426,8 @@ class JobProtocol:
                 script = self._fetch_script(cm_data)
                 properties = json.loads(cm_data.get("jobproperties", "{}"))
                 for sl in self._slices:
+                    if sl.lost:
+                        continue  # dead endpoint: staging would only raise
                     self._stage_additional_data(sl.adapter, cm_data)
                 with self._mu:
                     imap = self._index_map()
@@ -569,41 +621,58 @@ class JobProtocol:
         negative-caching it, so an endpoint that just recovered is
         re-considered immediately.  Slices without QUEUE_LOAD — or
         unreachable right now — fall back to an index-count comparison.
-        Called WITHOUT _mu held (the probes are remote round-trips); slice
-        list is immutable after start() and pair counts are only a tie-break
-        heuristic."""
-        if len(self._slices) == 1:
-            return self._slices[0]
+        Called WITHOUT _mu held (the probes are remote round-trips); pair
+        counts are only a tie-break heuristic.  LOST slices never receive
+        growth; a failover may have appended replacement slices, so the
+        probe resolves adapters through the live slice list, not a snapshot
+        taken at start()."""
+        with self._mu:
+            alive = [sl for sl in self._slices if not sl.lost]
+            if not alive:
+                alive = list(self._slices)
+        if len(alive) == 1:
+            return alive[0]
         from repro.core.scheduler import Candidate, LoadProbe
         if self._slice_probe is None:
-            by_target = {(sl.url, sl.image, sl.secret): sl.adapter
-                         for sl in self._slices}
             self._slice_probe = LoadProbe(
-                lambda url, image, secret: by_target[(url, image, secret)],
+                self._slice_adapter,
                 ttl=min(max(self.poll / 2, 0.0), 0.5))
-        cands = [Candidate(sl.url, sl.image, sl.secret)
-                 for sl in self._slices]
+        cands = [Candidate(sl.url, sl.image, sl.secret) for sl in alive]
         loads = self._slice_probe.query_all(cands)
         with_load = [(B.normalized_queue_load(q), sl)
-                     for q, sl in zip(loads, self._slices)
+                     for q, sl in zip(loads, alive)
                      if B.normalized_queue_load(q) is not None]
         if with_load:
             return min(with_load,
                        key=lambda t: (t[0], len(t[1].pairs), t[1].k))[1]
-        return min(self._slices, key=lambda sl: (len(sl.pairs), sl.k))
+        return min(alive, key=lambda sl: (len(sl.pairs), sl.k))
+
+    def _slice_adapter(self, url: str, image: str,
+                       secret: str) -> B.ResourceAdapter:
+        """Probe connect hook: the owning slice's already-built adapter."""
+        with self._mu:
+            for sl in self._slices:
+                if (sl.url, sl.image, sl.secret) == (url, image, secret):
+                    return sl.adapter
+        raise TransportError(f"no slice for {url}")
 
     def _scale_up(self, sl: PlacementSlice, cm_now: Dict[str, str],
                   desired: int) -> Optional[str]:
-        """Submit the missing indices up to ``desired`` on slice ``sl``.
-        Each remote submission runs OUTSIDE the state lock; the resulting id
-        is committed (pair append + incremental flush) under the lock before
-        the next one, and the loop revalidates against the live index map
-        every iteration so a racing scale-down (condemnation) stops the
-        growth.  A transient error leaves the remainder for the next tick;
-        the returned stall diagnostic becomes this tick's status message.
-        Caller holds _scale_lock, so at most one chain grows the job."""
+        """Submit the missing indices below ``desired`` on slice ``sl`` —
+        the top of the range after a plain resize, but arbitrary mid-range
+        holes after an interrupted evacuation (this is the self-heal path
+        that makes migration convergent).  Each remote submission runs
+        OUTSIDE the state lock; the resulting id is committed (pair append +
+        incremental flush) under the lock before the next one, and the loop
+        revalidates against the live index map every iteration so a racing
+        scale-down (condemnation) stops the growth.  A transient error
+        leaves the remainder for the next tick; the returned stall
+        diagnostic becomes this tick's status message.  Caller holds
+        _scale_lock, so at most one chain grows the job."""
         with self._mu:
-            idx = len(self._index_map())
+            imap = self._index_map()
+            holes = [i for i in range(desired) if i not in imap]
+            idx = holes[0] if holes else desired
         try:
             script = self._fetch_script(cm_now)
             properties = json.loads(cm_now.get("jobproperties", "{}"))
@@ -611,9 +680,11 @@ class JobProtocol:
                 with self._mu:
                     if self._condemned:
                         return None  # a newer patch shrank the job: stop
-                    idx = len(self._index_map())
-                    if idx >= desired:
+                    imap = self._index_map()
+                    holes = [i for i in range(desired) if i not in imap]
+                    if not holes:
                         return None
+                    idx = holes[0]
                 self._checkpoint()
                 params = self._index_params(cm_now, idx, desired)
                 jid = (sl.adapter.resubmit_index(script, properties, params,
@@ -650,7 +721,12 @@ class JobProtocol:
                 # cancelled tail to its replacement instead of orphaning it
                 self._push({"condemned": ",".join(sorted(self._condemned))})
                 return None
-            need_growth = desired > n and not self._condemned
+            # growth == any missing index below desired: the top of the
+            # range after a resize, mid-range holes after an interrupted
+            # slice evacuation (n alone cannot see holes once a failover
+            # dropped indices while a condemned tail still pads the count)
+            need_growth = (not self._condemned
+                           and any(i not in imap for i in range(desired)))
         if not need_growth:
             return None
         if not self._scale_lock.acquire(blocking=False):
@@ -660,6 +736,266 @@ class JobProtocol:
                                   desired)
         finally:
             self._scale_lock.release()
+
+    # -- slice failover: LOST promotion, evacuation, orphan reaping ---------
+
+    def _connect_candidate(self, url: str, image: str,
+                           secret_name: str) -> B.ResourceAdapter:
+        """Adapter for a placement candidate that may not (yet) own a slice:
+        credentials from the mounted secret, dialect from the image."""
+        secret = self.secrets.mount(secret_name)
+        client = self.directory.connect(url, secret.get("token", ""))
+        return B.resolve_adapter(self.adapters, image)(client)
+
+    def _slice_defs(self) -> List[Dict[str, Any]]:
+        """The persisted ``slices`` cm value, rebuilt from live state (the
+        operator writes the initial plan; the controller owns it afterwards
+        so LOST flags and failover-created slices survive pod death)."""
+        defs: List[Dict[str, Any]] = []
+        for sl in self._slices:
+            d: Dict[str, Any] = {
+                "resourceURL": sl.url, "image": sl.image,
+                "resourcesecret": sl.secret,
+                "start": sl.plan_start, "count": sl.plan_count}
+            if sl.lost:
+                d["lost"] = True
+                if sl.migrated_to:
+                    d["migratedTo"] = sl.migrated_to
+            defs.append(d)
+        return defs
+
+    def _failover_due(self) -> List[PlacementSlice]:
+        """Slices past the failover policy: threshold consecutive failed
+        polls AND grace seconds of wall-clock outage.  Caller holds _mu."""
+        if self._failover_threshold <= 0 or not self._fo_candidates:
+            return []
+        now = time.time()
+        return [sl for sl in self._slices
+                if not sl.lost
+                and sl.failures >= self._failover_threshold
+                and sl.outage_start
+                and now - sl.outage_start >= self._failover_grace]
+
+    def _attempt_failover(self, cm_now: Dict[str, str],
+                          desired: int) -> bool:
+        """Non-blocking entry: at most one chain evacuates at a time (a
+        second due slice waits for the next tick).  Returns True when at
+        least one slice was promoted to LOST this call."""
+        if not self._failover_lock.acquire(blocking=False):
+            return False
+        try:
+            return self._do_failover(cm_now, desired)
+        finally:
+            self._failover_lock.release()
+
+    def _do_failover(self, cm_now: Dict[str, str], desired: int) -> bool:
+        """Promote due slices to LOST and migrate their unfinished indices.
+
+        Order matters for the at-most-once-while-live invariant:
+
+        1. Probe the remaining candidates (outside _mu).  If NOTHING else is
+           reachable the slice is NOT promoted — the CR stays pinned UNKNOWN
+           exactly as with failover disabled (black-box honesty: we only
+           declare a resource dead once we can actually act on it).
+        2. Under _mu, in one coalesced cm write: mark the slice LOST, strip
+           its unfinished pairs, record each stripped remote job in the
+           persisted ``orphans`` ledger, keep terminal pairs (completed
+           results survive), drop its condemned jids outright (a drain can
+           never reach a dead endpoint), and persist the new slice defs.
+           After this write a restarted pod sees the holes and finishes the
+           migration itself — step 3 is pure optimisation.
+        3. Re-plan the evacuated indices over the healthy candidates
+           (plan_failover; never optimistic) and resubmit them, one commit
+           per index, under _scale_lock so a concurrent elastic scale-up
+           cannot double-submit a hole.
+        """
+        from repro.core.scheduler import Candidate, LoadProbe, plan_failover
+        with self._mu:
+            due = self._failover_due()
+            if not due:
+                return False
+            dead_urls = ({sl.url for sl in self._slices if sl.lost}
+                         | {sl.url for sl in due})
+        cands = [Candidate(c["resourceURL"], c["image"], c["resourcesecret"],
+                           float(c.get("weight", 1.0)))
+                 for c in self._fo_candidates]
+        pool = [c for c in cands if c.resourceURL not in dead_urls]
+        if self._fo_probe is None:
+            self._fo_probe = LoadProbe(
+                self._connect_candidate,
+                ttl=min(max(self.poll / 2, 0.0), 0.5))
+        if not pool or not any(
+                q is not None for q in self._fo_probe.query_all(pool)):
+            return False  # nowhere to go: stay UNKNOWN, never evacuate
+
+        is_array = ("array_count" in cm_now
+                    or len(self._index_map()) > 1)
+        with self._mu:
+            due = self._failover_due()  # revalidate: a poll may have landed
+            if not due:
+                return False
+            todo: List[int] = []
+            pruned: List[str] = []
+            for sl in due:
+                sl.lost = True
+                keep: List[List[Any]] = []
+                for idx, jid in sl.pairs:
+                    st = (_CANON_TO_BRIDGE[self._infos[idx]["state"]]
+                          if idx in self._infos else SUBMITTED)
+                    orphan = {"resourceURL": sl.url, "image": sl.image,
+                              "resourcesecret": sl.secret, "id": jid}
+                    if jid in self._condemned:
+                        # the scale-down drain can never reach this endpoint:
+                        # drop the index outright, reap the remote best-effort
+                        self._condemned.discard(jid)
+                        self._cancel_sent.discard(jid)
+                        self._infos.pop(idx, None)
+                        self._attempts.pop(str(idx), None)
+                        pruned.append(self._results_key(sl, idx, is_array))
+                        self._orphans.append(orphan)
+                        continue
+                    if st in (DONE, KILLED) or (
+                            st == FAILED
+                            and self._attempts.get(str(idx), 0)
+                            >= self._retry_limit):
+                        keep.append([idx, jid])  # terminal: results survive
+                        continue
+                    if st == FAILED:
+                        # moving a retryable failure is a resubmission:
+                        # it spends the same budget the retry path would
+                        self._attempts[str(idx)] = \
+                            self._attempts.get(str(idx), 0) + 1
+                    todo.append(idx)
+                    self._infos.pop(idx, None)
+                    self._orphans.append(orphan)
+                sl.pairs = keep
+            updates: Dict[str, Any] = {
+                "slices": json.dumps(self._slice_defs()),
+                "orphans": json.dumps(self._orphans),
+                "id": ",".join(self._global_ids())}
+            for s in self._slices:
+                updates[slice_key(s.k, "id")] = _encode_pairs(s.pairs)
+            if self._retry_limit or "retry_attempts" in cm_now:
+                updates["retry_attempts"] = json.dumps(self._attempts)
+            if self._condemned:
+                updates["condemned"] = ",".join(sorted(self._condemned))
+            elif "condemned" in cm_now:
+                pruned.append("condemned")
+            if pruned:
+                self.cm.prune(pruned)
+                for k in pruned:
+                    self._last_pushed.pop(k, None)
+            self._push(updates)
+
+        if not todo:
+            return True  # slice marked LOST; nothing unfinished to move
+        todo.sort()
+        plan = plan_failover(len(todo), cands, self._fo_probe,
+                             strategy=self._fo_strategy,
+                             exclude_urls=dead_urls)
+        if not plan:
+            # the pool vanished between probe and plan: the holes are
+            # persisted, so _reconcile_scale self-heals them next tick
+            return True
+        with self._mu:
+            targets: List[Tuple[PlacementSlice, List[int]]] = []
+            for ent in plan:
+                tgt = next(
+                    (s for s in self._slices if not s.lost
+                     and (s.url, s.image, s.secret)
+                     == (ent["resourceURL"], ent["image"],
+                         ent["resourcesecret"])), None)
+                if tgt is None:
+                    tgt = PlacementSlice(
+                        len(self._slices), ent["resourceURL"], ent["image"],
+                        ent["resourcesecret"],
+                        self._connect_candidate(ent["resourceURL"],
+                                                ent["image"],
+                                                ent["resourcesecret"]))
+                    self._slices.append(tgt)
+                targets.append(
+                    (tgt, todo[ent["start"]:ent["start"] + ent["count"]]))
+            for dsl in due:
+                dsl.migrated_to = ",".join(
+                    sorted({t.url for t, _ in targets}))
+            self._push({"slices": json.dumps(self._slice_defs())})
+        self._resubmit_evacuated(cm_now, desired, targets)
+        return True
+
+    def _resubmit_evacuated(
+            self, cm_now: Dict[str, str], desired: int,
+            targets: List[Tuple[PlacementSlice, List[int]]]) -> None:
+        """Step 3 of _do_failover: the submission fan-out, outside _mu,
+        under _scale_lock.  Any index left unsubmitted (transient error,
+        lock contention, pod kill) stays a persisted hole that
+        _reconcile_scale fills on a later tick."""
+        if not self._scale_lock.acquire(blocking=False):
+            return  # a concurrent scale-up owns submissions right now
+        try:
+            script = self._fetch_script(cm_now)
+            properties = json.loads(cm_now.get("jobproperties", "{}"))
+            arr = desired > 1 or "array_count" in cm_now
+            for sl, idxs in targets:
+                for idx in idxs:
+                    self._checkpoint()
+                    with self._mu:
+                        if idx in self._index_map():
+                            continue  # a racing chain already filled it
+                    params = self._index_params(cm_now, idx, desired)
+                    try:
+                        jid = (sl.adapter.resubmit_index(
+                                   script, properties, params, idx)
+                               if arr
+                               else sl.adapter.submit(script, properties,
+                                                      params))
+                    except (B.SubmitError, TransportError):
+                        continue  # leave the hole for the self-heal path
+                    with self._mu:
+                        sl.pairs.append([idx, jid])
+                        self._flush_ids(sl)
+        except (NoSuchKey, KeyError, ValueError):
+            pass  # bad script/params surface through the normal paths
+        finally:
+            self._scale_lock.release()
+
+    def _reap_orphans(self) -> None:
+        """Best-effort cancel of remote jobs stranded on LOST slices, so an
+        endpoint that recovers mid-evacuation never double-runs an index.
+        Throttled to the poll interval; TransportError keeps the orphan in
+        the ledger for the next pass."""
+        now = time.time()
+        with self._mu:
+            if not self._orphans or now < self._orphan_next:
+                return
+            self._orphan_next = now + max(self.poll, self.min_sleep)
+            batch = list(self._orphans)
+        if not self._failover_lock.acquire(blocking=False):
+            return  # an evacuation owns the ledger right now
+        try:
+            remaining = []
+            for o in batch:
+                try:
+                    adapter = self._connect_candidate(
+                        o["resourceURL"], o["image"], o["resourcesecret"])
+                    if adapter.supports(B.Capability.CANCEL):
+                        adapter.cancel(o["id"])
+                except (TransportError, B.SubmitError):
+                    remaining.append(o)
+            with self._mu:
+                self._orphans = remaining
+                self._push({"orphans": json.dumps(remaining)})
+        finally:
+            self._failover_lock.release()
+
+    def chain_retired(self, chain: Optional[int]) -> bool:
+        """Multiplexed-driver hook: True when this chain's slice is LOST, so
+        the chain leaves the poll heap for good.  Chain 0 never retires — it
+        owns the per-tick global duties (cm read, elastic reconcile, kill)
+        even when its own slice is gone."""
+        if chain is None or chain == 0:
+            return False
+        with self._mu:
+            return chain < len(self._slices) and self._slices[chain].lost
 
     def _try_cancel(self, adapter: B.ResourceAdapter, jid: str, state: str,
                     can_cancel_queued: bool) -> None:
@@ -751,8 +1087,24 @@ class JobProtocol:
                 agg = RUNNING
             else:
                 agg = SUBMITTED
-            out.append({"slice": sl.k, "resourceURL": sl.url,
-                        "image": sl.image, "indices": idxs, "state": agg})
+            ent = {"slice": sl.k, "resourceURL": sl.url,
+                   "image": sl.image, "indices": idxs, "state": agg}
+            if sl.lost:
+                # failover observability: the slice is gone for good; the
+                # indices it still lists are the terminal ones whose results
+                # it keeps, everything else lives at migratedTo now
+                ent["state"] = LOST
+                if sl.migrated_to:
+                    ent["migratedTo"] = sl.migrated_to
+            elif sl.failures:
+                # pre-failover degradation, surfaced per slice so clients
+                # can see an outage building before the CR goes UNKNOWN
+                ent["failures"] = sl.failures
+                ent["lastError"] = sl.last_error
+                if sl.outage_start:
+                    ent["outageSeconds"] = round(
+                        time.time() - sl.outage_start, 3)
+            out.append(ent)
         return out
 
     def tick(self, slice_k: Optional[int] = None) -> bool:
@@ -774,8 +1126,11 @@ class JobProtocol:
             stall_msg = self._reconcile_scale(cm_now, desired)
 
         with self._mu:
-            targets = (self._slices if slice_k is None
-                       else [self._slices[slice_k]])
+            all_targets = (self._slices if slice_k is None
+                           else [self._slices[slice_k]])
+            # LOST slices left the poll set for good: their endpoint already
+            # failed the failover policy and their live indices moved away
+            targets = [sl for sl in all_targets if not sl.lost]
             # watch eligibility is judged under the lock: the fast path may
             # stand in for a status poll ONLY when the slice is quiescent
             # (no kill, no drain, no stalled growth, nothing mid-retry) and
@@ -822,6 +1177,7 @@ class JobProtocol:
             for sl, pairs, infos, advance in polled:
                 sl.failures = 0
                 sl.last_error = ""
+                sl.outage_start = 0.0
                 if advance is not None:
                     sl.events_seen = max(sl.events_seen, advance)
                 if infos is None:
@@ -832,24 +1188,53 @@ class JobProtocol:
                     if cur is not None and cur[1] == jid:
                         self._infos[idx] = info
             for sl, e in failed:
+                if sl.failures == 0:
+                    sl.outage_start = time.time()
                 sl.failures += 1
                 sl.last_error = str(e)
-            if not polled:
-                # nothing answered this tick: surface unreachability once
-                # the budget is spent (black-box honesty: unreachable !=
-                # dead) — never fall through to a stale-data evaluation
-                for sl, e in failed:
-                    if sl.failures >= self._unknown_after:
-                        where = f"slice {sl.k} " if self._sliced else ""
-                        self._push(
-                            {"jobStatus": UNKNOWN,
-                             "message": f"{where}resource unreachable: {e}"})
-                self._obs[slice_k] = TickObs(unknown=True)
+            failover_due = bool(failed) and bool(self._failover_due())
+
+        # spec.placement.failover: a slice past its policy is promoted to
+        # LOST and its unfinished indices migrate to the surviving healthy
+        # candidates.  Remote work (probes, resubmissions) runs OUTSIDE _mu,
+        # like a scale-up; a kill supersedes any migration.
+        migrated = False
+        if failover_due and not kill_requested:
+            migrated = self._attempt_failover(cm_now, desired)
+        if self._orphans:
+            self._reap_orphans()
+
+        with self._mu:
+            if not polled and not migrated:
+                if failed:
+                    # nothing answered this tick: surface unreachability
+                    # once the budget is spent (black-box honesty:
+                    # unreachable != dead) — never fall through to a
+                    # stale-data evaluation
+                    for sl, _e in failed:
+                        if sl.failures >= self._unknown_after:
+                            self._push(
+                                {"jobStatus": UNKNOWN,
+                                 "message": self._slice_outage_message(sl)})
+                    self._obs[slice_k] = TickObs(unknown=True)
+                else:
+                    # an empty target set: this chain's slice is LOST (the
+                    # multiplexed driver retires the chain after this tick)
+                    self._obs[slice_k] = TickObs()
                 return False
             return self._evaluate(cm_now, desired, kill_requested, stall_msg,
                                   {sl.k for sl, _, _, _ in polled},
                                   chain=slice_k, had_failures=bool(failed),
                                   skipped=skipped)
+
+    def _slice_outage_message(self, sl: PlacementSlice) -> str:
+        """The UNKNOWN diagnostic for one unreachable slice: which endpoint,
+        for how long, after how many failed polls — not just the index."""
+        where = f"slice {sl.k} " if self._sliced else ""
+        secs = time.time() - sl.outage_start if sl.outage_start else 0.0
+        return (f"{where}resource unreachable ({sl.url}; "
+                f"{sl.failures} failed polls over {secs:.1f}s): "
+                f"{sl.last_error}")
 
     def _evaluate(self, cm_now: Dict[str, str], desired: int,
                   kill_requested: bool, stall_msg: Optional[str],
@@ -952,15 +1337,15 @@ class JobProtocol:
         # an unreachable slice must not be masked by its healthy siblings'
         # aggregate: the CR stays UNKNOWN until every slice answers again
         # (its stale non-terminal states above also keep `finished` False,
-        # so we never invent progress OR death from a black-box silence)
+        # so we never invent progress OR death from a black-box silence).
+        # A LOST slice is past this: its indices already migrated, and the
+        # aggregate over the survivors is the truth again.
         unreachable = [sl for sl in self._slices
-                       if sl.failures >= self._unknown_after]
+                       if not sl.lost and sl.failures >= self._unknown_after]
         if unreachable and not finished:
             agg = UNKNOWN
-            message = "; ".join(
-                (f"slice {sl.k} " if self._sliced else "")
-                + f"resource unreachable: {sl.last_error}"
-                for sl in unreachable)
+            message = "; ".join(self._slice_outage_message(sl)
+                                for sl in unreachable)
 
         updates = {"jobStatus": agg, "message": message}
         if is_array:
@@ -1047,6 +1432,8 @@ class JobProtocol:
         total = sum(len(sl.pairs) for sl in self._slices)
         uploaded = []
         for sl in self._slices:
+            if sl.lost:
+                continue  # dead endpoint: nothing to download from it
             can_download = sl.adapter.supports(B.Capability.DOWNLOAD)
             can_logs = sl.adapter.supports(B.Capability.LOGS)
             if not (can_download or can_logs):

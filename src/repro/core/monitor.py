@@ -152,6 +152,10 @@ class MonitorTask:
         # different slices of one job step concurrently — the whole point of
         # per-slice scheduling
         self._chain_locks: Dict[int, threading.Lock] = {0: threading.Lock()}
+        # guards the lock TABLE itself: slice failover can append replacement
+        # slices (and thus chains) mid-flight, racing the death barrier's
+        # table snapshot
+        self._chains_mu = threading.Lock()
         # single-finalizer guard for the death barrier (see _die)
         self._dying = threading.Lock()
         # one cadence policy per chain (created lazily after start() has
@@ -243,13 +247,21 @@ class MonitorTask:
                     # racing start-up) and its death barrier must see the
                     # complete, no-longer-mutated lock table
                     n = self._proto.slice_count()
-                    for k in range(1, n):
-                        self._chain_locks[k] = threading.Lock()
+                    with self._chains_mu:
+                        for k in range(1, n):
+                            self._chain_locks[k] = threading.Lock()
                     for k in range(1, n):
                         self._runtime.schedule(self, 0.0, k)
                     return self._next_delay(chain)
                 if self._proto.tick(chain):
                     self._finish()
+                    return None
+                # slice failover may have appended replacement slices during
+                # this tick: give each a chain of its own...
+                self._ensure_chains()
+                # ...and retire this chain for good when its slice is LOST
+                # (chain 0 never retires — it owns the global duties)
+                if self._proto.chain_retired(chain):
                     return None
                 return self._next_delay(chain)
             except PodKilled:
@@ -260,6 +272,21 @@ class MonitorTask:
         finally:
             lock.release()
 
+    def _ensure_chains(self) -> None:
+        """Register (and schedule) a chain for any slice the protocol grew
+        since start() — slice failover appends replacement slices mid-flight.
+        Every new lock is in the table before its chain is scheduled, so the
+        death barrier can never miss a running chain."""
+        n = self._proto.slice_count()
+        fresh = []
+        with self._chains_mu:
+            for k in range(n):
+                if k not in self._chain_locks:
+                    self._chain_locks[k] = threading.Lock()
+                    fresh.append(k)
+        for k in fresh:
+            self._runtime.schedule(self, 0.0, k)
+
     def _die(self, chain: int) -> Optional[float]:
         """Finalize a kill/crash EXACTLY ONCE, barriering on every other
         chain's lock (held while flipping the phase) so no in-flight step of
@@ -268,8 +295,9 @@ class MonitorTask:
         self._killed.set()  # crash path: make other chains die at checkpoints
         if not self._dying.acquire(blocking=False):
             return None  # another chain is finalizing the death
-        others = [l for k, l in sorted(self._chain_locks.items())
-                  if k != chain]
+        with self._chains_mu:
+            table = sorted(self._chain_locks.items())
+        others = [l for k, l in table if k != chain]
         for l in others:
             l.acquire()
         try:

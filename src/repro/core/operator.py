@@ -32,6 +32,7 @@ so restart / kill / resume / delete flow through identical code paths.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import queue
 import threading
@@ -314,7 +315,19 @@ class BridgeOperator:
         if s.retry and (s.retry.limit or s.retry.backoff_seconds):
             data["retry_limit"] = str(s.retry.limit)
             data["retry_backoff"] = str(s.retry.backoff_seconds)
-        if plan and len(plan) > 1:
+        # slice failover policy: the controller needs the FULL candidate set
+        # (not just the plan) persisted so a re-plan after a slice loss can
+        # consult candidates the initial plan skipped.  A failover-enabled
+        # one-slice plan still writes ``slices`` — evacuation needs the
+        # sliced machinery even before a second slice exists.
+        fo = s.placement.failover if s.placement else None
+        if fo is not None and fo.enabled:
+            data["failover_threshold"] = str(fo.unreachable_threshold)
+            data["failover_grace"] = str(fo.grace_seconds)
+            data["placement_strategy"] = s.placement.strategy
+            data["candidates"] = json.dumps(
+                [dataclasses.asdict(c) for c in s.placement.candidates])
+        if plan and (len(plan) > 1 or (fo is not None and fo.enabled)):
             data["slices"] = json.dumps(plan)
         return data
 
@@ -498,7 +511,5 @@ class BridgeOperator:
     def kill(self, name: str, namespace: str = "default") -> None:
         """User-facing kill signal: update the CR (paper: 'A user can also
         update the CR with a kill signal')."""
-        import dataclasses
-
         self.registry.update_spec(
             name, lambda s: dataclasses.replace(s, kill=True), namespace)

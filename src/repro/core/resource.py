@@ -26,6 +26,10 @@
         candidates: [{resourceURL, image, resourcesecret, weight}, ...]
         strategy: single|spread|weighted                # how to split indices
         maxSlices: 2                                    # cap on resources used
+        failover:                                       # slice failover policy
+          enabled: true
+          unreachable_threshold: 5                      # polls before LOST
+          grace_seconds: 0                              # min outage wall time
 
 ``spec.array`` is MUTABLE on a live CR (elastic arrays): every spec mutation
 bumps ``metadata.generation`` and the reconciler records the generation it
@@ -72,6 +76,11 @@ UNKNOWN = "UNKNOWN"
 
 TERMINAL_STATES = (DONE, FAILED, KILLED)
 ALL_STATES = (PENDING, SUBMITTED, RUNNING, DONE, FAILED, KILLED, UNKNOWN)
+
+# Slice-level state (NOT a CR state, so not in ALL_STATES): a placement
+# slice whose resource failed its failover policy and whose unfinished
+# indices were migrated elsewhere.  Surfaces in status.placements only.
+LOST = "LOST"
 
 SCRIPT_LOCATIONS = ("inline", "s3", "remote")
 
@@ -142,6 +151,31 @@ class PlacementCandidate:
 
 
 @dataclass(frozen=True)
+class FailoverSpec:
+    """spec.placement.failover (v1beta1) — slice failover policy.
+
+    Default OFF: without it an unreachable slice pins the CR UNKNOWN until
+    the resource answers again (the pre-failover behaviour, byte-compatible).
+    With ``enabled``, a slice that misses ``unreachable_threshold``
+    consecutive polls AND has been dark for at least ``grace_seconds`` is
+    promoted to LOST: its unfinished indices are cancelled best-effort and
+    resubmitted on the remaining healthy candidates; its completed indices'
+    results are kept.
+    """
+    enabled: bool = False
+    unreachable_threshold: int = 5   # consecutive failed polls before LOST
+    grace_seconds: float = 0.0       # minimum outage wall time before LOST
+
+    def validate(self) -> None:
+        if self.unreachable_threshold < 1:
+            raise ValidationError(
+                "spec.placement.failover.unreachable_threshold must be >= 1")
+        if self.grace_seconds < 0:
+            raise ValidationError(
+                "spec.placement.failover.grace_seconds must be >= 0")
+
+
+@dataclass(frozen=True)
 class PlacementSpec:
     """spec.placement (v1beta1) — sharded placement of one array CR.
 
@@ -160,6 +194,7 @@ class PlacementSpec:
     candidates: List[PlacementCandidate] = field(default_factory=list)
     strategy: str = "single"
     max_slices: int = 0
+    failover: Optional[FailoverSpec] = None
 
     def validate(self) -> None:
         if not self.candidates:
@@ -171,6 +206,8 @@ class PlacementSpec:
                 f"{PLACEMENT_STRATEGIES}")
         if self.max_slices < 0:
             raise ValidationError("spec.placement.maxSlices must be >= 0")
+        if self.failover is not None:
+            self.failover.validate()
         for c in self.candidates:
             c.validate()
 
@@ -372,13 +409,40 @@ def _spec_to_dict(s: BridgeJobSpec, version: str = API_V1BETA1) -> Dict[str, Any
         if s.dependencies:
             d["dependencies"] = list(s.dependencies)
         if s.placement and s.placement.candidates:
-            d["placement"] = {
-                "candidates": [dataclasses.asdict(c)
-                               for c in s.placement.candidates],
-                "strategy": s.placement.strategy,
-                "maxSlices": s.placement.max_slices,
-            }
+            d["placement"] = placement_to_dict(s.placement)
     return d
+
+
+def placement_to_dict(p: PlacementSpec) -> Dict[str, Any]:
+    d: Dict[str, Any] = {
+        "candidates": [dataclasses.asdict(c) for c in p.candidates],
+        "strategy": p.strategy,
+        "maxSlices": p.max_slices,
+    }
+    if p.failover is not None:
+        d["failover"] = dataclasses.asdict(p.failover)
+    return d
+
+
+def placement_from_dict(plc: Optional[Dict[str, Any]]) -> Optional[PlacementSpec]:
+    if plc is None:
+        return None
+    fo = plc.get("failover")
+    return PlacementSpec(
+        candidates=[PlacementCandidate(
+            resourceURL=c.get("resourceURL", ""),
+            image=c.get("image", ""),
+            resourcesecret=c.get("resourcesecret", ""),
+            weight=float(c.get("weight", 1.0)),
+        ) for c in plc.get("candidates", [])],
+        strategy=plc.get("strategy", "single"),
+        max_slices=int(plc.get("maxSlices", 0)),
+        failover=None if fo is None else FailoverSpec(
+            enabled=bool(fo.get("enabled", False)),
+            unreachable_threshold=int(fo.get("unreachable_threshold", 5)),
+            grace_seconds=float(fo.get("grace_seconds", 0.0)),
+        ),
+    )
 
 
 def spec_from_dict(d: Dict[str, Any]) -> BridgeJobSpec:
@@ -421,16 +485,7 @@ def spec_from_dict(d: Dict[str, Any]) -> BridgeJobSpec:
         ),
         ttl_seconds_after_finished=None if ttl is None else float(ttl),
         dependencies=list(d.get("dependencies", [])),
-        placement=None if plc is None else PlacementSpec(
-            candidates=[PlacementCandidate(
-                resourceURL=c.get("resourceURL", ""),
-                image=c.get("image", ""),
-                resourcesecret=c.get("resourcesecret", ""),
-                weight=float(c.get("weight", 1.0)),
-            ) for c in plc.get("candidates", [])],
-            strategy=plc.get("strategy", "single"),
-            max_slices=int(plc.get("maxSlices", 0)),
-        ),
+        placement=placement_from_dict(plc),
     )
     return spec
 
@@ -686,12 +741,7 @@ def service_spec_to_dict(s: BridgeServiceSpec) -> Dict[str, Any]:
         "unknown_after": s.unknown_after,
     }
     if s.placement and s.placement.candidates:
-        d["placement"] = {
-            "candidates": [dataclasses.asdict(c)
-                           for c in s.placement.candidates],
-            "strategy": s.placement.strategy,
-            "maxSlices": s.placement.max_slices,
-        }
+        d["placement"] = placement_to_dict(s.placement)
     if s.ttl_seconds_after_finished is not None:
         d["ttlSecondsAfterFinished"] = s.ttl_seconds_after_finished
     if s.dependencies:
@@ -706,16 +756,7 @@ def service_spec_from_dict(d: Dict[str, Any]) -> BridgeServiceSpec:
     return BridgeServiceSpec(
         template=spec_from_dict(d.get("template", {})),
         replicas=int(d.get("replicas", 1)),
-        placement=None if plc is None else PlacementSpec(
-            candidates=[PlacementCandidate(
-                resourceURL=c.get("resourceURL", ""),
-                image=c.get("image", ""),
-                resourcesecret=c.get("resourcesecret", ""),
-                weight=float(c.get("weight", 1.0)),
-            ) for c in plc.get("candidates", [])],
-            strategy=plc.get("strategy", "single"),
-            max_slices=int(plc.get("maxSlices", 0)),
-        ),
+        placement=placement_from_dict(plc),
         health=HealthProbeSpec(
             failure_threshold=int(h.get("failure_threshold", 3)),
             startup_failure_threshold=int(

@@ -48,18 +48,43 @@ class HttpResponse:
 
 @dataclass
 class FaultProfile:
-    """Deterministic (seeded) fault injection for the simulated network."""
+    """Deterministic (seeded) fault injection for the simulated network.
+
+    Composable fault modes, all usable at once:
+
+      * ``drop_rate``/``latency``/``seed`` — steady-state packet loss and RTT;
+      * ``begin_outage()``/``end_outage()`` — a hard blackout, every request
+        fails until lifted;
+      * ``schedule_blackout(start_in, duration)`` — a timed blackout window
+        (``duration=None`` = until further notice), checked lazily against
+        the wall clock so chaos tests can pre-program a kill;
+      * ``schedule_flaps(...)`` — N short blackout windows on a fixed period
+        (a flapping endpoint), built from timed windows;
+      * ``fail_next(n)`` — exactly the next ``n`` requests fail, for
+        deterministic single-blip tests;
+      * ``begin_partition()``/``end_partition()`` — the request EXECUTES on
+        the server but the reply is lost (classic network partition): this
+        is the mode that exercises at-most-once handling, because the client
+        cannot tell a lost reply from a lost request.
+    """
     drop_rate: float = 0.0        # probability a request raises TransportError
     latency: float = 0.0          # fixed per-request latency (seconds)
     seed: int = 0
     # hard outage window: every request fails while ``outage`` is set
     _outage: threading.Event = field(default_factory=threading.Event, repr=False)
+    # reply-lost partition: handlers run, responses vanish
+    _partition: threading.Event = field(default_factory=threading.Event,
+                                        repr=False)
     _rng: random.Random = field(default=None, repr=False)
     # one shared seeded Random serves every concurrent caller; the lock keeps
     # each check() consuming exactly one draw so drop injection stays
     # deterministic however many pods/workers hit the server at once
     _rng_lock: threading.Lock = field(default_factory=threading.Lock,
                                       repr=False)
+    # timed blackout windows [(start, end-or-None), ...], absolute times
+    _windows: List[Tuple[float, Optional[float]]] = field(
+        default_factory=list, repr=False)
+    _fail_next: int = field(default=0, repr=False)
 
     def __post_init__(self):
         self._rng = random.Random(self.seed)
@@ -70,11 +95,57 @@ class FaultProfile:
     def end_outage(self) -> None:
         self._outage.clear()
 
+    def begin_partition(self) -> None:
+        self._partition.set()
+
+    def end_partition(self) -> None:
+        self._partition.clear()
+
+    def reply_lost(self) -> bool:
+        """Consulted by the server AFTER the handler ran: True = drop the
+        response on the floor (the partition fault mode)."""
+        return self._partition.is_set()
+
+    def schedule_blackout(self, start_in: float = 0.0,
+                          duration: Optional[float] = None) -> None:
+        """Blackout every request in the window ``[now+start_in, now+
+        start_in+duration)``; ``duration=None`` never ends."""
+        start = time.time() + start_in
+        end = None if duration is None else start + duration
+        with self._rng_lock:
+            self._windows.append((start, end))
+
+    def schedule_flaps(self, start_in: float, count: int, down_for: float,
+                       up_for: float) -> None:
+        """A flapping endpoint: ``count`` blackouts of ``down_for`` seconds,
+        one every ``down_for + up_for`` seconds, starting at ``start_in``."""
+        for i in range(count):
+            self.schedule_blackout(start_in + i * (down_for + up_for),
+                                   down_for)
+
+    def fail_next(self, n: int = 1) -> None:
+        """Fail exactly the next ``n`` requests (deterministic blip)."""
+        with self._rng_lock:
+            self._fail_next += n
+
+    def _in_blackout_window(self, now: float) -> bool:
+        with self._rng_lock:
+            for start, end in self._windows:
+                if start <= now and (end is None or now < end):
+                    return True
+        return False
+
     def check(self) -> None:
         if self.latency:
             time.sleep(self.latency)
         if self._outage.is_set():
             raise TransportError("simulated network outage")
+        if self._windows and self._in_blackout_window(time.time()):
+            raise TransportError("simulated network outage (scheduled)")
+        with self._rng_lock:
+            if self._fail_next > 0:
+                self._fail_next -= 1
+                raise TransportError("simulated transient blip")
         if self.drop_rate:
             with self._rng_lock:
                 drop = self._rng.random() < self.drop_rate
@@ -164,6 +235,10 @@ class RestServer:
                     resp = HttpResponse(500,
                                         {"error": f"{type(e).__name__}: {e}"})
                 self._count(key, error=resp.status >= 400)
+                # partition: the handler RAN (side effects happened) but the
+                # reply never reaches the client — at-most-once territory
+                if self.fault.reply_lost():
+                    raise TransportError("simulated partition: reply lost")
                 return resp
         self._count("(unmatched)", error=True)
         return HttpResponse(404, {"error": f"no route {method} {path}"})
@@ -178,31 +253,57 @@ class Channel:
     the cross-client memo cache live.
     """
 
+    # bounded retry for idempotent reads: a GET that dies in transport is
+    # retried in-call with exponential backoff + seeded jitter, so ONE
+    # transient blip costs one in-tick retry instead of a failed poll (and a
+    # bump of the slice's UNKNOWN counter).  Writes are never retried here —
+    # submit/cancel idempotency is owned by the protocol layer.
+    GET_RETRIES = 2
+    RETRY_BACKOFF = 0.005
+
     def __init__(self, server: RestServer, url: str = ""):
         self._server = server
         self.url = url
         self.requests = 0
         self.errors = 0
+        self.retries = 0
         self._lock = threading.Lock()
+        self._retry_rng = random.Random(hash(url) & 0xFFFF)
         self._memo: Dict[str, Tuple[Any, float]] = {}
         self._memo_gates: Dict[str, threading.Lock] = {}
 
     def request(self, method: str, path: str, json: Any = None,
                 headers: Optional[Dict[str, str]] = None,
                 timeout: Optional[float] = None) -> HttpResponse:
-        try:
-            resp = self._server.handle(method, path, json, headers,
-                                       timeout=timeout)
-        except Exception:
+        attempts = 1 + (self.GET_RETRIES if method.upper() == "GET" else 0)
+        for attempt in range(attempts):
+            try:
+                resp = self._server.handle(method, path, json, headers,
+                                           timeout=timeout)
+            except TransportError:
+                with self._lock:
+                    self.requests += 1
+                    self.errors += 1
+                    if attempt + 1 < attempts:
+                        self.retries += 1
+                        backoff = (self.RETRY_BACKOFF * (2 ** attempt)
+                                   * (1.0 + self._retry_rng.random()))
+                    else:
+                        backoff = None
+                if backoff is None:
+                    raise
+                time.sleep(backoff)
+                continue
+            except Exception:
+                with self._lock:
+                    self.requests += 1
+                    self.errors += 1
+                raise
             with self._lock:
                 self.requests += 1
-                self.errors += 1
-            raise
-        with self._lock:
-            self.requests += 1
-            if resp.status >= 400:
-                self.errors += 1
-        return resp
+                if resp.status >= 400:
+                    self.errors += 1
+            return resp
 
     def memo(self, key: str, max_age: float, compute: Callable[[], Any]) -> Any:
         """Endpoint-wide response cache with single-flight refresh: however

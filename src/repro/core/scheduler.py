@@ -201,6 +201,28 @@ def plan_slices(count: int, candidates: List[Candidate],
     return plan
 
 
+def plan_failover(count: int, candidates: List[Candidate],
+                  probe: LoadProbe, strategy: str = "spread",
+                  max_slices: int = 0,
+                  exclude_urls: "Optional[set]" = None) -> List[Dict[str, Any]]:
+    """Re-plan ``count`` evacuated indices over the candidates that are
+    healthy RIGHT NOW.  Unlike initial placement this is never optimistic:
+    candidates whose endpoint is lost (``exclude_urls``) or whose probe
+    fails are dropped outright, and an empty list means "nowhere to go" —
+    the caller keeps the CR UNKNOWN rather than resubmitting into a black
+    hole."""
+    exclude = exclude_urls or set()
+    cands = [c for c in candidates if c.resourceURL not in exclude]
+    if not cands:
+        return []
+    loads = probe.query_all(cands)
+    healthy = [(c, q) for c, q in zip(cands, loads) if q is not None]
+    if not healthy:
+        return []
+    return plan_slices(count, [c for c, _ in healthy],
+                       [q for _, q in healthy], strategy, max_slices)
+
+
 def plan_placement(count: int, placement: PlacementSpec,
                    probe: LoadProbe) -> List[Dict[str, Any]]:
     """``plan_slices`` for a ``spec.placement`` block: probe every candidate

@@ -1,0 +1,468 @@
+"""Slice failover: sustained resource failure is detected, the LOST slice's
+unfinished indices migrate to the surviving candidates, and the whole dance
+is exercised under deterministic fault injection.
+
+The invariants under test:
+
+  * a permanent blackout of one candidate (endpoint dark + cluster powered
+    off) ends in COMPLETED, not UNKNOWN: every index of the desired set ran
+    to completion EXACTLY once while live, the dead slice is reported LOST
+    with ``migratedTo``, and completed indices' results survive on it;
+  * a transient flap below ``unreachableThreshold`` does NOT migrate — the
+    job completes on its original placement with zero evacuations;
+  * killing the operator pod mid-evacuation loses nothing: the replacement
+    pod resumes the persisted migration (LOST flags, orphan ledger, index
+    holes) and still converges to COMPLETED with at-most-once semantics;
+  * when the LAST candidate dies too there is nowhere to evacuate: the CR
+    stays pinned UNKNOWN (black-box honesty) and the message names the
+    unreachable endpoint;
+  * with failover disabled (the default) the config-map shape is unchanged
+    byte-for-byte — no failover keys, no orphans ledger, today's behaviour;
+  * per-slice degradation (failures / lastError / outageSeconds) surfaces
+    through ``status.placements`` BEFORE any threshold trips;
+  * the transport layer retries idempotent GETs in-call (bounded, jittered
+    backoff), so one blip never bumps a slice's UNKNOWN counter.
+"""
+import json
+import time
+
+import pytest
+
+from repro.core import (ArraySpec, BridgeEnvironment, DONE, FailoverSpec,
+                        FaultProfile, IMAGES, LOST, PlacementCandidate,
+                        PlacementSpec, UNKNOWN, URLS)
+from repro.core.backends import base as B
+from repro.core.rest import Channel, RestServer, TransportError
+
+MODES = ["multiplexed", "pod-per-cr"]
+OPERATORS = [(m, "fixed") for m in MODES] + [
+    ("multiplexed", "adaptive"), ("multiplexed", "watch")]
+
+
+def _wait(predicate, timeout=30, interval=0.005):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if predicate():
+            return True
+        time.sleep(interval)
+    return False
+
+
+def _ids(handle):
+    return [s for s in handle.status().job_id.split(",") if s]
+
+
+def _placement(kinds, failover=None, strategy="spread"):
+    return PlacementSpec(candidates=[
+        PlacementCandidate(URLS[k], IMAGES[k], f"{k}-secret")
+        for k in kinds], strategy=strategy, failover=failover)
+
+
+def _index_of(cluster_job):
+    p = cluster_job.params
+    if "SLURM_ARRAY_TASK_ID" in p:
+        return int(p["SLURM_ARRAY_TASK_ID"])
+    if "BRIDGE_ARRAY_INDEX" in p:
+        return int(p["BRIDGE_ARRAY_INDEX"])
+    if "LSB_JOBINDEX" in p:
+        return int(p["LSB_JOBINDEX"]) - 1
+    return None
+
+
+def _completions_per_index(env, kinds):
+    """index -> number of COMPLETED runs across the given clusters."""
+    runs = {}
+    for k in kinds:
+        for job in env.clusters[k].jobs.values():
+            if job.state == B.COMPLETED:
+                idx = _index_of(job)
+                runs[idx] = runs.get(idx, 0) + 1
+    return runs
+
+
+def _assert_migrated_clean(env, h, count, dead="slurm", kinds=("slurm", "lsf")):
+    """The shared post-blackout invariant bundle: COMPLETED CR, full desired
+    set, at-most-once completions, LOST slice reported with migratedTo."""
+    job = h.wait(timeout=120)
+    assert job.status.state == DONE, job.status.message
+    assert sorted(job.status.index_states, key=int) == [
+        str(i) for i in range(count)]
+    assert set(job.status.index_states.values()) == {DONE}
+    # at-most-once-while-live: every index ran to completion EXACTLY once
+    runs = _completions_per_index(env, kinds)
+    assert sorted(runs) == list(range(count)), "final results == desired set"
+    assert set(runs.values()) == {1}, f"duplicated completions: {runs}"
+    placements = h.placements()
+    lost = [p for p in placements if p["state"] == LOST]
+    assert len(lost) == 1 and lost[0]["resourceURL"] == URLS[dead]
+    assert URLS[dead] not in lost[0]["migratedTo"]
+    assert lost[0]["migratedTo"], "LOST slice records where its work went"
+    # completed indices' results were kept on the dead slice, the rest moved
+    survivors = [p for p in placements if p["state"] != LOST]
+    union = sorted(i for p in placements for i in p["indices"])
+    assert union == list(range(count))
+    assert all(i not in lost[0]["indices"]
+               for p in survivors for i in p["indices"])
+
+
+# ---------------------------------------------------------------------------
+# tentpole: permanent blackout migrates, zero lost / duplicated indices
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode,cadence", OPERATORS)
+def test_blackout_migrates_unfinished_indices(mode, cadence):
+    """Kill one of two resources mid-array (endpoint blackout + cluster
+    power-off): the slice is promoted LOST after the policy threshold and
+    its unfinished indices finish on the survivor, exactly once each."""
+    fp = FaultProfile(seed=7)
+    with BridgeEnvironment(default_duration=0.3, slots=8,
+                           fault_profiles={"slurm": fp},
+                           operator_kwargs={"mode": mode,
+                                            "cadence": cadence}) as env:
+        count = 12
+        h = env.bridge.submit("chaos", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "0.3"},
+            array=ArraySpec(count=count),
+            placement=_placement(
+                ["slurm", "lsf"],
+                failover=FailoverSpec(enabled=True, unreachable_threshold=3,
+                                      grace_seconds=0.0))))
+        # let the whole fan-out land, then kill the slurm resource for good
+        assert _wait(lambda: len(_ids(h)) == count, timeout=60)
+        fp.schedule_blackout(start_in=0.0, duration=None)
+        env.clusters["slurm"].power_off()
+        _assert_migrated_clean(env, h, count)
+        # the evacuation is durable: LOST flag and plan survive in the cm
+        cm = env.statestore.get("default/chaos-bridge-cm").data
+        defs = json.loads(cm["slices"])
+        assert [d.get("lost", False) for d in defs][0] is True
+
+
+def test_blackout_with_completed_indices_keeps_their_results():
+    """Indices that finished on the dying slice before the blackout are NOT
+    re-run: their pairs (and results) stay on the LOST slice."""
+    fp = FaultProfile(seed=3)
+    with BridgeEnvironment(default_duration=0.05, slots=8,
+                           fault_profiles={"slurm": fp}) as env:
+        # no WallSeconds: each cluster's default_duration rules, so slurm's
+        # share finishes fast while lsf's is still running at blackout time
+        env.clusters["slurm"].default_duration = 0.05
+        env.clusters["lsf"].default_duration = 0.6
+        count = 8
+        h = env.bridge.submit("keepres", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            array=ArraySpec(count=count),
+            placement=_placement(
+                ["slurm", "lsf"],
+                failover=FailoverSpec(enabled=True, unreachable_threshold=3))))
+
+        def slurm_share_done_and_observed():
+            jobs = env.clusters["slurm"].jobs
+            return bool(jobs) and len(_ids(h)) == count and all(
+                j.state == B.COMPLETED
+                and h.status().index_states.get(str(_index_of(j))) == DONE
+                for j in jobs.values())
+        assert _wait(slurm_share_done_and_observed, timeout=60)
+        done_before = {_index_of(j)
+                       for j in env.clusters["slurm"].jobs.values()}
+        fp.schedule_blackout()
+        env.clusters["slurm"].power_off()
+        job = h.wait(timeout=120)
+        assert job.status.state == DONE, job.status.message
+        lost = [p for p in h.placements() if p["state"] == LOST][0]
+        # everything that completed on slice 0 before the kill is still
+        # listed there — completed work is never evacuated or duplicated
+        assert set(lost["indices"]) == done_before
+        runs = _completions_per_index(env, ("slurm", "lsf"))
+        assert sorted(runs) == list(range(count))
+        assert set(runs.values()) == {1}
+
+
+# ---------------------------------------------------------------------------
+# transient flap below the threshold: no migration
+# ---------------------------------------------------------------------------
+
+
+def test_flap_below_threshold_does_not_migrate():
+    """A flapping endpoint (short down windows, each under the threshold)
+    degrades but never trips failover: the job completes on its original
+    placement, no slice goes LOST, no orphan ledger appears."""
+    fp = FaultProfile(seed=11)
+    with BridgeEnvironment(default_duration=0.1, slots=8,
+                           fault_profiles={"slurm": fp}) as env:
+        count = 8
+        h = env.bridge.submit("flap", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "0.1"},
+            array=ArraySpec(count=count),
+            placement=_placement(
+                ["slurm", "lsf"],
+                failover=FailoverSpec(enabled=True,
+                                      unreachable_threshold=25))))
+        assert _wait(lambda: len(_ids(h)) == count, timeout=60)
+        # three 60 ms blackouts: ~3 failed polls each, far below 25
+        fp.schedule_flaps(start_in=0.0, count=3, down_for=0.06, up_for=0.06)
+        job = h.wait(timeout=120)
+        assert job.status.state == DONE, job.status.message
+        assert all(p["state"] != LOST for p in h.placements())
+        cm = env.statestore.get("default/flap-bridge-cm").data
+        assert "orphans" not in cm
+        assert not any(d.get("lost") for d in json.loads(cm["slices"]))
+        runs = _completions_per_index(env, ("slurm", "lsf"))
+        assert sorted(runs) == list(range(count))
+        assert set(runs.values()) == {1}
+
+
+# ---------------------------------------------------------------------------
+# chaos: operator pod killed mid-evacuation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_pod_killed_mid_evacuation_resumes_cleanly(mode):
+    """Kill the controller pod the moment the evacuation is committed to the
+    config map: the replacement resumes from the persisted LOST flags and
+    index holes, and the job still converges with at-most-once semantics."""
+    fp = FaultProfile(seed=23)
+    with BridgeEnvironment(default_duration=0.3, slots=8,
+                           fault_profiles={"slurm": fp},
+                           operator_kwargs={"mode": mode}) as env:
+        count = 10
+        h = env.bridge.submit("midkill", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "0.3"},
+            array=ArraySpec(count=count),
+            placement=_placement(
+                ["slurm", "lsf"],
+                failover=FailoverSpec(enabled=True, unreachable_threshold=3))))
+        assert _wait(lambda: len(_ids(h)) == count, timeout=60)
+        fp.schedule_blackout()
+        env.clusters["slurm"].power_off()
+        # the evacuation commit writes the LOST flag + orphan ledger first;
+        # kill the pod as soon as that lands (resubmissions may be anywhere
+        # between none and all — exactly the window that must be safe)
+        cm_name = "default/midkill-bridge-cm"
+        assert _wait(lambda: any(
+            d.get("lost") for d in json.loads(
+                env.statestore.get(cm_name).get("slices") or "[]")),
+            timeout=60)
+        env.operator.pods["default/midkill"].kill_pod()
+        _assert_migrated_clean(env, h, count)
+
+
+# ---------------------------------------------------------------------------
+# nowhere to go: last candidate dead keeps the CR UNKNOWN
+# ---------------------------------------------------------------------------
+
+
+def test_last_candidate_dead_stays_unknown_with_endpoint_in_message():
+    """When EVERY other candidate is dark too there is nowhere to evacuate:
+    the slice is NOT promoted (black-box honesty — a promotion we cannot act
+    on would just lie), the CR pins UNKNOWN and the message names the
+    unreachable endpoint and outage duration."""
+    fps = {"slurm": FaultProfile(seed=5), "lsf": FaultProfile(seed=6)}
+    with BridgeEnvironment(default_duration=60, slots=8,
+                           fault_profiles=fps) as env:
+        count = 6
+        h = env.bridge.submit("stuck", env.make_spec(
+            "slurm", script="member", updateinterval=0.02, unknown_after=3,
+            jobproperties={"WallSeconds": "60"},
+            array=ArraySpec(count=count),
+            placement=_placement(
+                ["slurm", "lsf"],
+                failover=FailoverSpec(enabled=True, unreachable_threshold=3))))
+        assert _wait(lambda: len(_ids(h)) == count, timeout=60)
+        for k in ("slurm", "lsf"):
+            fps[k].schedule_blackout()
+            env.clusters[k].power_off()
+        assert _wait(lambda: h.status().state == UNKNOWN, timeout=60)
+        # ... and it STAYS unknown: no candidate is reachable, so failover
+        # must not fire (nothing is promoted, nothing evacuated)
+        time.sleep(0.3)
+        st = h.status()
+        assert st.state == UNKNOWN
+        assert "resource unreachable" in st.message
+        assert URLS["slurm"] in st.message or URLS["lsf"] in st.message, \
+            "message names the dead endpoint"
+        assert "failed polls" in st.message
+        assert all(p["state"] != LOST for p in h.placements())
+        cm = env.statestore.get("default/stuck-bridge-cm").data
+        assert "orphans" not in cm
+
+
+# ---------------------------------------------------------------------------
+# compat: failover off == today's config-map shape, byte for byte
+# ---------------------------------------------------------------------------
+
+
+def test_failover_disabled_keeps_configmap_shape():
+    """A placement spec without failover — and one with an explicitly
+    disabled FailoverSpec — both produce a cm with NO failover keys: the
+    feature is invisible until opted into."""
+    with BridgeEnvironment(default_duration=0.05, slots=8) as env:
+        specs = {
+            "plaino": _placement(["slurm", "lsf"]),
+            "offo": _placement(["slurm", "lsf"],
+                               failover=FailoverSpec(enabled=False)),
+        }
+        for name, plc in specs.items():
+            h = env.bridge.submit(name, env.make_spec(
+                "slurm", script="member", updateinterval=0.02,
+                jobproperties={"WallSeconds": "0.05"},
+                array=ArraySpec(count=4), placement=plc))
+            assert h.wait(timeout=60).status.state == DONE
+        for name in specs:
+            cm = env.statestore.get(f"default/{name}-bridge-cm").data
+            for key in ("failover_threshold", "failover_grace", "candidates",
+                        "placement_strategy", "orphans"):
+                assert key not in cm, f"{key} leaked into {name}"
+        assert set(env.statestore.get("default/plaino-bridge-cm").data) == \
+            set(env.statestore.get("default/offo-bridge-cm").data)
+
+
+def test_failover_enabled_writes_policy_keys():
+    """Opting in persists the policy (threshold/grace/candidates/strategy)
+    so a restarted pod enforces the same policy the spec asked for."""
+    with BridgeEnvironment(default_duration=0.05, slots=8) as env:
+        h = env.bridge.submit("keyed", env.make_spec(
+            "slurm", script="member", updateinterval=0.02,
+            jobproperties={"WallSeconds": "0.05"},
+            array=ArraySpec(count=4),
+            placement=_placement(
+                ["slurm", "lsf"],
+                failover=FailoverSpec(enabled=True, unreachable_threshold=7,
+                                      grace_seconds=0.5))))
+        assert _wait(
+            lambda: env.statestore.exists("default/keyed-bridge-cm"))
+        cm = env.statestore.get("default/keyed-bridge-cm").data
+        assert cm["failover_threshold"] == "7"
+        assert cm["failover_grace"] == "0.5"
+        assert cm["placement_strategy"] == "spread"
+        cands = json.loads(cm["candidates"])
+        assert [c["resourceURL"] for c in cands] == [URLS["slurm"],
+                                                     URLS["lsf"]]
+        assert h.wait(timeout=60).status.state == DONE
+
+
+def test_failover_spec_roundtrip_and_validation():
+    from repro.core.resource import (placement_from_dict, placement_to_dict)
+    plc = _placement(["slurm"], failover=FailoverSpec(
+        enabled=True, unreachable_threshold=4, grace_seconds=1.5))
+    again = placement_from_dict(placement_to_dict(plc))
+    assert again.failover == plc.failover
+    assert placement_to_dict(_placement(["slurm"])).get("failover") is None
+    with pytest.raises(ValueError):
+        FailoverSpec(unreachable_threshold=0).validate()
+    with pytest.raises(ValueError):
+        FailoverSpec(grace_seconds=-1).validate()
+
+
+# ---------------------------------------------------------------------------
+# degradation surfaces before any threshold trips
+# ---------------------------------------------------------------------------
+
+
+def test_degradation_surfaces_in_placements_before_failover():
+    """An outage shorter than the failover policy still shows up: the slice
+    reports failures/lastError/outageSeconds through status.placements, and
+    the UNKNOWN message names the endpoint — then the job completes once the
+    outage lifts, with nothing migrated."""
+    fp = FaultProfile(seed=2)
+    with BridgeEnvironment(default_duration=0.4, slots=8,
+                           fault_profiles={"slurm": fp}) as env:
+        count = 6
+        h = env.bridge.submit("degrade", env.make_spec(
+            "slurm", script="member", updateinterval=0.02, unknown_after=3,
+            jobproperties={"WallSeconds": "0.4"},
+            array=ArraySpec(count=count),
+            placement=_placement(["slurm", "lsf"])))  # no failover at all
+        assert _wait(lambda: len(_ids(h)) == count, timeout=60)
+        fp.begin_outage()
+
+        def degraded():
+            pl = h.placements()
+            return pl and pl[0].get("failures", 0) >= 1 and \
+                pl[0].get("lastError")
+        assert _wait(degraded, timeout=60)
+        assert _wait(lambda: h.status().state == UNKNOWN, timeout=60)
+        msg = h.status().message
+        assert "slice 0 resource unreachable" in msg
+        assert URLS["slurm"] in msg and "failed polls" in msg
+        pl = h.placements()
+        assert pl[0]["outageSeconds"] > 0
+        fp.end_outage()
+        job = h.wait(timeout=120)
+        assert job.status.state == DONE, job.status.message
+        # healthy again: the degradation keys disappear from the snapshot
+        assert all("failures" not in p and "lastError" not in p
+                   for p in h.placements())
+        assert all(p["state"] != LOST for p in h.placements())
+
+
+# ---------------------------------------------------------------------------
+# transport: bounded GET retry + reply-lost partitions
+# ---------------------------------------------------------------------------
+
+
+def test_channel_retries_idempotent_gets_once_per_blip():
+    fp = FaultProfile()
+    srv = RestServer(fault=fp)
+    hits = {"GET": 0, "POST": 0}
+
+    def ping(groups, body):
+        hits["GET"] += 1
+        from repro.core.rest import HttpResponse
+        return HttpResponse(200, {"ok": True})
+
+    def poke(groups, body):
+        hits["POST"] += 1
+        from repro.core.rest import HttpResponse
+        return HttpResponse(200, {"ok": True})
+
+    srv.route("GET", "/ping", ping)
+    srv.route("POST", "/poke", poke)
+    ch = Channel(srv, url="http://unit")
+
+    # one blip: the GET retries in-call and succeeds
+    fp.fail_next(1)
+    assert ch.request("GET", "/ping").status == 200
+    assert ch.retries == 1 and hits["GET"] == 1
+
+    # blips exceeding the budget (1 + GET_RETRIES) surface as the error
+    fp.fail_next(1 + Channel.GET_RETRIES)
+    with pytest.raises(TransportError):
+        ch.request("GET", "/ping")
+
+    # writes are NEVER retried by the transport (idempotency is the
+    # protocol layer's job): one blip = one failure, handler untouched
+    before = ch.retries
+    fp.fail_next(1)
+    with pytest.raises(TransportError):
+        ch.request("POST", "/poke")
+    assert ch.retries == before and hits["POST"] == 0
+
+
+def test_partition_runs_handler_but_loses_reply():
+    """begin_partition(): the request EXECUTES server-side but the client
+    sees a TransportError — the at-most-once hazard failover must respect.
+    A GET rides its in-call retries; each retry re-runs the handler."""
+    fp = FaultProfile()
+    srv = RestServer(fault=fp)
+    hits = {"n": 0}
+
+    def ping(groups, body):
+        hits["n"] += 1
+        from repro.core.rest import HttpResponse
+        return HttpResponse(200, {"n": hits["n"]})
+
+    srv.route("GET", "/ping", ping)
+    ch = Channel(srv, url="http://part")
+    fp.begin_partition()
+    with pytest.raises(TransportError):
+        ch.request("GET", "/ping")
+    assert hits["n"] == 1 + Channel.GET_RETRIES, \
+        "handler ran despite every reply being lost"
+    fp.end_partition()
+    assert ch.request("GET", "/ping").json["n"] == hits["n"]
