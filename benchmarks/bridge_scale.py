@@ -305,6 +305,143 @@ def run_service_case(mode: str, *, replicas: int = 4, threads: int = 4,
         env.stop()
 
 
+def run_autoscale_case(mode: str, *, min_replicas: int = 2,
+                       max_replicas: int = 8, threads: int = 16,
+                       serve_latency: float = 0.05,
+                       up_cooldown: float = 0.15, down_cooldown: float = 0.3,
+                       light_s: float = 1.5, heavy_s: float = 1.5,
+                       interval: float = 0.02) -> dict:
+    """Load-driven autoscaling scenario (``spec.autoscale``): replicas
+    spread over TWO resource managers, request load ramped up in two stages
+    (light -> ``threads`` concurrent clients, a ~4x swing against the
+    outstanding-per-replica target) and then dropped to zero.  Measures the
+    scale-up/scale-down tracking latency and asserts the tentpole contract
+    right here: replicas reach ``maxReplicas`` within the cooldown budget,
+    fall back to ``minReplicas`` once the routers go quiet, and no request
+    is lost across any resize or drain."""
+    from repro.core import (AutoscaleSpec, HealthProbeSpec, IMAGES,
+                            PlacementCandidate, PlacementSpec, URLS)
+
+    env = BridgeEnvironment(slots=max_replicas * 2,
+                            operator_kwargs={"mode": mode})
+    try:
+        env.start()
+        autoscale = AutoscaleSpec(
+            min_replicas=min_replicas, max_replicas=max_replicas,
+            target_outstanding_per_replica=1.0,
+            scale_up_cooldown_seconds=up_cooldown,
+            scale_down_cooldown_seconds=down_cooldown)
+        placement = PlacementSpec(candidates=[
+            PlacementCandidate(URLS[k], IMAGES[k], f"{k}-secret")
+            for k in ("slurm", "lsf")], strategy="spread")
+        h = env.bridge.submit_service("svc-autoscale", env.make_service_spec(
+            "slurm", replicas=min_replicas, script="serve",
+            updateinterval=interval,
+            health=HealthProbeSpec(failure_threshold=3,
+                                   startup_failure_threshold=50),
+            jobproperties={"ServeLatency": str(serve_latency)},
+            placement=placement, autoscale=autoscale))
+        h.wait_ready(timeout=60)
+        router = h.router(request_timeout=60, report_interval=0.1)
+
+        stop = threading.Event()
+        gate = threading.Semaphore(0)  # admits traffic threads in stages
+        lock = threading.Lock()
+        failures: list = []
+        done: list = []
+
+        def traffic(tid: int) -> None:
+            gate.acquire()
+            i = 0
+            while not stop.is_set():
+                try:
+                    out = router.request({"t": tid, "i": i})
+                    if out["echo"] != {"t": tid, "i": i}:
+                        with lock:
+                            failures.append(("bad-echo", out))
+                    else:
+                        with lock:
+                            done.append(1)
+                except Exception as exc:
+                    with lock:
+                        failures.append(("error", repr(exc)))
+                i += 1
+
+        ths = [threading.Thread(target=traffic, args=(t,))
+               for t in range(threads)]
+        for t in ths:
+            t.start()
+
+        # stage 1: light load (a quarter of the clients)
+        gate.release(max(threads // 4, 1))
+        time.sleep(light_s)
+        replicas_light = h.ready_replicas()
+
+        # stage 2: full load — the ~4x ramp the autoscaler must chase to max
+        t_ramp = time.time()
+        gate.release(threads - max(threads // 4, 1))
+        up_deadline = time.time() + 60
+        while time.time() < up_deadline:
+            if h.ready_replicas() == max_replicas:
+                break
+            time.sleep(0.01)
+        ramp_to_max = time.time() - t_ramp
+        if h.ready_replicas() != max_replicas:
+            raise RuntimeError(
+                f"autoscale never reached max under full load: "
+                f"ready={h.ready_replicas()} status={h.autoscale_status()}")
+        # straight-to-target scaling: the whole ramp is a handful of cooldown-
+        # gated decisions plus replica spin-up; budget it with CI slack
+        up_budget = max_replicas * up_cooldown + 10.0
+        if ramp_to_max > up_budget:
+            raise RuntimeError(f"scale-up took {ramp_to_max:.2f}s "
+                               f"(budget {up_budget:.2f}s)")
+        time.sleep(heavy_s)
+
+        # stage 3: idle — reports expire, the service must fall to the floor
+        t_idle = time.time()
+        stop.set()
+        for t in ths:
+            t.join(timeout=60)
+        down_deadline = time.time() + 60
+        while time.time() < down_deadline:
+            if h.ready_replicas() == min_replicas:
+                break
+            time.sleep(0.01)
+        idle_to_min = time.time() - t_idle
+        if h.ready_replicas() != min_replicas:
+            raise RuntimeError(
+                f"autoscale never returned to min when idle: "
+                f"ready={h.ready_replicas()} status={h.autoscale_status()}")
+        # report TTL (staleness bound) + down cooldown + drain, with slack
+        down_budget = 1.0 + down_cooldown + 10.0
+        if idle_to_min > down_budget:
+            raise RuntimeError(f"scale-down took {idle_to_min:.2f}s "
+                               f"(budget {down_budget:.2f}s)")
+        if failures:
+            raise RuntimeError(
+                f"lost/failed requests across the ramp: {failures[:3]}")
+
+        status = h.autoscale_status()
+        return {
+            "label": f"{mode}/autoscale-{min_replicas}to{max_replicas}",
+            "mode": mode,
+            "min_replicas": min_replicas, "max_replicas": max_replicas,
+            "threads": threads,
+            "target_outstanding_per_replica": 1.0,
+            "up_cooldown_s": up_cooldown, "down_cooldown_s": down_cooldown,
+            "replicas_light_load": replicas_light,
+            "reached_max": True, "returned_to_min": True,
+            "ramp_to_max_s": round(ramp_to_max, 3),
+            "idle_to_min_s": round(idle_to_min, 3),
+            "requests_total": len(done),
+            "errors": len(failures),
+            "final_desired": status.get("desired"),
+        }
+    finally:
+        env.stop()
+
+
 def _coarse_payload(job, cluster) -> int:
     """Event-wait job body for the large-fleet scenario: identical
     semantics to sleep_payload's run-for-WallSeconds, but waiting on the
@@ -594,6 +731,8 @@ def main() -> int:
         sliced = dict(count=16, slurm_slots=4, lsf_slots=2, duration=0.2)
         event = dict(crs=32, interval=0.2, dur_lo=1.5, dur_hi=2.5)
         service = dict(replicas=4, threads=4, warm_s=0.5, post_s=0.5)
+        autoscale = dict(min_replicas=2, max_replicas=4, threads=8,
+                         light_s=0.8, heavy_s=0.8)
         failover = dict(count=8, threshold=3, interval=0.02, duration=0.4)
     else:
         counts, cr_counts = [1, 64, 256], [1, 16, 64]
@@ -607,6 +746,8 @@ def main() -> int:
         # staggered drain (constant churn, the conservative re-poll path)
         event = dict(crs=1000, interval=0.5, dur_lo=6.0, dur_hi=8.0)
         service = dict(replicas=6, threads=8, warm_s=2.0, post_s=2.0)
+        autoscale = dict(min_replicas=2, max_replicas=8, threads=16,
+                         light_s=1.5, heavy_s=1.5)
         failover = dict(count=32, threshold=3, interval=0.02, duration=1.0)
 
     baseline_count = counts[-1]
@@ -618,7 +759,7 @@ def main() -> int:
                "array_scaling": [], "baselines": [], "cr_scaling": [],
                "cr_scaling_event": [], "single_job": [], "resize": [],
                "sliced_placement": [], "service_scale": [],
-               "slice_failover": []}
+               "service_autoscale": [], "slice_failover": []}
 
     print("== array scaling (one CR, N indices) ==")
     for mode in MODES:
@@ -724,6 +865,15 @@ def main() -> int:
               f"recover={r['recovery_s']:>6.3f}s "
               f"dead-routed={r['requests_to_dead_after_drop']}")
 
+    print("== service autoscale (4x load ramp, scale to max, idle to min) ==")
+    for mode in MODES:
+        r = run_autoscale_case(mode, **autoscale)
+        results["service_autoscale"].append(r)
+        print(f"  {r['label']:<24} "
+              f"ramp={r['ramp_to_max_s']:>6.3f}s "
+              f"idle={r['idle_to_min_s']:>6.3f}s "
+              f"req={r['requests_total']:>5} errors={r['errors']}")
+
     print("== slice failover (kill one of two resources mid-array) ==")
     for mode in MODES:
         r = run_failover_case(mode, **failover)
@@ -789,6 +939,14 @@ def main() -> int:
                         "requests_to_dead_after_drop":
                             r["requests_to_dead_after_drop"]}
             for r in results["service_scale"]},
+        "service_autoscale": {
+            r["mode"]: {"ramp_to_max_s": r["ramp_to_max_s"],
+                        "idle_to_min_s": r["idle_to_min_s"],
+                        "reached_max": r["reached_max"],
+                        "returned_to_min": r["returned_to_min"],
+                        "requests_total": r["requests_total"],
+                        "errors": r["errors"]}
+            for r in results["service_autoscale"]},
         "slice_failover": {
             r["mode"]: {"detection_s": r["detection_s"],
                         "evacuation_s": r["evacuation_s"],
@@ -816,6 +974,12 @@ def main() -> int:
                       f"p99={v['latency_p99_ms']}ms "
                       f"recover={v['recovery_s']}s"
                       for m, v in sv.items()))
+    asc = h["service_autoscale"]
+    print("service autoscale: "
+          + ", ".join(f"{m}: ramp={v['ramp_to_max_s']}s "
+                      f"idle={v['idle_to_min_s']}s "
+                      f"errors={v['errors']}"
+                      for m, v in asc.items()))
     fo = h["slice_failover"]
     print("slice failover: "
           + ", ".join(f"{m}: detect={v['detection_s']}s "

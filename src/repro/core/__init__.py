@@ -19,7 +19,8 @@ Public surface:
   ServiceHandle / ServiceEndpoint   — serving client + router (router.py)
 """
 from repro.core.resource import (API_V1ALPHA1, API_V1BETA1, API_VERSIONS,
-                                 ArraySpec, BridgeJob, BridgeJobSpec,
+                                 ArraySpec, AutoscaleSpec, BridgeJob,
+                                 BridgeJobSpec,
                                  BridgeJobStatus, BridgeService,
                                  BridgeServiceSpec, BridgeServiceStatus,
                                  ConversionError, FailoverSpec, HealthProbeSpec,

@@ -152,7 +152,11 @@ class Bridge:
                        namespace: str = "default"):
         """Create a BridgeService CR.  ``spec`` may be a
         ``BridgeServiceSpec`` or a v1beta1 spec dict; returns a
-        ``ServiceHandle`` (scale / wait_ready / router)."""
+        ``ServiceHandle`` (scale / wait_ready / autoscale_status / router).
+        With ``spec.autoscale`` set, the replica count is load-driven: the
+        handle's routers publish load reports and the control plane scales
+        within ``[minReplicas, maxReplicas]`` — a manual ``scale()`` then
+        just resets the baseline the autoscaler moves from."""
         from repro.core.resource import (BridgeService, BridgeServiceSpec,
                                          service_spec_from_dict)
         from repro.core.router import ServiceHandle

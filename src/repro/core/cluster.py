@@ -21,7 +21,8 @@ from repro.core.backends import slurm as SLB
 from repro.core.objectstore import ObjectStore
 from repro.core.operator import BridgeOperator, default_adapters
 from repro.core.registry import ResourceRegistry
-from repro.core.resource import (ArraySpec, BridgeJob, BridgeJobSpec,
+from repro.core.resource import (ArraySpec, AutoscaleSpec, BridgeJob,
+                                 BridgeJobSpec,
                                  BridgeServiceSpec, HealthProbeSpec, JobData,
                                  PlacementSpec, RetryPolicy, S3Storage)
 from repro.core.rest import FaultProfile, ResourceManagerDirectory
@@ -152,7 +153,9 @@ class BridgeEnvironment:
                           updateinterval: float = 0.02,
                           health: Optional[HealthProbeSpec] = None,
                           placement: Optional[PlacementSpec] = None,
-                          unknown_after: int = 5) -> BridgeServiceSpec:
+                          unknown_after: int = 5,
+                          autoscale: Optional[AutoscaleSpec] = None,
+                          ) -> BridgeServiceSpec:
         """BridgeService spec whose replica template targets one of the
         built-in backends (``placement`` makes ``kind`` just the fallback
         target, exactly like ``make_spec``)."""
@@ -165,7 +168,8 @@ class BridgeEnvironment:
                                  placement=placement,
                                  health=health or HealthProbeSpec(),
                                  updateinterval=updateinterval,
-                                 unknown_after=unknown_after)
+                                 unknown_after=unknown_after,
+                                 autoscale=autoscale)
 
     def submit(self, name: str, spec: BridgeJobSpec,
                namespace: str = "default") -> BridgeJob:

@@ -367,6 +367,20 @@ class BridgeOperator:
             "health_failure_threshold": str(s.health.failure_threshold),
             "health_startup_threshold": str(s.health.startup_failure_threshold),
         }
+        if s.autoscale is not None:
+            # written ONLY when spec.autoscale is set, so a plain service's
+            # config map stays byte-identical to the pre-autoscale shape
+            a = s.autoscale
+            data["autoscale_min"] = str(a.min_replicas)
+            data["autoscale_max"] = str(a.max_replicas)
+            if a.target_outstanding_per_replica is not None:
+                data["autoscale_target_outstanding"] = str(
+                    a.target_outstanding_per_replica)
+            if a.target_p99_seconds is not None:
+                data["autoscale_target_p99"] = str(a.target_p99_seconds)
+            data["autoscale_up_cooldown"] = str(a.scale_up_cooldown_seconds)
+            data["autoscale_down_cooldown"] = str(
+                a.scale_down_cooldown_seconds)
         if self.cadence != "fixed":
             data["cadence"] = self.cadence
         if t.s3storage:
@@ -461,6 +475,8 @@ class BridgeOperator:
             fields["ready_replicas"] = int(data.get("ready_replicas", "0") or 0)
             if data.get("endpoints"):
                 fields["endpoints"] = json.loads(data["endpoints"])
+            if data.get("autoscale_status"):
+                fields["autoscale"] = json.loads(data["autoscale_status"])
         if any(getattr(job.status, k) != v for k, v in fields.items()):
             self.registry.update_status(job.name, job.namespace, **fields)
 

@@ -592,6 +592,60 @@ class HealthProbeSpec:
 
 
 @dataclass(frozen=True)
+class AutoscaleSpec:
+    """spec.autoscale — load-driven replica count (default OFF).
+
+    When set, the ServiceProtocol recomputes the desired replica count each
+    reconcile tick from the load reports the request routers publish into the
+    config map (outstanding requests, request rate, p50/p99 latency) and
+    drives the delta through the SAME elastic reconcile a manual
+    ``scale()`` uses.  At least one target must be set:
+
+      * ``target_outstanding_per_replica`` — keep total in-flight requests
+        near ``target × replicas`` (queue-depth signal, HPA-ratio scaled);
+      * ``target_p99_seconds`` — keep observed p99 latency near the target.
+
+    Both signals propose a count; the larger (most demanding) wins, clamped
+    to ``[min_replicas, max_replicas]``.  ``scale_up_cooldown_seconds`` /
+    ``scale_down_cooldown_seconds`` rate-limit consecutive moves in each
+    direction (with a ±10% tolerance band for hysteresis), and the
+    autoscaler never moves while a kill, drain, or failover is in flight.
+    """
+    min_replicas: int = 1
+    max_replicas: int = 1
+    target_outstanding_per_replica: Optional[float] = None
+    target_p99_seconds: Optional[float] = None
+    scale_up_cooldown_seconds: float = 5.0
+    scale_down_cooldown_seconds: float = 30.0
+
+    def validate(self) -> None:
+        if self.min_replicas < 1:
+            raise ValidationError("spec.autoscale.minReplicas must be >= 1")
+        if self.max_replicas < self.min_replicas:
+            raise ValidationError(
+                "spec.autoscale.maxReplicas must be >= minReplicas")
+        if (self.target_outstanding_per_replica is None
+                and self.target_p99_seconds is None):
+            raise ValidationError(
+                "spec.autoscale needs targetOutstandingPerReplica and/or "
+                "targetP99Seconds")
+        if (self.target_outstanding_per_replica is not None
+                and self.target_outstanding_per_replica <= 0):
+            raise ValidationError(
+                "spec.autoscale.targetOutstandingPerReplica must be > 0")
+        if (self.target_p99_seconds is not None
+                and self.target_p99_seconds <= 0):
+            raise ValidationError(
+                "spec.autoscale.targetP99Seconds must be > 0")
+        if self.scale_up_cooldown_seconds < 0:
+            raise ValidationError(
+                "spec.autoscale.scaleUpCooldownSeconds must be >= 0")
+        if self.scale_down_cooldown_seconds < 0:
+            raise ValidationError(
+                "spec.autoscale.scaleDownCooldownSeconds must be >= 0")
+
+
+@dataclass(frozen=True)
 class BridgeServiceSpec:
     """spec of a BridgeService.
 
@@ -599,7 +653,9 @@ class BridgeServiceSpec:
     image, resourcesecret, jobdata, jobproperties, s3storage) but must not
     carry orchestration fields of its own — array/retry/placement/
     dependencies/ttl belong to the service, which fans the template out into
-    ``replicas`` live remote jobs.
+    ``replicas`` live remote jobs.  ``autoscale`` (optional) lets load
+    reports, not a human, own the replica count: ``replicas`` then only
+    seeds the initial size and must sit inside ``[min, max]``.
     """
     template: BridgeJobSpec
     replicas: int = 1
@@ -610,6 +666,7 @@ class BridgeServiceSpec:
     unknown_after: int = 5
     ttl_seconds_after_finished: Optional[float] = None
     dependencies: List[str] = field(default_factory=list)
+    autoscale: Optional[AutoscaleSpec] = None
 
     def validate(self) -> None:
         if self.replicas < 1:
@@ -646,6 +703,14 @@ class BridgeServiceSpec:
             if not dep or not isinstance(dep, str):
                 raise ValidationError(
                     f"spec.dependencies entries must be job names, got {dep!r}")
+        if self.autoscale is not None:
+            self.autoscale.validate()
+            if not (self.autoscale.min_replicas <= self.replicas
+                    <= self.autoscale.max_replicas):
+                raise ValidationError(
+                    f"spec.replicas ({self.replicas}) must sit inside "
+                    f"spec.autoscale [{self.autoscale.min_replicas}, "
+                    f"{self.autoscale.max_replicas}]")
 
 
 @dataclass
@@ -669,6 +734,9 @@ class BridgeServiceStatus:
     index_states: Dict[str, str] = field(default_factory=dict)
     observed_generation: int = 0
     placements: List[Dict[str, Any]] = field(default_factory=list)
+    # autoscaler observability (empty unless spec.autoscale is set):
+    # {desired, min, max, signals: {...}, last_scale_up, last_scale_down}
+    autoscale: Dict[str, Any] = field(default_factory=dict)
 
     def terminal(self) -> bool:
         return self.state in TERMINAL_STATES
@@ -725,6 +793,8 @@ class BridgeService:
             svc.status.observed_generation = int(status["observed_generation"])
         if status.get("endpoints"):
             svc.status.endpoints = [dict(e) for e in status["endpoints"]]
+        if status.get("autoscale"):
+            svc.status.autoscale = dict(status["autoscale"])
         if not svc.name:
             raise ValidationError("metadata.name is required")
         spec.validate()
@@ -746,6 +816,20 @@ def service_spec_to_dict(s: BridgeServiceSpec) -> Dict[str, Any]:
         d["ttlSecondsAfterFinished"] = s.ttl_seconds_after_finished
     if s.dependencies:
         d["dependencies"] = list(s.dependencies)
+    if s.autoscale is not None:
+        a = s.autoscale
+        asd: Dict[str, Any] = {
+            "minReplicas": a.min_replicas,
+            "maxReplicas": a.max_replicas,
+            "scaleUpCooldownSeconds": a.scale_up_cooldown_seconds,
+            "scaleDownCooldownSeconds": a.scale_down_cooldown_seconds,
+        }
+        if a.target_outstanding_per_replica is not None:
+            asd["targetOutstandingPerReplica"] = (
+                a.target_outstanding_per_replica)
+        if a.target_p99_seconds is not None:
+            asd["targetP99Seconds"] = a.target_p99_seconds
+        d["autoscale"] = asd
     return d
 
 
@@ -753,6 +837,22 @@ def service_spec_from_dict(d: Dict[str, Any]) -> BridgeServiceSpec:
     h = d.get("health", {})
     plc = d.get("placement")
     ttl = d.get("ttlSecondsAfterFinished")
+    asd = d.get("autoscale")
+    autoscale = None
+    if asd is not None:
+        tout = asd.get("targetOutstandingPerReplica")
+        tp99 = asd.get("targetP99Seconds")
+        autoscale = AutoscaleSpec(
+            min_replicas=int(asd.get("minReplicas", 1)),
+            max_replicas=int(asd.get("maxReplicas", 1)),
+            target_outstanding_per_replica=(
+                None if tout is None else float(tout)),
+            target_p99_seconds=None if tp99 is None else float(tp99),
+            scale_up_cooldown_seconds=float(
+                asd.get("scaleUpCooldownSeconds", 5.0)),
+            scale_down_cooldown_seconds=float(
+                asd.get("scaleDownCooldownSeconds", 30.0)),
+        )
     return BridgeServiceSpec(
         template=spec_from_dict(d.get("template", {})),
         replicas=int(d.get("replicas", 1)),
@@ -767,4 +867,5 @@ def service_spec_from_dict(d: Dict[str, Any]) -> BridgeServiceSpec:
         unknown_after=int(d.get("unknown_after", 5)),
         ttl_seconds_after_finished=None if ttl is None else float(ttl),
         dependencies=list(d.get("dependencies", [])),
+        autoscale=autoscale,
     )

@@ -27,8 +27,10 @@ raised to the caller unretried.
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 import time
+import uuid
 from collections import deque
 from typing import Any, Dict, List, Optional
 
@@ -124,6 +126,12 @@ class ServiceHandle:
     def delete(self) -> None:
         self.bridge.delete(self.name, self.namespace)
 
+    def autoscale_status(self) -> Dict[str, Any]:
+        """Mirrored autoscaler state ({} unless ``spec.autoscale`` is set):
+        ``{desired, min, max, signals: {outstanding, p99_s, reports},
+        last_scale_up, last_scale_down}``."""
+        return dict(self.status().autoscale or {})
+
     def router(self, **kwargs) -> "ServiceEndpoint":
         return ServiceEndpoint(self.bridge, self.name, self.namespace,
                                **kwargs)
@@ -135,7 +143,10 @@ class ServiceEndpoint:
     def __init__(self, bridge: Any, name: str, namespace: str = "default",
                  request_timeout: float = 30.0,
                  suspend_ttl: float = 0.5,
-                 latency_window: int = 256):
+                 latency_window: int = 256,
+                 report_interval: float = 0.25,
+                 report_load: Optional[bool] = None,
+                 retired_window: int = 16):
         self.bridge = bridge
         self.name = name
         self.namespace = namespace
@@ -149,6 +160,17 @@ class ServiceEndpoint:
         self._down: Dict[str, float] = {}
         # job_id -> live counters for THIS replica incarnation
         self._stats: Dict[str, Dict[str, Any]] = {}
+        # last N replaced incarnations' counters (stats() still reports a
+        # recently-dead jid; the ring bound is what stops unbounded growth)
+        self._retired: deque = deque(maxlen=retired_window)
+        # load reporting (the autoscaler's input): None = only when the
+        # service declares spec.autoscale; True/False force it either way
+        self._report_load = report_load
+        self._report_interval = report_interval
+        self._router_id = uuid.uuid4().hex[:8]
+        self._next_report = 0.0
+        self._last_report_ts = 0.0
+        self._last_report_requests = 0
 
     # -- endpoint resolution ----------------------------------------------
 
@@ -158,6 +180,20 @@ class ServiceEndpoint:
             raise KeyError(
                 f"BridgeService {self.namespace}/{self.name} not found")
         now = time.time()
+        current = {e["job_id"] for e in svc.status.endpoints
+                   if e.get("job_id")}
+        with self._mu:
+            # prune replaced incarnations and stale suspensions so a
+            # long-lived router under replica churn stays O(replicas):
+            # retired counters move to the ring (in-flight requests still
+            # hold the SAME dict, so their decrements keep landing)
+            for jid in [j for j in self._stats if j not in current]:
+                st = self._stats.pop(jid)
+                st["retired_at"] = now
+                self._retired.append(st)
+            for jid in [j for j, until in self._down.items()
+                        if until <= now or j not in current]:
+                del self._down[jid]
         eps = []
         for e in svc.status.endpoints:
             if not e.get("ready") or not e.get("job_id"):
@@ -165,6 +201,7 @@ class ServiceEndpoint:
             if self._down.get(e["job_id"], 0.0) > now:
                 continue
             eps.append(e)
+        self._maybe_report(svc, now)
         return eps
 
     def _adapter_for(self, ep: dict) -> B.ResourceAdapter:
@@ -188,6 +225,71 @@ class ServiceEndpoint:
                     "latencies": deque(maxlen=self._latency_window),
                 }
         return st
+
+    # -- load reporting (router -> control plane) --------------------------
+
+    def _maybe_report(self, svc: BridgeService, now: float) -> None:
+        """Publish this router's per-replica load snapshot into the service
+        config map (key ``loadreport_<router-id>``) at most once per
+        ``report_interval``.  The ServiceProtocol merges every router's
+        report — staleness-bounded by the TTL carried in the report itself —
+        into the autoscale signals; see ``spec.autoscale``.  Off unless the
+        service opted into autoscaling (keeps the cm byte-identical for
+        plain services) or ``report_load=True`` forced it."""
+        if self._report_load is False:
+            return
+        if self._report_load is None and getattr(
+                svc.spec, "autoscale", None) is None:
+            return
+        if now < self._next_report:
+            return
+        store = getattr(self.bridge, "statestore", None)
+        if store is None:
+            return
+        with self._mu:
+            self._next_report = now + self._report_interval
+            replicas: Dict[str, Dict[str, Any]] = {}
+            lat_all: List[float] = []
+            total_requests = 0
+            outstanding = 0
+            for jid, st in self._stats.items():
+                lat = sorted(st["latencies"])
+                replicas[jid] = {
+                    "replica": st["replica"],
+                    "outstanding": st["outstanding"],
+                    "requests": st["requests"],
+                    "p50_s": lat[len(lat) // 2] if lat else None,
+                    "p99_s": lat[min(len(lat) - 1,
+                                     int(len(lat) * 0.99))] if lat else None,
+                }
+                lat_all.extend(lat)
+                total_requests += st["requests"]
+                outstanding += st["outstanding"]
+            window = now - self._last_report_ts
+            rate = ((total_requests - self._last_report_requests) / window
+                    if self._last_report_ts and window > 0 else 0.0)
+            self._last_report_ts = now
+            self._last_report_requests = total_requests
+        lat_all.sort()
+        report = {
+            "router": self._router_id, "ts": now,
+            # consumed-by TTL: the control plane drops (and prunes) reports
+            # from routers that stopped publishing — a dead client must not
+            # freeze the load signal at its last value
+            "ttl": max(3 * self._report_interval, 1.0),
+            "outstanding": outstanding,
+            "rate_rps": round(rate, 3),
+            "p50_s": lat_all[len(lat_all) // 2] if lat_all else None,
+            "p99_s": lat_all[min(len(lat_all) - 1,
+                                 int(len(lat_all) * 0.99))]
+                     if lat_all else None,
+            "replicas": replicas,
+        }
+        try:
+            cm = store.get(f"{self.namespace}/{self.name}-bridge-cm")
+            cm.update({f"loadreport_{self._router_id}": json.dumps(report)})
+        except KeyError:
+            pass  # no cm yet (service still admitting): report next time
 
     def _pick(self, eps: List[dict]) -> dict:
         """Least outstanding requests; ties fall to fewest total requests,
@@ -265,17 +367,25 @@ class ServiceEndpoint:
 
     def stats(self) -> Dict[str, Dict[str, Any]]:
         """Per-replica-incarnation counters, keyed by remote job id:
-        {replica, job_id, requests, errors, outstanding, p50_s, p99_s}."""
+        {replica, job_id, requests, errors, outstanding, p50_s, p99_s,
+        retired}.  Live incarnations come from the live table; recently
+        replaced ones (``retired: True``) from the bounded retired ring, so
+        a jid stays reportable for a while after its replica is replaced.
+        Each incarnation owns its own latency window — a replacement starts
+        from an empty deque, never averaging across incarnations."""
         out: Dict[str, Dict[str, Any]] = {}
         with self._mu:
-            for jid, st in self._stats.items():
+            entries = ([(st, True) for st in self._retired]
+                       + [(st, False) for st in self._stats.values()])
+            for st, retired in entries:
                 lat = sorted(st["latencies"])
-                out[jid] = {
-                    "replica": st["replica"], "job_id": jid,
+                out[st["job_id"]] = {
+                    "replica": st["replica"], "job_id": st["job_id"],
                     "requests": st["requests"], "errors": st["errors"],
                     "outstanding": st["outstanding"],
                     "p50_s": lat[len(lat) // 2] if lat else None,
                     "p99_s": lat[min(len(lat) - 1,
                                      int(len(lat) * 0.99))] if lat else None,
+                    "retired": retired,
                 }
         return out

@@ -41,6 +41,7 @@ updateinterval + resubmit latency), so ticks must not stretch.
 from __future__ import annotations
 
 import json
+import math
 import time
 from typing import Any, Dict, List, Optional, Set, Tuple
 
@@ -57,6 +58,10 @@ from repro.core.statestore import slice_key
 class ServiceProtocol(JobProtocol):
     """One BridgeService's reconcile state machine (see module docstring)."""
 
+    # hysteresis: a load ratio within ±10% of 1.0 proposes no change, so the
+    # autoscaler does not flap around the target between two counts
+    AUTOSCALE_TOLERANCE = 0.1
+
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
         self._fail_threshold = 3
@@ -70,6 +75,18 @@ class ServiceProtocol(JobProtocol):
         # per-replica-index replacement counts, persisted in the cm
         self._replaced: Dict[str, int] = {}
         self._prev_ready: Dict[Optional[int], List[int]] = {}
+        # load-driven autoscaling (spec.autoscale; OFF unless the operator
+        # wrote the autoscale_* keys into the cm)
+        self._as_enabled = False
+        self._as_min = 1
+        self._as_max = 1
+        self._as_target_out: Optional[float] = None
+        self._as_target_p99: Optional[float] = None
+        self._as_up_cd = 5.0
+        self._as_down_cd = 30.0
+        # last scale times persist in the cm so cooldowns survive pod death
+        self._as_last_up = 0.0
+        self._as_last_down = 0.0
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -83,6 +100,23 @@ class ServiceProtocol(JobProtocol):
         self._replaced = {
             k: int(v) for k, v in
             json.loads(cm_data.get("replica_restarts", "{}") or "{}").items()}
+        self._as_enabled = "autoscale_min" in cm_data
+        if self._as_enabled:
+            self._as_min = max(int(cm_data.get("autoscale_min", "1") or 1), 1)
+            self._as_max = max(int(cm_data.get("autoscale_max", "1") or 1),
+                               self._as_min)
+            tout = cm_data.get("autoscale_target_outstanding", "")
+            self._as_target_out = float(tout) if tout else None
+            tp99 = cm_data.get("autoscale_target_p99", "")
+            self._as_target_p99 = float(tp99) if tp99 else None
+            self._as_up_cd = float(
+                cm_data.get("autoscale_up_cooldown", "5") or 5)
+            self._as_down_cd = float(
+                cm_data.get("autoscale_down_cooldown", "30") or 30)
+            persisted = json.loads(
+                cm_data.get("autoscale_status", "{}") or "{}")
+            self._as_last_up = float(persisted.get("last_scale_up", 0.0))
+            self._as_last_down = float(persisted.get("last_scale_down", 0.0))
         if not super().start():
             return False
         # the watch fast path skips status polls on quiescent endpoints;
@@ -247,6 +281,107 @@ class ServiceProtocol(JobProtocol):
         self._push(updates)
         return True
 
+    # -- load-driven autoscaling (spec.autoscale) --------------------------
+
+    def _autoscale_signals(self, cm_now: Dict[str, str],
+                           now: float) -> Tuple[int, Optional[float], int]:
+        """Merge every router's ``loadreport_*`` cm entry into the decision
+        inputs: total outstanding requests across LIVE replicas, the worst
+        per-replica p99, and the fresh-report count.  Reports older than the
+        TTL they carry are dropped AND pruned from the cm — a router that
+        went away must neither freeze the load signal nor leak its key."""
+        fresh: List[Dict[str, Any]] = []
+        expired: List[str] = []
+        for key, raw in cm_now.items():
+            if not key.startswith("loadreport_"):
+                continue
+            try:
+                rep = json.loads(raw)
+                stale = now - float(rep.get("ts", 0.0)) > float(
+                    rep.get("ttl", 1.0))
+            except (ValueError, TypeError):
+                stale = True
+            if stale:
+                expired.append(key)
+            else:
+                fresh.append(rep)
+        if expired:
+            self.cm.prune(expired)
+        live = {jid for _, jid in self._index_map().values()}
+        outstanding = 0
+        p99: Optional[float] = None
+        for rep in fresh:
+            for jid, r in (rep.get("replicas") or {}).items():
+                if jid not in live:
+                    continue  # a replaced incarnation's counters are noise
+                outstanding += int(r.get("outstanding", 0) or 0)
+                v = r.get("p99_s")
+                if v is not None:
+                    p99 = float(v) if p99 is None else max(p99, float(v))
+        return outstanding, p99, len(fresh)
+
+    def _autoscale_desired(self, desired: int, outstanding: int,
+                           p99: Optional[float], reports: int) -> int:
+        """HPA-style proportional scaling: each target proposes
+        ``ceil(current × observed/target)`` (held inside the ±tolerance
+        band), the most demanding proposal wins, clamped to [min, max].
+        Zero fresh reports means no client is talking — the idle floor."""
+        if not reports:
+            return self._as_min
+        ratios: List[float] = []
+        if self._as_target_out is not None:
+            ratios.append(outstanding / (desired * self._as_target_out))
+        if self._as_target_p99 is not None and p99 is not None:
+            ratios.append(p99 / self._as_target_p99)
+        cands = [desired if abs(r - 1.0) <= self.AUTOSCALE_TOLERANCE
+                 else math.ceil(desired * r) for r in ratios]
+        want = max(cands) if cands else desired
+        return max(self._as_min, min(self._as_max, want))
+
+    def _autoscale_tick(self, cm_now: Dict[str, str], desired: int,
+                        imap: Dict[int, Any], states: Dict[int, str],
+                        unreachable: list) -> None:
+        """One autoscale decision (chain 0 only, never during a kill).
+        Holding still while a drain, failover, or unfinished reconcile is in
+        flight keeps exactly one scaling intent live at a time; cooldowns
+        rate-limit each direction on top.  The chosen count rides the SAME
+        ``array_count`` key a manual ``scale()`` patch uses, so next tick's
+        elastic reconcile applies it verbatim."""
+        now = time.time()
+        outstanding, p99, reports = self._autoscale_signals(cm_now, now)
+        want = self._autoscale_desired(desired, outstanding, p99, reports)
+        blocked = (bool(self._condemned) or bool(unreachable)
+                   or self._failover_lock.locked()
+                   or len(imap) != desired
+                   or any(states.get(i) in (DONE, FAILED, KILLED)
+                          for i in imap))
+        applied = desired
+        if want != desired and not blocked:
+            if (want > desired
+                    and now - self._as_last_up >= self._as_up_cd):
+                self._as_last_up = now
+                applied = want
+            elif (want < desired
+                    and now - max(self._as_last_up, self._as_last_down)
+                    >= self._as_down_cd):
+                self._as_last_down = now
+                applied = want
+        if applied != desired:
+            # cm.update directly (not _push): the operator also writes this
+            # key on generation bumps, so _last_pushed must follow, never
+            # gate, what the autoscaler decides
+            self.cm.update({"array_count": str(applied)})
+            self._last_pushed["array_count"] = str(applied)
+        self._push({"autoscale_status": json.dumps({
+            "desired": applied,
+            "min": self._as_min, "max": self._as_max,
+            "signals": {"outstanding": outstanding,
+                        "p99_s": None if p99 is None else round(p99, 4),
+                        "reports": reports},
+            "last_scale_up": round(self._as_last_up, 3),
+            "last_scale_down": round(self._as_last_down, 3),
+        })})
+
     def _evaluate_service(self, cm_now: Dict[str, str], desired: int,
                           kill_requested: bool, stall_msg: Optional[str],
                           ticked: Set[int], chain: Optional[int] = None,
@@ -318,17 +453,27 @@ class ServiceProtocol(JobProtocol):
                 "job_id": jid, "ready": i in ready_set,
             })
 
+        unreachable = [sl for sl in self._slices
+                       if sl.failures >= self._unknown_after]
+
+        if self._as_enabled and not kill_requested and chain in (None, 0):
+            self._autoscale_tick(cm_now, desired, imap, states, unreachable)
+
         finished = kill_requested and all(
             states.get(i) in (DONE, FAILED, KILLED) for i in indices)
+        message = stall_msg or f"{len(ready)}/{desired} replicas ready"
         if finished:
             agg = KILLED
         elif kill_requested:
-            agg = RUNNING if ready else SUBMITTED
+            # draining: cancels are out (or going out below) but replicas
+            # are still alive remotely — that is in-progress teardown, not
+            # a service waiting to come up
+            draining = sum(1 for i in indices
+                           if states.get(i) not in (DONE, FAILED, KILLED))
+            agg = RUNNING
+            message = f"kill requested, draining {draining} replicas"
         else:
             agg = RUNNING if ready else SUBMITTED
-        message = stall_msg or f"{len(ready)}/{desired} replicas ready"
-        unreachable = [sl for sl in self._slices
-                       if sl.failures >= self._unknown_after]
         if unreachable and not finished:
             agg = UNKNOWN
             message = "; ".join(

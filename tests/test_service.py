@@ -27,7 +27,8 @@ import time
 
 import pytest
 
-from repro.core import (ArraySpec, BridgeEnvironment, BridgeService,
+from repro.core import (ArraySpec, AutoscaleSpec, BridgeEnvironment,
+                        BridgeService,
                         BridgeServiceSpec, HealthProbeSpec, IMAGES, KILLED,
                         PlacementCandidate, PlacementSpec, RUNNING, URLS,
                         ValidationError)
@@ -102,6 +103,70 @@ def test_service_spec_validation():
         BridgeServiceSpec(
             template=spec.template,
             health=HealthProbeSpec(failure_threshold=0)).validate()
+
+
+def test_autoscale_spec_validation_and_round_trip():
+    env = BridgeEnvironment()
+    base = env.make_service_spec("slurm", script="serve")
+    good = AutoscaleSpec(min_replicas=1, max_replicas=4,
+                         target_outstanding_per_replica=2.0,
+                         target_p99_seconds=0.5,
+                         scale_up_cooldown_seconds=1.0,
+                         scale_down_cooldown_seconds=2.0)
+    spec = BridgeServiceSpec(template=base.template, replicas=2,
+                             autoscale=good)
+    spec.validate()
+    # round trip: autoscale survives, and its ABSENCE leaves the serialized
+    # spec byte-identical to the pre-autoscale shape
+    doc = BridgeService(name="svc", spec=spec).to_dict()
+    assert doc["spec"]["autoscale"]["maxReplicas"] == 4
+    assert BridgeService.from_dict(doc).spec == spec
+    assert "autoscale" not in BridgeService(name="svc", spec=base).to_dict()["spec"]
+
+    with pytest.raises(ValidationError):  # min > max
+        AutoscaleSpec(min_replicas=3, max_replicas=2,
+                      target_outstanding_per_replica=1.0).validate()
+    with pytest.raises(ValidationError):  # no target at all
+        AutoscaleSpec(min_replicas=1, max_replicas=2).validate()
+    with pytest.raises(ValidationError):  # non-positive target
+        AutoscaleSpec(max_replicas=2,
+                      target_outstanding_per_replica=0).validate()
+    with pytest.raises(ValidationError):  # negative cooldown
+        AutoscaleSpec(max_replicas=2, target_p99_seconds=0.5,
+                      scale_up_cooldown_seconds=-1).validate()
+    with pytest.raises(ValidationError):  # replicas outside [min, max]
+        BridgeServiceSpec(template=base.template, replicas=8,
+                          autoscale=good).validate()
+
+
+def test_autoscale_off_keeps_cm_byte_compatible():
+    """No spec.autoscale => the service config map carries ZERO autoscale or
+    load-report keys (the PR 8 shape, byte for byte); with it, the operator
+    writes the autoscale_* contract."""
+    with _env() as env:
+        h = _service(env, name="plain", replicas=1)
+        h.wait_ready(timeout=20)
+        r = h.router(request_timeout=10)
+        for i in range(5):
+            r.request({"i": i})
+        time.sleep(0.1)
+        data = env.statestore.get("default/plain-bridge-cm").data
+        assert not [k for k in data if k.startswith(("autoscale", "loadreport"))]
+
+        spec = env.make_service_spec(
+            "slurm", replicas=1, script="serve", updateinterval=INTERVAL,
+            health=HEALTH,
+            autoscale=AutoscaleSpec(min_replicas=1, max_replicas=2,
+                                    target_outstanding_per_replica=4.0))
+        h2 = env.bridge.submit_service("scaled", spec)
+        h2.wait_ready(timeout=20)
+        data = env.statestore.get("default/scaled-bridge-cm").data
+        assert data["autoscale_min"] == "1" and data["autoscale_max"] == "2"
+        assert data["autoscale_target_outstanding"] == "4.0"
+        assert "autoscale_target_p99" not in data  # unset target not written
+        for h_ in (h, h2):
+            h_.cancel()
+            h_.wait(timeout=20)
 
 
 # ---------------------------------------------------------------------------
@@ -279,6 +344,148 @@ def test_unhealthy_running_replica_condemned_and_drained(mode):
             "router sent traffic to a condemned replica")
         h.cancel()
         h.wait(timeout=20)
+
+
+AUTOSCALE = AutoscaleSpec(min_replicas=1, max_replicas=4,
+                          target_outstanding_per_replica=1.0,
+                          scale_up_cooldown_seconds=0.1,
+                          scale_down_cooldown_seconds=0.2)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_service_autoscale_tracks_load_with_replica_kill(mode):
+    """The autoscale chaos row: ramp load against a 1-replica service, kill
+    a replica mid-ramp, and require (a) replicas converge to max within the
+    cooldown budget, (b) the elastic invariants hold — surviving replicas'
+    remote jobs are never resubmitted, zero requests are lost — and (c) the
+    service returns to minReplicas once the load goes away."""
+    with _env(mode, slots=16) as env:
+        spec = env.make_service_spec(
+            "slurm", replicas=1, script="serve", updateinterval=INTERVAL,
+            health=HEALTH, jobproperties={"ServeLatency": "0.05"},
+            autoscale=AUTOSCALE)
+        h = env.bridge.submit_service("svc", spec)
+        h.wait_ready(timeout=20)
+        router = h.router(request_timeout=20, report_interval=0.05)
+
+        stop = threading.Event()
+        failures = []
+
+        def traffic():
+            i = 0
+            while not stop.is_set():
+                try:
+                    out = router.request({"seq": i})
+                    if out["echo"] != {"seq": i}:
+                        failures.append(("bad-echo", i, out))
+                except Exception as exc:
+                    failures.append(("error", i, repr(exc)))
+                i += 1
+
+        threads = [threading.Thread(target=traffic) for _ in range(8)]
+        t_ramp = time.time()
+        for t in threads:
+            t.start()
+
+        # mid-ramp chaos: kill a replica as soon as a second one exists
+        assert _wait(lambda: h.ready_replicas() >= 2, timeout=20)
+        survivors = set(_job_ids(h))
+        victim = h.endpoints()[0]["job_id"]
+        survivors.discard(victim)
+        env.clusters["slurm"].cancel_if_live(victim)
+
+        assert _wait(lambda: victim not in _job_ids(h)
+                     and h.ready_replicas() == AUTOSCALE.max_replicas,
+                     timeout=20), (
+            f"never converged to max with the victim replaced: "
+            f"ready={h.ready_replicas()} status={h.autoscale_status()}")
+        ramp_s = time.time() - t_ramp
+        # 1 -> max is at most (max - 1) scale-up decisions plus the replica
+        # replacement; budget the cooldown chain with generous CI slack
+        budget = (AUTOSCALE.max_replicas
+                  * AUTOSCALE.scale_up_cooldown_seconds) + 10.0
+        assert ramp_s < budget, f"ramp took {ramp_s:.2f}s"
+        assert h.autoscale_status()["desired"] == AUTOSCALE.max_replicas
+        # at-most-once: every pre-kill survivor still owns its remote job
+        assert survivors <= set(_job_ids(h)), (
+            "autoscale/replacement resubmitted a live replica")
+
+        stop.set()
+        for t in threads:
+            t.join(timeout=20)
+        assert not failures, failures[:5]
+
+        # idle: reports expire, the autoscaler walks back to the floor
+        # (condemned replicas flip ready=False first, then drain away)
+        assert _wait(lambda: h.ready_replicas() == AUTOSCALE.min_replicas
+                     and len(h.endpoints()) == AUTOSCALE.min_replicas,
+                     timeout=30), (
+            f"never returned to min: ready={h.ready_replicas()} "
+            f"endpoints={len(h.endpoints())} status={h.autoscale_status()}")
+        h.cancel()
+        h.wait(timeout=20)
+
+
+def test_router_stats_pruned_under_replacement_churn():
+    """Regression (router memory leak): replaced incarnations and expired
+    suspensions must be pruned on resolution — the live tables stay
+    O(replicas) while stats() still reports the dead jid from the bounded
+    retired ring."""
+    with _env() as env:
+        h = _service(env, replicas=2)
+        h.wait_ready(timeout=20)
+        router = h.router(request_timeout=15, suspend_ttl=0.05)
+        for i in range(6):
+            router.request({"i": i})
+        assert len(router._stats) == 2
+
+        victims = []
+        for round_ in range(3):  # churn: three successive replacements
+            victim = h.endpoints()[0]["job_id"]
+            victims.append(victim)
+            env.clusters["slurm"].cancel_if_live(victim)
+            assert _wait(lambda: victim not in _job_ids(h)
+                         and h.ready_replicas() == 2, timeout=20)
+            for i in range(4):
+                router.request({"round": round_, "i": i})
+
+        # live table: exactly the two current incarnations, dead jids gone
+        assert len(router._stats) == 2
+        assert set(router._stats) == set(_job_ids(h))
+        # the suspension table holds no expired / replaced entries
+        time.sleep(0.1)
+        router.request({"final": 1})
+        assert not [j for j in router._down if j in victims]
+        # retired ring: every dead incarnation is still reportable
+        stats = router.stats()
+        for victim in victims:
+            assert stats[victim]["retired"] is True
+            assert stats[victim]["requests"] >= 0
+        assert all(not stats[j]["retired"] for j in _job_ids(h))
+        h.cancel()
+        h.wait(timeout=20)
+
+
+def test_kill_drain_reports_running_with_draining_message():
+    """Regression (kill-drain status): while a killed service still has live
+    replicas it must report RUNNING with an explicit draining message, not a
+    stale 'N/M replicas ready' SUBMITTED.  A long updateinterval keeps the
+    one-tick drain window wide enough to observe deterministically."""
+    with _env() as env:
+        spec = env.make_service_spec("slurm", replicas=2, script="serve",
+                                     updateinterval=0.2, health=HEALTH)
+        h = env.bridge.submit_service("svc", spec)
+        h.wait_ready(timeout=30)
+        h.cancel()
+
+        def draining():
+            st = h.status()
+            return st.state == RUNNING and "draining" in st.message
+
+        assert _wait(draining, timeout=10, interval=0.001), (
+            f"no draining status observed (last: {h.status()})")
+        svc = h.wait(timeout=30)
+        assert svc.status.state == KILLED
 
 
 @pytest.mark.parametrize("mode", MODES)
