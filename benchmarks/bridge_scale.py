@@ -29,7 +29,6 @@ the resulting before/after table.
 """
 from __future__ import annotations
 
-import argparse
 import json
 import os
 import queue
@@ -39,7 +38,9 @@ import threading
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
+from common import make_parser, percentile, pick
 from repro.core import (ArraySpec, BATCH_STATUS_CHUNK, BridgeEnvironment,
                         DONE)
 from repro.core.backends import base as B
@@ -53,6 +54,25 @@ class PerIndexSlurmAdapter(SlurmAdapter):
     """Baseline adapter: same dialect, BATCH_STATUS withheld, so the monitor
     polls one request per index per tick (the pre-optimisation shape)."""
     capabilities = SlurmAdapter.capabilities - {B.Capability.BATCH_STATUS}
+
+
+class CountingSlurmAdapter(SlurmAdapter):
+    """Instrumented adapter for the large-array wakeup scenario: counts how
+    many JOB IDS each status fetch touches (one per single status, the chunk
+    size per BATCH_STATUS), so the id-filtered wakeup claim — a drain tick
+    polls only the CHANGED indices — is measured, not inferred."""
+    ids_polled = 0
+    _count_mu = threading.Lock()
+
+    def status(self, job_id):
+        with CountingSlurmAdapter._count_mu:
+            CountingSlurmAdapter.ids_polled += 1
+        return super().status(job_id)
+
+    def status_batch(self, job_ids):
+        with CountingSlurmAdapter._count_mu:
+            CountingSlurmAdapter.ids_polled += len(job_ids)
+        return super().status_batch(job_ids)
 
 
 def _monitor_threads() -> int:
@@ -293,9 +313,9 @@ def run_service_case(mode: str, *, replicas: int = 4, threads: int = 4,
             "requests_total": len(lat),
             "errors": len(failures),
             "throughput_rps": round(len(lat) / elapsed, 1),
-            "latency_p50_ms": round(lat[len(lat) // 2] * 1e3, 3) if lat else None,
-            "latency_p99_ms": round(
-                lat[min(int(len(lat) * 0.99), len(lat) - 1)] * 1e3, 3)
+            "latency_p50_ms": round(percentile(lat, 0.5) * 1e3, 3)
+                if lat else None,
+            "latency_p99_ms": round(percentile(lat, 0.99) * 1e3, 3)
                 if lat else None,
             "recovery_s": round(recovery, 3),
             "requests_to_dead_after_drop": delivered_dead,
@@ -443,37 +463,45 @@ def run_autoscale_case(mode: str, *, min_replicas: int = 2,
 
 
 def _coarse_payload(job, cluster) -> int:
-    """Event-wait job body for the large-fleet scenario: identical
+    """Event-wait job body for the large-fleet scenarios: identical
     semantics to sleep_payload's run-for-WallSeconds, but waiting on the
-    cancel event at 0.25s granularity instead of 5ms polling — a thousand
+    cancel event at 2s granularity instead of 5ms polling — ten thousand
     concurrent payload threads must not spend the benchmark context-
-    switching."""
-    dur = float(job.properties.get("WallSeconds", cluster.default_duration))
+    switching.  End times stay exact (the final wait is ``remaining``);
+    only cancel NOTICE is coarse, and these jobs run to completion.
+    ``PerIndexWall`` in the job params (the indexed_params overlay)
+    overrides WallSeconds so one array can drain index by index."""
+    dur = float(job.params.get("PerIndexWall")
+                or job.properties.get("WallSeconds", cluster.default_duration))
     deadline = time.time() + dur
     while True:
         remaining = deadline - time.time()
         if remaining <= 0:
             return 0
-        if job._cancel.wait(min(remaining, 0.25)):
+        if job._cancel.wait(min(remaining, 2.0)):
             return -1
 
 
 def run_event_case(cadence: str, crs: int, *, interval: float,
-                   dur_lo: float, dur_hi: float, workers: int = 8) -> dict:
+                   dur_lo: float, dur_hi: float, workers: int = 8,
+                   slots: int = 0, reconcile: float = 0.05) -> dict:
     """Event-driven control-plane scenario: ``crs`` single-job SLURM CRs in
-    multiplexed mode under one cadence ("fixed" | "adaptive" | "watch"),
-    with staggered durations sharing a long common RUNNING plateau.
+    multiplexed mode under one cadence ("fixed" | "adaptive" | "watch" |
+    "wakeup"), with staggered durations sharing a long common RUNNING
+    plateau.
 
     Measures what the tentpole claims: p50/p99 STATUS STALENESS (cluster-side
     end_time -> the CR status first observed terminal, via a registry watch),
-    REST requests per CR-tick, per-route server counters, and peak monitor
-    threads — then asserts the event-driven modes actually pay off vs fixed.
+    REST requests per CR-tick, per-route server counters, peak monitor
+    threads, runtime wakeup counters, and lost/duplicated terminal
+    transitions as a watch consumer sees them — then the caller asserts the
+    event-driven modes actually pay off vs their baseline.
     """
     env = BridgeEnvironment(
-        slots=crs, default_duration=dur_hi,
+        slots=slots or crs, default_duration=dur_hi,
         operator_kwargs={"mode": "multiplexed", "cadence": cadence,
                          "monitor_workers": workers,
-                         "reconcile_interval": 0.05})
+                         "reconcile_interval": reconcile})
     try:
         env.clusters["slurm"].payload = _coarse_payload
         env.start()
@@ -482,9 +510,15 @@ def run_event_case(cadence: str, crs: int, *, interval: float,
         stats0 = srv.stats
 
         # registry-side terminal observer: the first moment each CR's
-        # status turns terminal, as a consumer of the watch stream sees it
+        # status turns terminal, as a consumer of the watch stream sees it —
+        # plus every ENTRY into a terminal state, so a lost transition
+        # (never observed terminal) or a duplicated one (terminal ->
+        # non-terminal -> terminal flap) is caught at the consumer, where
+        # it would actually mislead a client
         events = env.registry.watch(include_existing=False)
         terminal_seen: dict = {}
+        terminal_entries: dict = {}
+        was_terminal: set = set()
         stop_consumer = threading.Event()
 
         def consume() -> None:
@@ -495,8 +529,14 @@ def run_event_case(cadence: str, crs: int, *, interval: float,
                     if stop_consumer.is_set():
                         return
                     continue
-                if job.status.terminal() and job.uid not in terminal_seen:
-                    terminal_seen[job.uid] = time.time()
+                if job.status.terminal():
+                    if job.uid not in was_terminal:
+                        was_terminal.add(job.uid)
+                        terminal_entries[job.uid] = \
+                            terminal_entries.get(job.uid, 0) + 1
+                        terminal_seen.setdefault(job.uid, time.time())
+                else:
+                    was_terminal.discard(job.uid)
 
         consumer = threading.Thread(target=consume, daemon=True,
                                     name="bench-staleness-observer")
@@ -510,18 +550,26 @@ def run_event_case(cadence: str, crs: int, *, interval: float,
             for i in range(crs)]
         peak_threads = 0
         pending = list(handles)
-        deadline = t0 + 300
+        # convergence guard, not a measured quantity: scale with the
+        # scenario (the 10k rows run a 50-100s staggered plateau plus a
+        # submission ramp; 300s would sit right on the watch row's edge)
+        deadline = t0 + max(300.0, dur_hi * 5)
         while pending and time.time() < deadline:
             peak_threads = max(peak_threads, _monitor_threads())
             pending = [h for h in pending
                        if not (h.job() and h.job().status.terminal())]
-            time.sleep(0.05)
+            # the observer must not starve the system under test: at 10k
+            # CRs a 50ms full re-scan of the pending handles is ~200k
+            # registry reads/s on one core — more CPU than the monitor
+            # pool gets.  Back off while the pending set is large.
+            time.sleep(0.05 if len(pending) < 1024 else 1.0)
         elapsed = time.time() - t0
         states = [h.job().status.state for h in handles]
         if not all(s == DONE for s in states):
             bad = [s for s in states if s != DONE]
             raise RuntimeError(f"event scenario: {len(bad)} CRs not DONE "
                                f"(e.g. {bad[:3]})")
+        rt = env.operator.runtime.stats()  # before stop() kills the watchers
         stop_consumer.set()
         consumer.join(timeout=2)
         env.registry.unwatch(events)
@@ -539,8 +587,8 @@ def run_event_case(cadence: str, crs: int, *, interval: float,
         if len(stale) < crs * 0.95:
             raise RuntimeError(f"staleness samples missing: {len(stale)}/{crs}")
         stale.sort()
-        p50 = stale[len(stale) // 2]
-        p99 = stale[min(int(len(stale) * 0.99), len(stale) - 1)]
+        p50 = percentile(stale, 0.5)
+        p99 = percentile(stale, 0.99)
 
         requests = srv.request_count - req0
         # nominal tick budget: what a fixed cadence would spend
@@ -559,6 +607,90 @@ def run_event_case(cadence: str, crs: int, *, interval: float,
             "status_staleness_p99_s": round(p99, 3),
             "monitor_threads_peak": peak_threads,
             "monitor_workers": workers,
+            "watcher_threads": rt["watcher_threads"],
+            "wakeup_latency_p99_s": (
+                round(rt["wakeup_latency_p99_s"], 4)
+                if rt["wakeup_latency_p99_s"] is not None else None),
+            "pokes_delivered": rt["pokes_delivered"],
+            "pokes_coalesced": rt["pokes_coalesced"],
+            "stale_drops": rt["stale_drops"],
+            "terminal_transitions_lost": crs - len(terminal_seen),
+            "terminal_transitions_duplicated": sum(
+                1 for c in terminal_entries.values() if c > 1),
+            "server_stats": {k: v for k, v in sorted(route_delta.items())
+                             if v},
+        }
+    finally:
+        env.stop()
+
+
+def run_array_event_case(cadence: str, crs: int, count: int, *,
+                         interval: float, dur_lo: float, dur_hi: float,
+                         slots: int, workers: int = 8) -> dict:
+    """Large-array wakeup scenario: ``crs`` CRs of ``count``-index SLURM
+    arrays whose indices drain a few at a time (per-index staggered
+    durations via the indexed_params overlay).  Under the wakeup cadence
+    the event payload names WHICH job ids changed, so a drain tick's
+    BATCH_STATUS touches only the changed indices; under the watch cadence
+    every version bump re-polls every live index of every chain.  The
+    difference is measured as ``ids_polled`` through an instrumented
+    adapter, not inferred from request counts."""
+    CountingSlurmAdapter.ids_polled = 0
+    env = BridgeEnvironment(
+        slots=slots, default_duration=dur_hi,
+        operator_kwargs={"mode": "multiplexed", "cadence": cadence,
+                         "monitor_workers": workers,
+                         "reconcile_interval": 0.05})
+    try:
+        env.clusters["slurm"].payload = _coarse_payload
+        env.operator.adapters[CountingSlurmAdapter.image] = \
+            CountingSlurmAdapter
+        env.start()
+        srv = env.servers["slurm"]
+        req0 = srv.request_count
+        stats0 = srv.stats
+        step = (dur_hi - dur_lo) / max(count - 1, 1)
+        indexed = [{"PerIndexWall": str(round(dur_lo + step * i, 3))}
+                   for i in range(count)]
+        t0 = time.time()
+        handles = [env.bridge.submit(f"arr-{i}", env.make_spec(
+            "slurm", script="bench", updateinterval=interval,
+            array=ArraySpec(count=count, indexed_params=indexed)))
+            for i in range(crs)]
+        peak_threads = 0
+        pending = list(handles)
+        deadline = t0 + 600
+        while pending and time.time() < deadline:
+            peak_threads = max(peak_threads, _monitor_threads())
+            pending = [h for h in pending
+                       if not (h.job() and h.job().status.terminal())]
+            time.sleep(0.05)
+        elapsed = time.time() - t0
+        states = [h.job().status.state for h in handles]
+        if not all(s == DONE for s in states):
+            bad = [s for s in states if s != DONE]
+            raise RuntimeError(f"array event scenario: {len(bad)} CRs not "
+                               f"DONE (e.g. {bad[:3]})")
+        rt = env.operator.runtime.stats()  # before stop() kills the watchers
+        requests = srv.request_count - req0
+        route_delta = {
+            k: v["requests"] - stats0.get(k, {}).get("requests", 0)
+            for k, v in srv.stats.items()}
+        ids = CountingSlurmAdapter.ids_polled
+        return {
+            "label": f"{cadence}/{crs}x{count}ix-array-event",
+            "cadence": cadence, "crs": crs, "array_count": count,
+            "interval": interval, "duration_range_s": [dur_lo, dur_hi],
+            "wall_time_s": round(elapsed, 3),
+            "rest_requests": requests,
+            "ids_polled": ids,
+            "ids_polled_per_index": round(ids / (crs * count), 2),
+            "monitor_threads_peak": peak_threads,
+            "monitor_workers": workers,
+            "watcher_threads": rt["watcher_threads"],
+            "wakeup_latency_p99_s": (
+                round(rt["wakeup_latency_p99_s"], 4)
+                if rt["wakeup_latency_p99_s"] is not None else None),
             "server_stats": {k: v for k, v in sorted(route_delta.items())
                              if v},
         }
@@ -717,47 +849,81 @@ def run_failover_case(mode: str, *, count: int = 16, threshold: int = 3,
 
 
 def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", action="store_true",
-                    help="small, fast variant for CI (same schema)")
+    ap = make_parser(__doc__)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_bridge_scale.json"))
     args = ap.parse_args()
+    smoke = args.smoke
 
-    if args.smoke:
-        counts, cr_counts = [1, 16], [1, 8]
-        array_dur, interval, cr_dur, single_repeats = 0.5, 0.01, 0.2, 1
-        resize = (8, 16, 2)
-        sliced = dict(count=16, slurm_slots=4, lsf_slots=2, duration=0.2)
-        event = dict(crs=32, interval=0.2, dur_lo=1.5, dur_hi=2.5)
-        service = dict(replicas=4, threads=4, warm_s=0.5, post_s=0.5)
-        autoscale = dict(min_replicas=2, max_replicas=4, threads=8,
-                         light_s=0.8, heavy_s=0.8)
-        failover = dict(count=8, threshold=3, interval=0.02, duration=0.4)
-    else:
-        counts, cr_counts = [1, 64, 256], [1, 16, 64]
-        # jobs long enough that the run is dominated by steady-state RUNNING
-        # ticks (the hot path being optimised), not the start/end ramps
-        array_dur, interval, cr_dur, single_repeats = 4.0, 0.01, 0.3, 9
-        resize = (32, 48, 8)
-        sliced = dict(count=64, slurm_slots=8, lsf_slots=4, duration=0.3)
-        # 1000 CRs on one endpoint: a long shared RUNNING plateau (the
-        # steady state the event-driven control plane optimises) plus a
-        # staggered drain (constant churn, the conservative re-poll path)
-        event = dict(crs=1000, interval=0.5, dur_lo=6.0, dur_hi=8.0)
-        service = dict(replicas=6, threads=8, warm_s=2.0, post_s=2.0)
-        autoscale = dict(min_replicas=2, max_replicas=8, threads=16,
-                         light_s=1.5, heavy_s=1.5)
-        failover = dict(count=32, threshold=3, interval=0.02, duration=1.0)
+    # the wakeup scenario runs tens of thousands of shallow payload threads;
+    # the default 8 MiB stacks are pure virtual-memory noise at that scale
+    threading.stack_size(512 * 1024)
+
+    counts = pick(smoke, [1, 64, 256], [1, 16])
+    cr_counts = pick(smoke, [1, 16, 64], [1, 8])
+    # jobs long enough that the run is dominated by steady-state RUNNING
+    # ticks (the hot path being optimised), not the start/end ramps
+    array_dur = pick(smoke, 4.0, 0.5)
+    interval = 0.01
+    cr_dur = pick(smoke, 0.3, 0.2)
+    single_repeats = pick(smoke, 9, 1)
+    resize = pick(smoke, (32, 48, 8), (8, 16, 2))
+    sliced = pick(smoke,
+                  dict(count=64, slurm_slots=8, lsf_slots=4, duration=0.3),
+                  dict(count=16, slurm_slots=4, lsf_slots=2, duration=0.2))
+    # 1000 CRs on one endpoint: a long shared RUNNING plateau (the
+    # steady state the event-driven control plane optimises) plus a
+    # staggered drain (constant churn, the conservative re-poll path)
+    event = pick(smoke,
+                 dict(crs=1000, interval=0.5, dur_lo=6.0, dur_hi=8.0),
+                 dict(crs=32, interval=0.2, dur_lo=1.5, dur_hi=2.5))
+    # 10k single-job CRs, watch vs wakeup at IDENTICAL parameters: the
+    # plateau must outlast the submission ramp (so the watch baseline gets
+    # to observe RUNNING as its own transition instead of collapsing the
+    # whole lifecycle into one capacity-starved poll), slots < crs queues a
+    # tail of CRs so QUEUED->RUNNING is a real, separately-billed
+    # transition, and the drain spreads terminals thinly enough that the
+    # shared event ring (4096 entries) keeps covering a one-interval
+    # watermark lag per chain
+    # reconcile=1.0: the operator's sweep mirrors EVERY CR's status each
+    # pass — at 10k CRs a 50ms cadence spends the whole core re-scanning
+    # the registry and starves the monitor of tick throughput for BOTH
+    # cadences (the comparison stays fair: one value, shared by the rows)
+    wakeup = pick(smoke,
+                  dict(crs=10000, interval=1.0, dur_lo=50.0, dur_hi=100.0,
+                       slots=6000, reconcile=1.0),
+                  dict(crs=48, interval=0.2, dur_lo=1.5, dur_hi=2.5,
+                       slots=48))
+    # the large-array variant: few CRs, many indices, slots << indices so
+    # QUEUED->RUNNING churn runs the whole scenario — the id-filtered
+    # BATCH_STATUS path is exercised continuously, not just at the drain
+    array_event = pick(smoke,
+                       dict(crs=64, count=256, interval=0.5, dur_lo=2.0,
+                            dur_hi=6.0, slots=2048),
+                       dict(crs=4, count=32, interval=0.2, dur_lo=0.5,
+                            dur_hi=1.5, slots=64))
+    service = pick(smoke,
+                   dict(replicas=6, threads=8, warm_s=2.0, post_s=2.0),
+                   dict(replicas=4, threads=4, warm_s=0.5, post_s=0.5))
+    autoscale = pick(smoke,
+                     dict(min_replicas=2, max_replicas=8, threads=16,
+                          light_s=1.5, heavy_s=1.5),
+                     dict(min_replicas=2, max_replicas=4, threads=8,
+                          light_s=0.8, heavy_s=0.8))
+    failover = pick(smoke,
+                    dict(count=32, threshold=3, interval=0.02, duration=1.0),
+                    dict(count=8, threshold=3, interval=0.02, duration=0.4))
 
     baseline_count = counts[-1]
 
     results = {"smoke": args.smoke,
                "config": {"interval": interval, "array_duration_s": array_dur,
                           "batch_status_chunk": BATCH_STATUS_CHUNK,
-                          "event": event},
+                          "event": event, "wakeup": wakeup,
+                          "array_event": array_event},
                "array_scaling": [], "baselines": [], "cr_scaling": [],
-               "cr_scaling_event": [], "single_job": [], "resize": [],
+               "cr_scaling_event": [], "cr_scaling_wakeup": [],
+               "array_wakeup": [], "single_job": [], "resize": [],
                "sliced_placement": [], "service_scale": [],
                "service_autoscale": [], "slice_failover": []}
 
@@ -838,6 +1004,113 @@ def main() -> int:
             raise RuntimeError(
                 f"{r['label']}: p99 staleness unbounded "
                 f"({r['status_staleness_p99_s']}s > {iv * factor + 2.0}s)")
+
+    print(f"== watch-driven wakeups ({wakeup['crs']} CRs, "
+          "watch vs wakeup) ==")
+    for cadence in ("watch", "wakeup"):
+        r = run_event_case(cadence, **wakeup)
+        results["cr_scaling_wakeup"].append(r)
+        print(f"  {r['label']:<24} req={r['rest_requests']:>7} "
+              f"stale p99={r['status_staleness_p99_s']:>6.3f}s "
+              f"wakeup p99={r['wakeup_latency_p99_s']} "
+              f"threads={r['monitor_threads_peak']} "
+              f"lost={r['terminal_transitions_lost']} "
+              f"dup={r['terminal_transitions_duplicated']}")
+        for route, n in r["server_stats"].items():
+            print(f"      {route:<36} {n}")
+
+    wk_watch, wk_wakeup = results["cr_scaling_wakeup"]
+    # the PR's claims, asserted where the numbers are made.
+    # 1. the wakeup cadence at least HALVES the status-route volume the
+    #    watch transport still pays at identical parameters (non-terminal
+    #    transitions merge from event payloads; only terminals are polled)
+    if not (wk_wakeup["server_stats"].get(status_route, 0)
+            < wk_watch["server_stats"].get(status_route, 1) * 0.5):
+        raise RuntimeError(
+            f"wakeup cadence did not halve status-route requests: "
+            f"{wk_wakeup['server_stats']} vs {wk_watch['server_stats']}")
+    # 2. pushing wakeups must not cost total request volume (the filtered
+    #    events fetch replaces a status poll 1:1; the per-endpoint watcher
+    #    adds ~2 long-polls a second)
+    if not (wk_wakeup["rest_requests"] <= wk_watch["rest_requests"] * 1.1):
+        raise RuntimeError(
+            f"wakeup cadence regressed total request volume: "
+            f"{wk_wakeup['rest_requests']} vs {wk_watch['rest_requests']}")
+    # 3. staleness: the wakeup row's p99 stays inside the design's own
+    #    worst-case envelope — a straggler whose poke was consumed early is
+    #    caught by a stretched safety tick (WakeupCadence ceiling:
+    #    16 x base interval), plus the operator's full-registry mirror pass
+    #    (~2s at 10k CRs on one core).  The typical path (poke -> tick ->
+    #    mirror) lands far under it; the wakeup-latency assert below pins
+    #    that separately.
+    if wk_wakeup["status_staleness_p99_s"] > wakeup["interval"] * 16 + 4.0:
+        raise RuntimeError(
+            f"wakeup p99 staleness outside the safety-net envelope: "
+            f"{wk_wakeup['status_staleness_p99_s']}s")
+    #    ...and must strictly dominate the watch baseline at identical
+    #    parameters: watch burns its request budget re-polling, wakeup
+    #    spends it only where events point
+    if (wk_wakeup["status_staleness_p99_s"]
+            > wk_watch["status_staleness_p99_s"]):
+        raise RuntimeError(
+            f"wakeup staleness worse than watch: "
+            f"{wk_wakeup['status_staleness_p99_s']}s vs "
+            f"{wk_watch['status_staleness_p99_s']}s")
+    #    the watch baseline only gets a runaway guard — at this CR count its
+    #    poll-everything drain may saturate the worker pool (that is
+    #    precisely the failure mode the wakeup cadence removes)
+    if wk_watch["status_staleness_p99_s"] > 240.0:
+        raise RuntimeError(
+            f"watch p99 staleness runaway: "
+            f"{wk_watch['status_staleness_p99_s']}s")
+    # 4. event -> evaluation latency: a poke beats the deadline heap
+    if (wk_wakeup["wakeup_latency_p99_s"] is None
+            or wk_wakeup["wakeup_latency_p99_s"] >= wakeup["interval"]):
+        raise RuntimeError(
+            f"wakeup latency p99 not below the poll interval: "
+            f"{wk_wakeup['wakeup_latency_p99_s']} vs {wakeup['interval']}")
+    # 5. watcher threads are per-ENDPOINT, not per-CR: one endpoint, one
+    #    watcher, and the monitor pool itself stays flat
+    if wk_wakeup["watcher_threads"] != 1:
+        raise RuntimeError(
+            f"expected exactly one endpoint watcher, got "
+            f"{wk_wakeup['watcher_threads']}")
+    for r in results["cr_scaling_wakeup"]:
+        if r["monitor_threads_peak"] > r["monitor_workers"] + 1:
+            raise RuntimeError(
+                f"{r['label']}: monitor threads grew past pool+watcher "
+                f"({r['monitor_threads_peak']} > {r['monitor_workers'] + 1})")
+    # 6. no terminal transition lost or duplicated under either cadence
+    for r in results["cr_scaling_wakeup"]:
+        if (r["terminal_transitions_lost"]
+                or r["terminal_transitions_duplicated"]):
+            raise RuntimeError(
+                f"{r['label']}: lost={r['terminal_transitions_lost']} "
+                f"dup={r['terminal_transitions_duplicated']}")
+
+    print(f"== large-array wakeups ({array_event['crs']} CRs x "
+          f"{array_event['count']} indices, watch vs wakeup) ==")
+    for cadence in ("watch", "wakeup"):
+        r = run_array_event_case(cadence, **array_event)
+        results["array_wakeup"].append(r)
+        print(f"  {r['label']:<28} ids_polled={r['ids_polled']:>8} "
+              f"(per-index {r['ids_polled_per_index']}) "
+              f"req={r['rest_requests']:>6} "
+              f"threads={r['monitor_threads_peak']}")
+
+    ar_watch, ar_wakeup = results["array_wakeup"]
+    # id-filtered BATCH_STATUS: a wakeup drain tick touches only the
+    # CHANGED indices, so it polls a fraction of the job ids the watch
+    # cadence re-polls on every version bump
+    if not (ar_wakeup["ids_polled"] < ar_watch["ids_polled"] * 0.5):
+        raise RuntimeError(
+            f"id-filtered polling did not halve ids polled: "
+            f"{ar_wakeup['ids_polled']} vs {ar_watch['ids_polled']}")
+    for r in results["array_wakeup"]:
+        if r["monitor_threads_peak"] > r["monitor_workers"] + 1:
+            raise RuntimeError(
+                f"{r['label']}: monitor threads grew past pool+watcher "
+                f"({r['monitor_threads_peak']} > {r['monitor_workers'] + 1})")
 
     print("== elastic resize (delta submit/cancel latency) ==")
     for mode in MODES:
@@ -932,6 +1205,28 @@ def main() -> int:
                 "staleness_p99_s": r["status_staleness_p99_s"],
                 "monitor_threads_peak": r["monitor_threads_peak"]}
             for r in results["cr_scaling_event"]},
+        "wakeup": {
+            r["cadence"]: {
+                "crs": r["crs"],
+                "rest_requests": r["rest_requests"],
+                "status_route_requests":
+                    r["server_stats"].get(status_route, 0),
+                "staleness_p99_s": r["status_staleness_p99_s"],
+                "wakeup_latency_p99_s": r["wakeup_latency_p99_s"],
+                "monitor_threads_peak": r["monitor_threads_peak"],
+                "watcher_threads": r["watcher_threads"],
+                "pokes_delivered": r["pokes_delivered"],
+                "pokes_coalesced": r["pokes_coalesced"],
+                "terminal_transitions_lost": r["terminal_transitions_lost"],
+                "terminal_transitions_duplicated":
+                    r["terminal_transitions_duplicated"]}
+            for r in results["cr_scaling_wakeup"]},
+        "array_wakeup": {
+            r["cadence"]: {
+                "ids_polled": r["ids_polled"],
+                "ids_polled_per_index": r["ids_polled_per_index"],
+                "monitor_threads_peak": r["monitor_threads_peak"]}
+            for r in results["array_wakeup"]},
         "service_scale": {
             r["mode"]: {"throughput_rps": r["throughput_rps"],
                         "latency_p99_ms": r["latency_p99_ms"],
@@ -994,6 +1289,18 @@ def main() -> int:
           + ", p99 staleness "
           + " / ".join(f"{c}={ev[c]['staleness_p99_s']}s"
                        for c in ("fixed", "adaptive", "watch")))
+    wk = h["wakeup"]
+    print(f"wakeup @ {wakeup['crs']} CRs: status-route "
+          f"watch={wk['watch']['status_route_requests']} vs "
+          f"wakeup={wk['wakeup']['status_route_requests']}, "
+          f"p99 staleness watch={wk['watch']['staleness_p99_s']}s vs "
+          f"wakeup={wk['wakeup']['staleness_p99_s']}s, "
+          f"wakeup latency p99={wk['wakeup']['wakeup_latency_p99_s']}s, "
+          f"watcher threads={wk['wakeup']['watcher_threads']}")
+    aw = h["array_wakeup"]
+    print(f"array wakeup @ {array_event['crs']}x{array_event['count']}: "
+          f"ids polled watch={aw['watch']['ids_polled']} vs "
+          f"wakeup={aw['wakeup']['ids_polled']}")
     print(f"wrote {out}")
     return 0
 

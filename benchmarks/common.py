@@ -1,0 +1,36 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark entry point used to carry its own copy of the same three
+pieces of boilerplate: an argparse block with a ``--smoke`` switch, an
+if/else ladder picking full-vs-smoke scenario sizes, and a hand-rolled
+percentile expression.  They live here now — one definition each — so a new
+scenario adds a line of config, not another parallel ladder.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Any, List, Optional
+
+
+def make_parser(description: str) -> argparse.ArgumentParser:
+    """The argument surface every benchmark shares (``--smoke``)."""
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small, fast variant for CI (same schema)")
+    return ap
+
+
+def pick(smoke: bool, full: Any, small: Any) -> Any:
+    """THE smoke-vs-full size switch: ``small`` under ``--smoke``, ``full``
+    otherwise.  Scenario configs call this once per knob instead of
+    maintaining parallel if/else blocks."""
+    return small if smoke else full
+
+
+def percentile(sorted_samples: List[float], q: float) -> Optional[float]:
+    """The ``q``-quantile of an ascending sample list (None when empty) —
+    the one definition every latency/staleness report indexes with."""
+    if not sorted_samples:
+        return None
+    return sorted_samples[min(int(len(sorted_samples) * q),
+                              len(sorted_samples) - 1)]

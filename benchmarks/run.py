@@ -23,17 +23,18 @@ Output: CSV `name,metric,value` on stdout (tee'd to bench_output.txt).
 the whole harness finishes in well under a minute for CI — the numbers are
 not comparable to a full run, only the plumbing is exercised.
 """
-import argparse
 import json
 import statistics
 import time
+
+from common import make_parser, pick
 
 ROWS = []
 SMOKE = False
 
 
 def reps(full: int, smoke: int) -> int:
-    return smoke if SMOKE else full
+    return pick(SMOKE, full, smoke)
 
 
 def emit(name: str, metric: str, value) -> None:
@@ -187,11 +188,9 @@ BENCHES = [fig2_submission_latency, fig3_monitor_throughput,
 
 def main() -> None:
     global SMOKE
-    p = argparse.ArgumentParser(description="control-plane benchmark harness")
+    p = make_parser("control-plane benchmark harness")
     p.add_argument("names", nargs="*",
                    help="substring filter on benchmark names")
-    p.add_argument("--smoke", action="store_true",
-                   help="reduced iterations/payloads for CI")
     args = p.parse_args()
     SMOKE = args.smoke
     print("name,metric,value")

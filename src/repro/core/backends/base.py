@@ -14,9 +14,10 @@ from __future__ import annotations
 import enum
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import (Any, Callable, Dict, FrozenSet, List, Mapping, Optional,
-                    Type)
+                    Tuple, Type)
 
 QUEUED = "QUEUED"
 RUNNING = "RUNNING"
@@ -243,6 +244,23 @@ class ResourceAdapter:
         raise NotImplementedError(
             f"{type(self).__name__} does not declare WATCH")
 
+    def watch_events_ids(self, since: int = -1,
+                         ids: Optional[List[str]] = None,
+                         wait: float = 0.0
+                         ) -> Optional[Tuple[int, Optional[List[Tuple[str, str]]]]]:
+        """Payload-carrying variant of ``watch_events`` (requires
+        Capability.WATCH).
+
+        Returns None when nothing relevant changed within ``wait`` (204),
+        else ``(version, events)`` where ``events`` lists ``(job_id,
+        canonical_state)`` for every relevant transition in
+        ``(since, version]`` — at most one entry per id, latest state wins —
+        or ``events is None`` when the manager could not enumerate the
+        range (its bounded event ring no longer covers ``since``): the
+        caller must fall back to a status poll."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not declare WATCH")
+
     def probe_health(self, job_id: str) -> bool:
         """True iff the serve-mode job answers its health route 200
         (requires Capability.SERVE).  A 4xx/5xx answer is False; transport
@@ -268,6 +286,18 @@ class ResourceAdapter:
         if channel is None:
             return fetch()
         return channel.memo("events_version", max_age, fetch)
+
+    def watch_push_healthy(self, window: float) -> bool:
+        """True iff the endpoint's dedicated watcher (wakeup cadence) proved
+        itself alive within the last ``window`` seconds — it stamps the
+        shared channel's heartbeat on every successful long-poll cycle.
+        False (no shared channel, no watcher yet, stale heartbeat) means
+        push delivery cannot be relied on and the caller must fetch events
+        itself."""
+        channel = getattr(self.client, "channel", None)
+        if channel is None:
+            return False
+        return time.time() - getattr(channel, "watch_heartbeat", 0.0) <= window
 
 
 def normalized_queue_load(q: Optional[Dict[str, int]]) -> Optional[float]:
@@ -337,6 +367,13 @@ class SimulatedCluster:
         # condition so a ``GET /jobs/events?since=`` wakes on the change
         self._events_version = 0
         self._events_cv = threading.Condition(self._lock)
+        # bounded event ring: (version, job_id, canonical_state) per bump,
+        # job_id None for job-less bumps (shutdown).  Lets a watcher ask
+        # "WHAT changed since v", not just "did anything change"; when the
+        # ring no longer covers ``since`` the payload answer degrades to
+        # "unknown" and consumers fall back to a status poll
+        self._events_ring: "deque[Tuple[int, Optional[str], str]]" = deque(
+            maxlen=4096)
         self._threads: List[threading.Thread] = []
         self._stop = threading.Event()
         self._sched = threading.Thread(target=self._schedule_loop, daemon=True,
@@ -350,6 +387,9 @@ class SimulatedCluster:
         self._events_version += 1
         if job is not None:
             job.events_stamp = self._events_version
+        self._events_ring.append((self._events_version,
+                                  job.id if job is not None else None,
+                                  job.state if job is not None else ""))
         self._events_cv.notify_all()
 
     def events_version(self) -> int:
@@ -378,6 +418,42 @@ class SimulatedCluster:
                 self._events_cv.wait(remaining)
                 changed = relevant()
             return self._events_version, changed
+
+    def wait_events_payload(self, since: int, timeout: float = 0.0,
+                            ids: Optional[List[str]] = None
+                            ) -> "tuple[int, bool, Optional[List[Tuple[str, str]]]]":
+        """``wait_events`` plus the WHAT: returns (version, changed, events)
+        where ``events`` lists ``(job_id, state)`` for every relevant
+        transition in ``(since, version]`` — deduplicated, latest state per
+        id — or None when the bounded ring no longer covers that range (or a
+        job-less wildcard bump falls inside it), meaning the caller must
+        re-poll statuses instead of trusting the enumeration."""
+        version, changed = self.wait_events(since, timeout, ids)
+        if not changed:
+            return version, False, []
+        with self._lock:
+            return self._events_version, True, self._events_payload(since, ids)
+
+    def _events_payload(self, since: int,
+                        ids: Optional[List[str]]) -> Optional[List[Tuple[str, str]]]:
+        """Enumerate ring events newer than ``since`` (caller holds _lock).
+        None == coverage unknown."""
+        ring = self._events_ring
+        if not ring or ring[0][0] > max(since, 0) + 1:
+            # the ring starts after ``since``: overwritten entries may hide
+            # transitions we can no longer enumerate
+            return None
+        latest: Dict[str, str] = {}
+        for version, jid, state in ring:
+            if version <= since:
+                continue
+            if jid is None:
+                return None  # wildcard bump: scope unknown
+            latest[jid] = state
+        if ids is not None:
+            want = set(ids)
+            return [(j, s) for j, s in latest.items() if j in want]
+        return list(latest.items())
 
     # -- control surface (what REST facades call) ---------------------------
 

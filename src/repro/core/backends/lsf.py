@@ -144,10 +144,21 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         since = int(groups.get("since", "-1") or -1)
         ids = [s for s in groups.get("ids", "").split(",") if s] or None
         wait = min(float(groups.get("wait", "0") or 0), budget)
-        version, changed = cluster.wait_events(since, timeout=wait, ids=ids)
+        version, changed, payload = cluster.wait_events_payload(
+            since, timeout=wait, ids=ids)
         if not changed:
             return HttpResponse(204)
-        return HttpResponse(200, {"version": version})
+        body: Dict[str, Any] = {"version": version}
+        if payload is not None:
+            # WHICH jobs changed, in LSF vocabulary; CANCELLED carries the
+            # TERM_OWNER reason so clients can round-trip EXIT correctly.
+            # Omitted when the bounded event ring no longer covers ``since``
+            body["events"] = [
+                {"jobId": jid, "status": _STATE_TO_LSF[state],
+                 "exitReason": ("TERM_OWNER: killed by owner"
+                                if state == B.CANCELLED else "")}
+                for jid, state in payload]
+        return HttpResponse(200, body)
 
     srv.route("POST", "/platform/ws/jobs/submit", submit)
     srv.route("GET", "/platform/ws/jobs", jobsinfo)
@@ -253,6 +264,24 @@ class LSFAdapter(B.ResourceAdapter):
         if not r.ok:
             raise B.SubmitError(f"lsf events: HTTP {r.status}")
         return int(r.json["version"])
+
+    def watch_events_ids(self, since=-1, ids=None, wait=0.0):
+        q = f"since={since}"
+        if ids:
+            q += "&ids=" + ",".join(ids)
+        if wait:
+            q += f"&wait={wait}"
+        r = self.client.get("/platform/ws/jobs/events?" + q)
+        if r.status == 204:
+            return None
+        if not r.ok:
+            raise B.SubmitError(f"lsf events: HTTP {r.status}")
+        events = r.json.get("events")
+        if events is not None:
+            events = [(str(e["jobId"]),
+                       _lsf_to_state(e["status"], e.get("exitReason", "")))
+                      for e in events]
+        return int(r.json["version"]), events
 
     def upload(self, name: str, data: bytes) -> bool:
         r = self.client.put(f"/platform/ws/files/{name}",

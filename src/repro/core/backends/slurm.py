@@ -99,10 +99,19 @@ def make_server(cluster: B.SimulatedCluster, token: str = "",
         since = int(groups.get("since", "-1") or -1)
         ids = [s for s in groups.get("ids", "").split(",") if s] or None
         wait = min(float(groups.get("wait", "0") or 0), budget)
-        version, changed = cluster.wait_events(since, timeout=wait, ids=ids)
+        version, changed, payload = cluster.wait_events_payload(
+            since, timeout=wait, ids=ids)
         if not changed:
             return HttpResponse(204)
-        return HttpResponse(200, {"version": version})
+        body: Dict[str, Any] = {"version": version}
+        if payload is not None:
+            # WHICH jobs changed, in dialect vocabulary; omitted when the
+            # cluster's bounded event ring no longer covers ``since`` (the
+            # client must re-poll statuses instead)
+            body["events"] = [{"job_id": int(jid),
+                               "job_state": _STATE_TO_SLURM[state]}
+                              for jid, state in payload]
+        return HttpResponse(200, body)
 
     def health(groups, _body) -> HttpResponse:
         status, payload = cluster.serve_health(groups["id"])
@@ -219,6 +228,24 @@ class SlurmAdapter(B.ResourceAdapter):
         if not r.ok:
             raise B.SubmitError(f"slurm events: HTTP {r.status}")
         return int(r.json["version"])
+
+    def watch_events_ids(self, since=-1, ids=None, wait=0.0):
+        q = f"since={since}"
+        if ids:
+            q += "&ids=" + ",".join(ids)
+        if wait:
+            q += f"&wait={wait}"
+        r = self.client.get("/slurm/v0.0.37/jobs/events?" + q)
+        if r.status == 204:
+            return None
+        if not r.ok:
+            raise B.SubmitError(f"slurm events: HTTP {r.status}")
+        events = r.json.get("events")
+        if events is not None:
+            events = [(str(e["job_id"]),
+                       _SLURM_TO_STATE.get(e["job_state"], B.FAILED))
+                      for e in events]
+        return int(r.json["version"]), events
 
     def queue_load(self) -> Optional[Dict[str, int]]:
         r = self.client.get("/slurm/v0.0.37/partitions")

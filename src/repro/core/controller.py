@@ -235,11 +235,28 @@ class JobProtocol:
         # last monitor-written snapshot, for write-coalescing
         self._last_pushed: Dict[str, str] = {}
         # event-driven control plane: cadence mode from the cm ("fixed" |
-        # "adaptive" | "watch"), last tick observation per chain (the
-        # driver's cadence hint), and how many status requests the watch
-        # fast path has skipped (observability + tests)
+        # "adaptive" | "watch" | "wakeup"), last tick observation per chain
+        # (the driver's cadence hint), and how many status requests the
+        # watch fast path has skipped (observability + tests)
         self.cadence_mode = "fixed"
         self._watch_enabled = False
+        # wakeup mode: the watcher pushes id-level event payloads; ticks
+        # merge non-terminal transitions into the cached infos and poll only
+        # ids with terminal (or unenumerable) events
+        self.wakeup_enabled = False
+        # watcher-delivered payloads per chain, consumed by the chain's next
+        # tick: chain -> [version, events-or-None]; deliveries coalesce
+        self._event_buf: Dict[Optional[int], List[Any]] = {}
+        # ids covered by each chain's last handed-out watcher registration:
+        # a buffered payload is only trusted when it covers every live pair
+        # (subscription lag after a scale-up falls back to a filtered fetch)
+        self._watch_reg_ids: Dict[int, Set[str]] = {}
+        # chains whose registration just changed (fresh submit, retry,
+        # failover): their next safety-net tick must fetch events once —
+        # transitions that fired BEFORE the new subscription existed are
+        # nobody's push duty, and an instant-terminal job would otherwise
+        # wedge.  Cleared by the first successful fetch.
+        self._watch_catchup: Set[int] = set()
         self.watch_skips = 0
         self._obs: Dict[Optional[int], TickObs] = {}
         self._prev_states: Dict[Optional[int], Dict[int, str]] = {}
@@ -289,6 +306,13 @@ class JobProtocol:
         if self._sliced:
             for s in (self._slices if sl is None else [sl]):
                 updates[slice_key(s.k, "id")] = _encode_pairs(s.pairs)
+        if self.wakeup_enabled:
+            # a freshly-accepted submission is QUEUED by definition: seed the
+            # status cache so the first wakeup-mode tick can ride event
+            # payloads instead of paying a submit-stamp status poll
+            for s in (self._slices if sl is None else [sl]):
+                for idx, _jid in s.pairs:
+                    self._infos.setdefault(idx, {"state": B.QUEUED})
         self._push(updates)
 
     # -- paper Fig. 2: main ----------------------------------------------
@@ -302,7 +326,8 @@ class JobProtocol:
         # absent key == "fixed": legacy config maps keep today's byte shape
         # and today's fixed-interval monitor behaviour
         self.cadence_mode = cm_data.get("cadence", "fixed")
-        self._watch_enabled = self.cadence_mode == "watch"
+        self._watch_enabled = self.cadence_mode in ("watch", "wakeup")
+        self.wakeup_enabled = self.cadence_mode == "wakeup"
         self._unknown_after = int(cm_data.get("unknown_after", "5"))
         self._retry_limit = int(cm_data.get("retry_limit", "0") or 0)
         self._backoff = float(cm_data.get("retry_backoff", "0") or 0)
@@ -439,6 +464,21 @@ class JobProtocol:
                         if todo:
                             todo_by_slice.append((sl, todo))
                     for sl, todo in todo_by_slice:
+                        if (self.wakeup_enabled and sl.events_seen < 0
+                                and sl.adapter.supports(B.Capability.WATCH)):
+                            # seed the watermark BEFORE the first submission:
+                            # the fresh jobs' own QUEUED bumps land after it
+                            # (matching the QUEUED infos _flush_ids seeds), so
+                            # the first wakeup tick rides events instead of
+                            # paying a submit-stamp status poll.  The memoized
+                            # probe only ever lags the true version — lag is
+                            # safe (extra events re-derived, never skipped)
+                            try:
+                                sl.events_seen = \
+                                    sl.adapter.events_version_cached(
+                                        max(self.poll / 2, 0.001))
+                            except (TransportError, B.SubmitError):
+                                pass  # watermark stays -1: plain polls
                         contiguous = todo == list(range(todo[0],
                                                         todo[0] + len(todo)))
                         # len(todo) > 1: a slice holding ONE index of a
@@ -549,9 +589,14 @@ class JobProtocol:
         because monitor imports this module at top level).  ``watch`` mode
         keeps the fixed cadence — the transport, not the timer, provides its
         savings — and ``fixed`` remains the default baseline."""
-        from repro.core.monitor import AdaptiveCadence, FixedCadence
+        from repro.core.monitor import (AdaptiveCadence, FixedCadence,
+                                        WakeupCadence)
         if self.cadence_mode == "adaptive":
             return AdaptiveCadence(self.poll)
+        if self.cadence_mode == "wakeup":
+            # pokes carry the urgency; the timer is only the safety net,
+            # and it stretches while the push path stays provably healthy
+            return WakeupCadence(self.poll)
         return FixedCadence(self.poll)
 
     def observation(self, chain: Optional[int] = None) -> Optional[TickObs]:
@@ -584,6 +629,134 @@ class JobProtocol:
         if v is None:
             return True, gv
         return False, v
+
+    # -- wakeup cadence: watcher pokes + id-filtered polling ----------------
+
+    def deliver_events(self, chain: Optional[int], version: int,
+                       events: Optional[List[Tuple[str, str]]]) -> None:
+        """Watcher push (wakeup cadence): buffer an event payload for the
+        chain's next tick.  Deliveries racing inside one tick window
+        coalesce — versions take the max, payloads concatenate, and an
+        unknown-scope delivery (events None) poisons the batch so the tick
+        re-polls everything it tracks."""
+        with self._mu:
+            cur = self._event_buf.get(chain)
+            if cur is None:
+                self._event_buf[chain] = [
+                    version, None if events is None else list(events)]
+            else:
+                cur[0] = max(cur[0], version)
+                if events is None or cur[1] is None:
+                    cur[1] = None
+                else:
+                    cur[1].extend(events)
+
+    def _take_events(self, chain: Optional[int]):
+        with self._mu:
+            return self._event_buf.pop(chain, None)
+
+    def watch_ids(self, chain: Optional[int]):
+        """Multiplexed-driver hook (wakeup cadence): the endpoint URL,
+        remote ids, and adapter this chain wants watcher pokes for — or None
+        when it doesn't participate (non-wakeup cadence, unwatchable
+        dialect, LOST slice, nothing submitted yet)."""
+        if not self.wakeup_enabled:
+            return None
+        k = 0 if chain is None else chain
+        with self._mu:
+            if k >= len(self._slices):
+                return None
+            sl = self._slices[k]
+            if sl.lost or not sl.adapter.supports(B.Capability.WATCH):
+                return None
+            ids = [jid for _, jid in sl.pairs]
+            if not ids:
+                return None
+            ids_set = set(ids)
+            if self._watch_reg_ids.get(k) != ids_set:
+                # registration change: the chain owes ONE catch-up fetch
+                # for events that predate the new subscription
+                self._watch_reg_ids[k] = ids_set
+                self._watch_catchup.add(k)
+        return sl.url, ids, sl.adapter
+
+    def _wakeup_events(self, sl: PlacementSlice, pairs: List[List[Any]],
+                       seen: int):
+        """Wakeup fast path: decide, from id-level event payloads, which of
+        the slice's ids actually need a status request this tick.  Payloads
+        come from the endpoint watcher's delivery buffer when one fired;
+        on a plain deadline tick (the safety net) a memoized global probe
+        plus one filtered long-poll stand in.  Returns
+        (merges, poll_pairs, advance):
+
+          merges      {jid: (idx, canonical state)} — non-terminal
+                      transitions folded into the cached infos with ZERO
+                      status requests
+          poll_pairs  (idx, jid) pairs that need a real status request:
+                      terminal events (end_time/exit detail only a poll
+                      provides) or events whose scope the ring lost
+          advance     events_seen watermark to commit IF the tick's polls
+                      succeed (None: keep) — a failed terminal poll must
+                      leave the watermark so the event is re-derived
+
+        Raises TransportError/SubmitError like a status poll; the caller
+        falls back to the watch/plain path."""
+        buffered = self._take_events(sl.k)
+        if buffered is not None and buffered[0] <= seen:
+            buffered = None  # stale delivery: a poll already covered it
+        if buffered is not None:
+            # subscription lag: a payload filtered to an OLD registration
+            # may omit ids submitted since (scale-up); trust it only when
+            # it covers every live pair, else fetch fresh below
+            covered = self._watch_reg_ids.get(sl.k)
+            if covered is None or any(jid not in covered
+                                      for _, jid in pairs):
+                buffered = None
+        if buffered is None:
+            # push-covered safety-net tick: every live id is registered with
+            # the endpoint's watcher, no catch-up fetch is owed, and the
+            # watcher's heartbeat proves it alive — so any event for this
+            # slice WILL arrive as a payload+poke, and this tick may return
+            # having spent ZERO requests.  The watermark stays put: only a
+            # delivery or a real fetch advances it.  This is what makes the
+            # deadline heap O(cheap no-ops) instead of O(event fetches) at
+            # 10k CRs — without it, every global version bump makes every
+            # chain's safety tick fetch its own filtered event window.
+            covered = self._watch_reg_ids.get(sl.k)
+            if (covered is not None and sl.k not in self._watch_catchup
+                    and all(jid in covered for _, jid in pairs)
+                    and sl.adapter.watch_push_healthy(max(2.0, 2 * self.poll))):
+                return {}, [], None
+            gv = sl.adapter.events_version_cached(max(self.poll / 2, 0.001))
+            if gv <= seen:
+                self._watch_catchup.discard(sl.k)  # no events at all to miss
+                return {}, [], None  # quiescent endpoint: skip everything
+            r = sl.adapter.watch_events_ids(
+                since=seen, ids=[jid for _, jid in pairs])
+            self._watch_catchup.discard(sl.k)  # gap fetched (or proven empty)
+            if r is None:
+                return {}, [], gv  # every event was another CR's
+            version, events = r
+        else:
+            version, events = buffered
+        if events is None:
+            # ring overflow / wildcard bump: scope unknown, re-poll all
+            return {}, list(pairs), version
+        latest: Dict[str, str] = {}
+        for jid, state in events:
+            latest[jid] = state  # latest-state-wins per id
+        jid_to_idx = {jid: idx for idx, jid in pairs}
+        merges: Dict[str, Tuple[int, str]] = {}
+        poll_pairs: List[List[Any]] = []
+        for jid, state in latest.items():
+            idx = jid_to_idx.get(jid)
+            if idx is None:
+                continue  # another CR's (or a superseded) id
+            if state in B.TERMINAL:
+                poll_pairs.append([idx, jid])
+            else:
+                merges[jid] = (idx, state)
+        return merges, poll_pairs, version
 
     def _push(self, updates: Dict[str, Any]) -> None:
         """Monitor-side write coalescing: only keys whose value actually
@@ -1153,33 +1326,70 @@ class JobProtocol:
         skipped = False
         for sl, pairs, watchable, seen in snapshot:
             if not pairs:
-                polled.append((sl, pairs, [], None))
+                polled.append((sl, pairs, [], None, None))
                 continue
             advance = None
+            if watchable and self.wakeup_enabled:
+                # wakeup fast path: event payloads name WHICH ids moved, so
+                # the status request shrinks to the touched subset (terminal
+                # transitions only — non-terminal ones merge request-free)
+                try:
+                    merges, poll_pairs, advance = self._wakeup_events(
+                        sl, pairs, seen)
+                except (TransportError, B.SubmitError):
+                    merges = None  # transport trouble: watch/plain below
+                if merges is not None:
+                    if not poll_pairs:
+                        polled.append((sl, pairs, None, advance, merges))
+                        skipped = True
+                    else:
+                        try:
+                            infos = self._poll_statuses(
+                                sl.adapter, [jid for _, jid in poll_pairs])
+                            polled.append(
+                                (sl, poll_pairs, infos, advance, merges))
+                        except (TransportError, B.SubmitError) as e:
+                            # advance is NOT committed: the terminal event
+                            # must be re-derived once the endpoint answers
+                            failed.append((sl, e))
+                    continue
             if watchable:
                 try:
                     skip, advance = self._watch_check(sl, pairs, seen)
                 except (TransportError, B.SubmitError):
                     skip = None  # fall through to the plain status poll
                 if skip:
-                    polled.append((sl, pairs, None, advance))
+                    polled.append((sl, pairs, None, advance, None))
                     skipped = True
                     continue
             try:
                 infos = self._poll_statuses(sl.adapter,
                                             [jid for _, jid in pairs])
-                polled.append((sl, pairs, infos, advance))
+                polled.append((sl, pairs, infos, advance, None))
             except (TransportError, B.SubmitError) as e:
                 failed.append((sl, e))
 
         with self._mu:
             imap = self._index_map()
-            for sl, pairs, infos, advance in polled:
+            for sl, pairs, infos, advance, merges in polled:
                 sl.failures = 0
                 sl.last_error = ""
                 sl.outage_start = 0.0
                 if advance is not None:
                     sl.events_seen = max(sl.events_seen, advance)
+                if merges:
+                    # fold non-terminal event transitions into a COPY of the
+                    # cached info (start_time etc. survive); a cached
+                    # terminal state always outranks a late event replay
+                    for jid, (idx, state) in merges.items():
+                        cur = imap.get(idx)
+                        if cur is None or cur[1] != jid:
+                            continue
+                        info = dict(self._infos.get(idx) or {})
+                        if info.get("state") in B.TERMINAL:
+                            continue
+                        info["state"] = state
+                        self._infos[idx] = info
                 if infos is None:
                     self.watch_skips += 1
                     continue
@@ -1223,7 +1433,7 @@ class JobProtocol:
                     self._obs[slice_k] = TickObs()
                 return False
             return self._evaluate(cm_now, desired, kill_requested, stall_msg,
-                                  {sl.k for sl, _, _, _ in polled},
+                                  {sl.k for sl, *_ in polled},
                                   chain=slice_k, had_failures=bool(failed),
                                   skipped=skipped)
 

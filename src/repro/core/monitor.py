@@ -45,13 +45,15 @@ import heapq
 import itertools
 import threading
 import time
-from typing import Dict, List, Mapping, Optional, Tuple, Type
+from collections import deque
+from typing import (Any, Dict, FrozenSet, List, Mapping, Optional, Set,
+                    Tuple, Type)
 
 from repro.core.backends import base as B
 from repro.core.controller import (ControllerPod, JobProtocol, PodKilled,
                                    TickObs, killable_sleep, make_protocol)
 from repro.core.objectstore import ObjectStore
-from repro.core.rest import ResourceManagerDirectory
+from repro.core.rest import ResourceManagerDirectory, TransportError
 from repro.core.secrets import SecretStore
 from repro.core.statestore import ConfigMap
 
@@ -113,6 +115,36 @@ class AdaptiveCadence(Cadence):
         self._cur = self.base * self.TIGHT_FACTOR
 
 
+class WakeupCadence(Cadence):
+    """Safety-net pacing for the wakeup cadence.  Urgency rides the PUSH
+    path (watcher pokes jump the deadline heap), so the timer never ticks
+    tighter than the base interval — and a chain whose safety ticks keep
+    coming back clean (the push path is healthy and proved nothing moved)
+    stretches its net up to ``MAX_FACTOR`` × base.  At 10k CRs this is what
+    keeps the heap from drowning the worker pool in no-op deadline ticks:
+    the steady-state tick rate is N/(MAX_FACTOR·base), not N/base.  Any
+    real observation (a change, a busy tail, an unreachable slice) or an
+    out-of-band poke snaps the chain back to base."""
+
+    GROWTH = 2.0          # per-clean-tick stretch multiplier
+    MAX_FACTOR = 16.0     # safety-net ceiling, × base
+
+    def __init__(self, base: float):
+        self.base = base
+        self._cur = base
+
+    def next_delay(self, obs: Optional[TickObs]) -> float:
+        if obs is None or obs.changed or obs.busy or obs.unknown:
+            self._cur = self.base
+        else:
+            self._cur = min(max(self._cur, self.base) * self.GROWTH,
+                            self.base * self.MAX_FACTOR)
+        return self._cur
+
+    def reset(self) -> None:
+        self._cur = self.base
+
+
 class MonitorTask:
     """One job's seat in the runtime: a virtual controller pod.
 
@@ -144,9 +176,18 @@ class MonitorTask:
         # dropped, so each chain has exactly ONE live scheduling sequence
         # however many times kill_pod()/poke() push extra wake-up entries
         self._sched_tokens: Dict[int, int] = {}
-        # set by poke(); a step consumes it so a patch arriving mid-step is
-        # applied by an immediate follow-up tick, never a full poll later
-        self._poke_pending = False
+        # chains with a pending out-of-band wake-up (spec-patch poke on
+        # chain 0, watcher event delivery on any chain); a step consumes its
+        # chain's entry so a poke arriving mid-step is applied by an
+        # immediate follow-up tick, never a full poll later.  N pokes inside
+        # one tick window collapse onto ONE pending entry (plus the heap's
+        # token supersede) — that is the poke-storm coalescing guarantee
+        self._poke_pending: Set[int] = set()
+        # earliest unconsumed poke time per chain, popped when the chain
+        # next steps: the runtime's wakeup-latency (event -> evaluation)
+        # histogram is built from these stamps
+        self._poke_stamp: Dict[int, float] = {}
+        self._poke_mu = threading.Lock()
         # one lock per chain: serializes steps of the SAME slice (a
         # kill_pod() wake-up racing that slice's running tick) while letting
         # different slices of one job step concurrently — the whole point of
@@ -171,27 +212,66 @@ class MonitorTask:
 
     def kill_pod(self) -> None:
         """Simulate pod/node failure: die at the next action boundary,
-        nothing flushed.  Rescheduled immediately so the death is observed
-        (and the operator can restart) without waiting a full poll period."""
+        nothing flushed.  Rescheduled at the FRONT of the heap so the death
+        is observed (and the operator can restart) even when a backlog of
+        overdue poll deadlines is queued ahead."""
         self._killed.set()
-        self._runtime.schedule(self, 0.0, 0)
+        self._runtime.schedule(self, 0.0, 0, front=True)
 
     def poke(self) -> None:
         """A spec patch landed in the config map: pull the next tick forward
         so the reconcile delta is applied now, not a poll period from now.
-        The pending flag survives a poke that races a RUNNING step (whose
-        own reschedule would otherwise supersede the immediate wake-up): the
-        in-flight step consumes it by returning a zero delay.  Reconcile is
-        global, so chain 0 carries the wake-up."""
-        if not self._done.is_set():
-            self._poke_pending = True
-            # a patch overrides any backed-off deadline RIGHT NOW: the
-            # zero-delay entry supersedes the old one on the heap, and the
-            # chain's cadence snaps back to tight for the reconcile
-            cad = self._cadences.get(0)
-            if cad is not None:
-                cad.reset()
-            self._runtime.schedule(self, 0.0, 0)
+        Reconcile is global, so chain 0 carries the wake-up."""
+        self.poke_chain(0)
+
+    def poke_chain(self, chain: int) -> None:
+        """Out-of-band wake-up for ONE chain (spec-patch poke, watcher event
+        delivery).  The pending entry survives a poke that races a RUNNING
+        step (whose own reschedule would otherwise supersede the immediate
+        wake-up): the in-flight step consumes it by returning a zero delay.
+        Repeated pokes on a chain that already has one pending coalesce —
+        the heap token supersede plus the pending-set membership guarantee
+        at most one extra evaluation per storm."""
+        if self._done.is_set():
+            return
+        with self._poke_mu:
+            coalesced = chain in self._poke_pending
+            self._poke_pending.add(chain)
+            self._poke_stamp.setdefault(chain, time.time())
+        self._runtime._count_poke(coalesced)
+        if coalesced:
+            return  # an undelivered wake-up already covers this chain
+        # the wake-up overrides any backed-off deadline RIGHT NOW: the
+        # zero-delay entry supersedes the old one on the heap, and the
+        # chain's cadence snaps back to tight for the follow-up work
+        cad = self._cadences.get(chain)
+        if cad is not None:
+            cad.reset()
+        # FRONT of the heap, not "now": under load the heap carries a
+        # backlog of overdue speculative deadline ticks, and a poke is
+        # KNOWN work — it must not wait its turn behind them
+        self._runtime.schedule(self, 0.0, chain, front=True)
+
+    def deliver_events(self, chain: int, version: int,
+                       events: Optional[List[Tuple[str, str]]]) -> None:
+        """Watcher push: hand an event payload (or an unknown-scope marker,
+        ``events=None``) to the protocol and pull the chain's next tick
+        forward.  Runs on the endpoint's watcher thread."""
+        if self._done.is_set():
+            return
+        self._proto.deliver_events(chain, version, events)
+        self.poke_chain(chain)
+
+    def watch_registration(self, chain: int
+                           ) -> Optional[Tuple[str, List[str], Any]]:
+        """The subscription this chain wants from its endpoint's watcher —
+        ``(url, remote ids, adapter)`` — or None when the chain does not
+        participate (not wakeup cadence, task finished/not started,
+        unwatchable dialect, LOST slice).  Re-consulted by the runtime after
+        every step so the index tracks submits/retries/failover."""
+        if self._done.is_set() or not self._started:
+            return None
+        return self._proto.watch_ids(chain)
 
     def alive(self) -> bool:
         return not self._done.is_set()
@@ -230,9 +310,13 @@ class MonitorTask:
             # a poke that landed before this point is satisfied by this very
             # step (the operator flushes the config map BEFORE poking, and
             # the step reads it fresh); one that lands mid-step re-raises the
-            # flag and is consumed below
-            if chain == 0:
-                self._poke_pending = False
+            # flag and is consumed below.  The poke's stamp feeds the
+            # runtime's wakeup-latency histogram: event -> evaluation start
+            with self._poke_mu:
+                self._poke_pending.discard(chain)
+                stamp = self._poke_stamp.pop(chain, None)
+            if stamp is not None:
+                self._runtime._record_wakeup(time.time() - stamp)
             try:
                 self._checkpoint()
                 if not self._started:
@@ -317,8 +401,13 @@ class MonitorTask:
         cad = self._cadences.get(chain)
         if cad is None:
             cad = self._cadences[chain] = self._proto.make_cadence()
-        if self._killed.is_set() or self._poke_pending:
-            self._poke_pending = False
+        with self._poke_mu:
+            pending = chain in self._poke_pending
+            if pending:
+                # keep the stamp: latency runs until the step that actually
+                # evaluates this poke starts
+                self._poke_pending.discard(chain)
+        if self._killed.is_set() or pending:
             cad.reset()
             return 0.0
         return cad.next_delay(self._proto.observation(chain))
@@ -332,7 +421,22 @@ class MonitorTask:
 
 class MonitorRuntime:
     """Fixed worker pool + poll-deadline heap driving many MonitorTasks
-    (one heap entry chain per placement slice of each task)."""
+    (one heap entry chain per placement slice of each task).
+
+    Wakeup cadence adds a PUSH path on top of the heap: per endpoint, ONE
+    dedicated watcher thread long-polls the events route and pokes exactly
+    the chains subscribed to the ids that changed (the endpoint->chain
+    subscription index below), instead of every chain waiting out its
+    deadline.  The heap keeps running underneath as the safety net — a
+    subscription-registration race or a watcher blackout degrades to
+    deadline-paced polling, never to a missed transition."""
+
+    # watcher long-poll window: short enough that stop() is responsive,
+    # long enough that an idle endpoint costs ~2 requests/s, not a busy loop
+    WATCH_WAIT = 0.5
+    # back-off before retrying a watcher whose transport failed (blackout):
+    # deadline polling covers the gap, so this only bounds reconnect lag
+    WATCH_RETRY = 0.2
 
     def __init__(self, workers: int = 4, name: str = "bridge-monitor"):
         self.workers = workers
@@ -342,6 +446,22 @@ class MonitorRuntime:
         self._cv = threading.Condition()
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
+        # endpoint->chain subscription index: url -> job id -> {(task, chain)}
+        # plus each chain's last-registered (url, ids) so re-registration
+        # after every step is a cheap no-op when nothing moved
+        self._subs_mu = threading.Lock()
+        self._subs: Dict[str, Dict[str, Set[Tuple[MonitorTask, int]]]] = {}
+        self._registered: Dict[MonitorTask,
+                               Dict[int, Tuple[str, FrozenSet[str]]]] = {}
+        # channels we started a watcher on (one per endpoint, ever)
+        self._watch_channels: Dict[str, Any] = {}
+        # observability counters (stats()) — benchmarks and tests read these
+        # instead of reaching into private state
+        self._stats_mu = threading.Lock()
+        self._stale_drops = 0
+        self._pokes_delivered = 0
+        self._pokes_coalesced = 0
+        self._wakeup_samples: "deque[float]" = deque(maxlen=4096)
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -363,6 +483,13 @@ class MonitorRuntime:
         for t in self._threads:
             t.join(timeout=timeout)
         self._threads = []
+        with self._subs_mu:
+            channels = list(self._watch_channels.values())
+            self._watch_channels.clear()
+            self._subs.clear()
+            self._registered.clear()
+        for ch in channels:
+            ch.stop_watcher(timeout=timeout)
 
     def thread_count(self) -> int:
         """Live monitor threads — pool size, independent of task count."""
@@ -381,19 +508,185 @@ class MonitorRuntime:
         self.schedule(task, 0.0, 0)
         return task
 
-    def schedule(self, task: MonitorTask, delay: float,
-                 chain: int = 0) -> None:
+    def schedule(self, task: MonitorTask, delay: float, chain: int = 0,
+                 only_if_token: Optional[int] = None,
+                 front: bool = False) -> None:
         """(Re)schedule one of a task's chains, SUPERSEDING any entry that
         chain still has in the heap: the token stamped here invalidates
         older entries, which the workers drop on pop — one chain, one live
-        sequence."""
+        sequence.  ``only_if_token`` makes the supersede conditional: the
+        worker's own post-step reschedule passes the token it popped, so a
+        poke that raced in DURING the step keeps its immediate entry instead
+        of being pushed out a full poll interval.  ``front`` puts the entry
+        at deadline ZERO — ahead of every overdue deadline tick already in
+        the heap — for out-of-band wake-ups (pokes, kills) that carry known
+        work and must preempt speculative polling under backlog."""
         with self._cv:
-            token = task._sched_tokens.get(chain, 0) + 1
+            cur = task._sched_tokens.get(chain, 0)
+            if only_if_token is not None and cur != only_if_token:
+                return  # a newer (immediate) entry raced in: let it stand
+            token = cur + 1
             task._sched_tokens[chain] = token
+            deadline = 0.0 if front else time.time() + delay
             heapq.heappush(self._heap,
-                           (time.time() + delay, next(self._seq), task,
-                            chain, token))
+                           (deadline, next(self._seq), task, chain, token))
             self._cv.notify()
+
+    # -- observability counters (stats()) -----------------------------------
+
+    def _count_poke(self, coalesced: bool) -> None:
+        with self._stats_mu:
+            self._pokes_delivered += 1
+            if coalesced:
+                self._pokes_coalesced += 1
+
+    def _record_wakeup(self, latency: float) -> None:
+        with self._stats_mu:
+            self._wakeup_samples.append(latency)
+
+    def stats(self) -> Dict[str, Any]:
+        """Control-plane observability snapshot: heap depth, stale-token
+        drops, poke delivery/coalescing counters, the wakeup-latency
+        (poke -> evaluation start) histogram, and the watcher/subscription
+        footprint.  The supported surface for benchmarks and tests."""
+        with self._cv:
+            heap_depth = len(self._heap)
+        with self._subs_mu:
+            subscribed_ids = sum(len(m) for m in self._subs.values())
+            channels = list(self._watch_channels.values())
+        with self._stats_mu:
+            lat = sorted(self._wakeup_samples)
+            stats = {
+                "heap_depth": heap_depth,
+                "stale_drops": self._stale_drops,
+                "pokes_delivered": self._pokes_delivered,
+                "pokes_coalesced": self._pokes_coalesced,
+                "wakeup_samples": len(lat),
+                "wakeup_latency_p50_s": lat[len(lat) // 2] if lat else None,
+                "wakeup_latency_p99_s": (
+                    lat[min(int(len(lat) * 0.99), len(lat) - 1)]
+                    if lat else None),
+            }
+        stats["watcher_threads"] = sum(1 for ch in channels
+                                       if ch.watcher_alive)
+        stats["subscribed_ids"] = subscribed_ids
+        return stats
+
+    # -- endpoint watchers (wakeup cadence) ----------------------------------
+
+    def _sync_subscriptions(self, task: MonitorTask, chain: int) -> None:
+        """Bring the subscription index in line with what ``(task, chain)``
+        wants AFTER its latest step: register fresh ids, drop superseded
+        ones, purge everything once the task dies.  Called by the worker
+        that stepped the chain, so registration always chases the newest
+        submit/retry/failover state."""
+        reg = task.watch_registration(chain)
+        with self._subs_mu:
+            chains = self._registered.get(task)
+            if not task.alive():
+                if chains:
+                    for k, old in chains.items():
+                        self._drop_subscription((task, k), old)
+                self._registered.pop(task, None)
+                return
+            new = None if reg is None else (reg[0], frozenset(reg[1]))
+            old = chains.get(chain) if chains else None
+            if old == new:
+                return
+            if old is not None:
+                self._drop_subscription((task, chain), old)
+                del chains[chain]
+                if not chains:
+                    del self._registered[task]
+            if new is not None:
+                self._registered.setdefault(task, {})[chain] = new
+                jmap = self._subs.setdefault(new[0], {})
+                for jid in new[1]:
+                    jmap.setdefault(jid, set()).add((task, chain))
+        if reg is not None:
+            self._ensure_watcher(reg[0], reg[2])
+
+    def _drop_subscription(self, key: Tuple[MonitorTask, int],
+                           old: Tuple[str, FrozenSet[str]]) -> None:
+        """Remove one chain's registration (caller holds _subs_mu)."""
+        jmap = self._subs.get(old[0])
+        if jmap is None:
+            return
+        for jid in old[1]:
+            keys = jmap.get(jid)
+            if keys is not None:
+                keys.discard(key)
+                if not keys:
+                    del jmap[jid]
+        if not jmap:
+            del self._subs[old[0]]
+
+    def _ensure_watcher(self, url: str, adapter: Any) -> None:
+        """Guarantee the endpoint has its ONE watcher thread running (idle
+        watchers that died of a stopped runtime restart lazily here)."""
+        channel = getattr(adapter.client, "channel", None)
+        if channel is None:
+            return
+        with self._subs_mu:
+            self._watch_channels[url] = channel
+        channel.ensure_watcher(
+            lambda stop: self._watch_loop(url, adapter, stop),
+            name=f"{self.name}-watch:{url}")
+
+    def _watch_loop(self, url: str, adapter: Any, stop: threading.Event) -> None:
+        """The endpoint's dedicated watcher: one long-poll in flight,
+        forever.  On a version bump it pokes exactly the subscribed chains
+        whose ids changed; on transport failure it backs off and retries
+        while the deadline heap keeps polling underneath.  Every successful
+        cycle stamps the channel's heartbeat — the controllers' safety-net
+        ticks consult it (``watch_push_healthy``) to decide whether push
+        delivery can be trusted or deadline fetching must take over."""
+        since = -1
+        channel = getattr(adapter.client, "channel", None)
+        while not (stop.is_set() or self._stop.is_set()):
+            try:
+                if since < 0:
+                    # seed the watermark: everything before the watcher
+                    # existed is the subscribers' own (deadline-poll) duty
+                    since = adapter.watch_events(since=-1)
+                    if channel is not None:
+                        channel.watch_heartbeat = time.time()
+                    continue
+                r = adapter.watch_events_ids(since=since, wait=self.WATCH_WAIT)
+            except (TransportError, B.SubmitError):
+                stop.wait(self.WATCH_RETRY)
+                continue
+            if channel is not None:
+                channel.watch_heartbeat = time.time()
+            if r is None:
+                continue  # 204: nothing changed inside the window
+            version, events = r
+            self._dispatch_events(url, version, events)
+            since = version
+
+    def _dispatch_events(self, url: str, version: int,
+                         events: Optional[List[Tuple[str, str]]]) -> None:
+        """Fan an event payload out to the subscribed chains.  ``events=
+        None`` (enumeration unknown: ring overflow) pokes EVERY chain on the
+        endpoint — each re-polls from its own watermark."""
+        targets: Dict[Tuple[MonitorTask, int],
+                      Optional[List[Tuple[str, str]]]] = {}
+        with self._subs_mu:
+            jmap = self._subs.get(url)
+            if not jmap:
+                return
+            if events is None:
+                for keys in jmap.values():
+                    for key in keys:
+                        targets[key] = None
+            else:
+                for jid, state in events:
+                    for key in jmap.get(jid, ()):
+                        lst = targets.setdefault(key, [])
+                        if lst is not None:
+                            lst.append((jid, state))
+        for (task, chain), evs in targets.items():
+            task.deliver_events(chain, version, evs)
 
     # -- workers -----------------------------------------------------------
 
@@ -407,6 +700,8 @@ class MonitorRuntime:
                         _, _, task, chain, token = heapq.heappop(self._heap)
                         if token != task._sched_tokens.get(chain):
                             task = None
+                            with self._stats_mu:
+                                self._stale_drops += 1
                             continue  # superseded by a newer entry
                         break
                     wait = (min(self._heap[0][0] - now, 0.2)
@@ -415,5 +710,9 @@ class MonitorRuntime:
                 if task is None:
                     return  # stopped
             delay = task._step(chain)
+            self._sync_subscriptions(task, chain)
             if delay is not None:
-                self.schedule(task, delay, chain)
+                # a zero delay stands in for an out-of-band wake-up consumed
+                # mid-step (poke, kill): it keeps front-of-heap priority
+                self.schedule(task, delay, chain, only_if_token=token,
+                              front=(delay == 0.0))

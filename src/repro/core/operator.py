@@ -78,7 +78,7 @@ class BridgeOperator:
                  cadence: str = "fixed"):
         if mode not in ("multiplexed", "pod-per-cr"):
             raise ValueError(f"unknown operator mode {mode!r}")
-        if cadence not in ("fixed", "adaptive", "watch"):
+        if cadence not in ("fixed", "adaptive", "watch", "wakeup"):
             raise ValueError(f"unknown cadence mode {cadence!r}")
         self.registry = registry
         self.statestore = statestore
@@ -148,18 +148,33 @@ class BridgeOperator:
     # -- reconcile loop -----------------------------------------------------
 
     def _loop(self) -> None:
+        # Events are handled the moment they arrive (the blocking get wakes
+        # on the first one, the inner drain batches the rest), but the sweep
+        # — a FULL registry pass: status mirror, pod-exit restart, TTL GC —
+        # runs at most once per reconcile_interval.  It must not be coupled
+        # to event arrival: _mirror_status itself fires MODIFIED events into
+        # this same queue, so sweep-per-drain self-sustains into a hot spin
+        # that at 10k CRs eats the core the monitor needs.
+        next_sweep = 0.0
         while not self._stop.is_set():
-            drained = False
+            now = time.time()
+            if now >= next_sweep:
+                self._sweep()
+                next_sweep = time.time() + self.reconcile_interval
+            try:
+                # bounded wait so a large reconcile_interval never pins the
+                # thread in get() past the stop() join budget
+                event, job = self._events.get(
+                    timeout=min(max(next_sweep - time.time(), 0.001), 0.1))
+            except queue.Empty:
+                continue
+            self._handle_event(event, job)
             try:
                 while True:
                     event, job = self._events.get_nowait()
-                    drained = True
                     self._handle_event(event, job)
             except queue.Empty:
                 pass
-            self._sweep()
-            if not drained:
-                time.sleep(self.reconcile_interval)
 
     def _handle_event(self, event: str, job: BridgeJob) -> None:
         if event == "ADDED":

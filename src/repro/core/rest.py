@@ -271,6 +271,14 @@ class Channel:
         self._retry_rng = random.Random(hash(url) & 0xFFFF)
         self._memo: Dict[str, Tuple[Any, float]] = {}
         self._memo_gates: Dict[str, threading.Lock] = {}
+        # optional dedicated watcher: ONE long-poll loop per endpoint (the
+        # wakeup cadence's push path) — never one per CR
+        self._watcher: Optional[threading.Thread] = None
+        self._watcher_stop: Optional[threading.Event] = None
+        # stamped by the watcher after every successful long-poll cycle;
+        # 0.0 (never) or stale means push delivery cannot be trusted and
+        # safety-net ticks must fall back to fetching events themselves
+        self.watch_heartbeat = 0.0
 
     def request(self, method: str, path: str, json: Any = None,
                 headers: Optional[Dict[str, str]] = None,
@@ -325,6 +333,40 @@ class Channel:
             with self._lock:
                 self._memo[key] = (value, time.time())
             return value
+
+    # -- dedicated watcher (wakeup cadence) ---------------------------------
+
+    def ensure_watcher(self, run: Callable[[threading.Event], None],
+                       name: str = "") -> bool:
+        """Start the endpoint's dedicated watcher if none is running: a
+        daemon thread executing ``run(stop_event)`` (a long-poll loop that
+        pokes subscribed chains).  At most ONE watcher exists per channel —
+        however many CRs subscribe, the endpoint pays one in-flight
+        long-poll.  Returns True iff a new watcher was started."""
+        with self._lock:
+            if self._watcher is not None and self._watcher.is_alive():
+                return False
+            stop = threading.Event()
+            t = threading.Thread(
+                target=run, args=(stop,), daemon=True,
+                name=name or f"bridge-monitor-watch:{self.url}")
+            self._watcher, self._watcher_stop = t, stop
+            t.start()
+        return True
+
+    def stop_watcher(self, timeout: float = 1.0) -> None:
+        with self._lock:
+            t, stop = self._watcher, self._watcher_stop
+            self._watcher = self._watcher_stop = None
+        if stop is not None:
+            stop.set()
+        if t is not None:
+            t.join(timeout=timeout)
+
+    @property
+    def watcher_alive(self) -> bool:
+        t = self._watcher
+        return t is not None and t.is_alive()
 
 
 class RestClient:

@@ -120,8 +120,10 @@ class ServiceProtocol(JobProtocol):
         if not super().start():
             return False
         # the watch fast path skips status polls on quiescent endpoints;
-        # a service's health probes must run EVERY tick regardless
+        # a service's health probes must run EVERY tick regardless (and a
+        # service never registers for watcher pokes either)
         self._watch_enabled = False
+        self.wakeup_enabled = False
         return True
 
     def make_cadence(self):

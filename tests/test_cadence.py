@@ -179,6 +179,39 @@ def test_channel_memo_amortizes_and_refreshes():
     cluster.shutdown()
 
 
+def test_channel_memo_single_flight_under_contention():
+    """Regression (single-flight): N threads probing the SAME stale key must
+    cause exactly ONE upstream compute — the rest block on the per-key gate
+    and read the value the winner cached.  This is what keeps the events-
+    version probe O(endpoints) however many CR chains fire at once."""
+    cluster, srv, client = _cluster_and_client()
+    ch = client.channel
+    n = 16
+    barrier = threading.Barrier(n)
+    computes = []
+    compute_mu = threading.Lock()
+    results = []
+
+    def compute():
+        with compute_mu:
+            computes.append(1)
+        time.sleep(0.05)  # hold the gate so every prober piles up behind it
+        return "value"
+
+    def probe():
+        barrier.wait()
+        results.append(ch.memo("hot", 10.0, compute))
+
+    threads = [threading.Thread(target=probe) for _ in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    assert results == ["value"] * n
+    assert len(computes) == 1
+    cluster.shutdown()
+
+
 def test_server_per_route_stats():
     cluster, srv, client = _cluster_and_client()
     client.get("/slurm/v0.0.37/ping")
@@ -200,7 +233,7 @@ def _proto_of(env, handle):
     return pod._proto
 
 
-@pytest.mark.parametrize("cadence", ["adaptive", "watch"])
+@pytest.mark.parametrize("cadence", ["adaptive", "watch", "wakeup"])
 def test_event_modes_converge_like_fixed(cadence):
     """Lifecycle parity: an array CR runs to DONE with per-index states
     under both event-driven cadences, exactly as under fixed."""
@@ -268,6 +301,10 @@ class _SpyQuantumAdapter(QuantumAdapter):
         type(self).forbidden_calls.append(("watch_events", since))
         raise AssertionError("watch_events called without WATCH")
 
+    def watch_events_ids(self, since=-1, ids=None, wait=0.0):
+        type(self).forbidden_calls.append(("watch_events_ids", since))
+        raise AssertionError("watch_events_ids called without WATCH")
+
 
 class _SpyRayAdapter(RayAdapter):
     forbidden_calls = []
@@ -280,25 +317,151 @@ class _SpyRayAdapter(RayAdapter):
         type(self).forbidden_calls.append(("watch_events", since))
         raise AssertionError("watch_events called without WATCH")
 
+    def watch_events_ids(self, since=-1, ids=None, wait=0.0):
+        type(self).forbidden_calls.append(("watch_events_ids", since))
+        raise AssertionError("watch_events_ids called without WATCH")
+
 
 @pytest.mark.parametrize("kind,spy", [("quantum", _SpyQuantumAdapter),
                                       ("ray", _SpyRayAdapter)])
-@pytest.mark.parametrize("cadence", ["fixed", "watch"])
+@pytest.mark.parametrize("cadence", ["fixed", "watch", "wakeup"])
 def test_unwatchable_dialects_never_see_batch_or_watch_verbs(kind, spy,
                                                              cadence):
     """Regression: quantum/ray declare neither BATCH_STATUS nor WATCH, so an
     array CR on them must converge through per-id status polls alone — even
-    when the operator runs in watch mode (transparent fallback)."""
+    when the operator runs in watch or wakeup mode (transparent fallback:
+    no watch probe, no id-filtered event fetch, no watcher subscription)."""
     assert Capability.WATCH not in spy.capabilities
     assert Capability.BATCH_STATUS not in spy.capabilities
     spy.forbidden_calls = []
     with BridgeEnvironment(default_duration=0.05,
-                           operator_kwargs={"cadence": cadence}) as env:
+                           operator_kwargs={"mode": "multiplexed",
+                                            "cadence": cadence}) as env:
         env.operator.adapters[spy.image] = spy
         h = env.bridge.submit("nb", env.make_spec(
             kind, script="s", updateinterval=0.03, array=ArraySpec(count=3)))
         assert h.wait(timeout=30).status.state == DONE
         assert h.job().status.index_states == {str(i): DONE for i in range(3)}
         assert spy.forbidden_calls == []
-        if cadence == "watch":
+        if cadence in ("watch", "wakeup"):
             assert _proto_of(env, h).watch_skips == 0
+        if cadence == "wakeup":
+            # an unwatchable dialect never registers for watcher pokes
+            stats = env.operator.runtime.stats()
+            assert stats["watcher_threads"] == 0
+            assert stats["subscribed_ids"] == 0
+
+
+# ---------------------------------------------------------------------------
+# wakeup cadence: watcher pokes, id-filtered polling, coalescing, chaos
+# ---------------------------------------------------------------------------
+
+
+def test_wakeup_mode_merges_events_and_polls_only_terminal():
+    """The wakeup tentpole, end to end on one CR: the RUNNING transition is
+    learned from the watcher's event payload with ZERO status requests, and
+    the whole lifecycle costs exactly one terminal status poll."""
+    with BridgeEnvironment(default_duration=0.8,
+                           operator_kwargs={"mode": "multiplexed",
+                                            "cadence": "wakeup"}) as env:
+        status_route = "GET /slurm/v0.0.37/job/{id}"
+        batch_route = "GET /slurm/v0.0.37/jobs"
+
+        def status_requests():
+            stats = env.servers["slurm"].stats
+            return (stats.get(status_route, {}).get("requests", 0)
+                    + stats.get(batch_route, {}).get("requests", 0))
+
+        h = env.bridge.submit("wk", env.make_spec(
+            "slurm", script="s", updateinterval=0.05,
+            jobproperties={"WallSeconds": "0.8"}))
+        assert _wait(lambda: h.status().state == RUNNING, timeout=10)
+        # RUNNING was learned by merging the event payload, not by polling
+        assert status_requests() == 0
+        proto = _proto_of(env, h)
+        assert h.wait(timeout=30).status.state == DONE
+        assert proto.watch_skips > 0
+        # the terminal transition is the one (id-filtered) status request
+        assert status_requests() <= 2
+        stats = env.operator.runtime.stats()
+        assert stats["watcher_threads"] == 1
+        assert stats["pokes_delivered"] > 0
+        assert stats["wakeup_samples"] > 0
+        for key in ("heap_depth", "stale_drops", "pokes_coalesced",
+                    "wakeup_latency_p50_s", "wakeup_latency_p99_s",
+                    "subscribed_ids"):
+            assert key in stats
+
+
+def test_poke_storm_coalesces_to_bounded_evaluations():
+    """Satellite-spec: M rapid pokes on one chain inside a tick window must
+    run at most a couple of extra evaluations — never M — and never multiply
+    live heap entries (superseded tokens are dropped on pop)."""
+    with BridgeEnvironment(slots=4, default_duration=600,
+                           operator_kwargs={"mode": "multiplexed",
+                                            "cadence": "wakeup"}) as env:
+        h = env.bridge.submit("storm", env.make_spec(
+            "slurm", script="s", updateinterval=0.5,
+            jobproperties={"WallSeconds": "600"}))
+        assert _wait(lambda: h.status().state == RUNNING, timeout=15)
+        task = env.operator.pods[h.job().uid]
+        proto = task._proto
+        time.sleep(0.3)  # let submission-wave steps and pokes settle
+        before = env.operator.runtime.stats()
+        ticks = []
+        orig_tick = proto.tick
+        proto.tick = lambda chain=None: (ticks.append(1), orig_tick(chain))[1]
+        try:
+            for _ in range(50):
+                task.poke_chain(0)
+            assert _wait(lambda: len(ticks) >= 1, timeout=5)
+            time.sleep(0.3)  # absorb any follow-up scheduling
+        finally:
+            proto.tick = orig_tick
+        after = env.operator.runtime.stats()
+        delivered = after["pokes_delivered"] - before["pokes_delivered"]
+        coalesced = after["pokes_coalesced"] - before["pokes_coalesced"]
+        assert delivered >= 50
+        assert coalesced >= 40   # the storm collapsed into a few wake-ups
+        # a storm of 50 pokes costs a handful of evaluations, not 50
+        assert len(ticks) <= 4
+        # and the heap holds one live entry per chain, not one per poke
+        assert after["heap_depth"] <= 4
+
+
+def test_watcher_blackout_falls_back_to_deadline_polls():
+    """Chaos: a hard endpoint outage (the watcher's long-polls AND the
+    deadline polls all fail) must degrade to deadline polling once the
+    outage lifts — the terminal transition that happened DURING the blackout
+    lands exactly once, never skipped, and the watcher reconnects."""
+    fp = FaultProfile()
+    with BridgeEnvironment(default_duration=1.0,
+                           fault_profiles={"slurm": fp},
+                           operator_kwargs={"mode": "multiplexed",
+                                            "cadence": "wakeup"}) as env:
+        h = env.bridge.submit("bo", env.make_spec(
+            "slurm", script="s", updateinterval=0.1,
+            jobproperties={"WallSeconds": "1.0"}))
+        assert _wait(lambda: h.status().state == RUNNING, timeout=10)
+        fp.begin_outage()
+        time.sleep(1.5)    # the job finishes DURING the blackout
+        fp.end_outage()
+        assert h.wait(timeout=30).status.state == DONE
+        assert env.operator.runtime.stats()["watcher_threads"] == 1
+
+
+def test_wakeup_mode_survives_operator_pod_kill():
+    """Chaos: killing the monitor task mid-RUN in wakeup mode must restart
+    cleanly — the replacement re-attaches to the same remote job (no double
+    submission), re-seeds its info cache through a plain poll, re-subscribes,
+    and still observes the terminal transition."""
+    with BridgeEnvironment(default_duration=1.2,
+                           operator_kwargs={"mode": "multiplexed",
+                                            "cadence": "wakeup"}) as env:
+        h = env.bridge.submit("pk", env.make_spec(
+            "slurm", script="s", updateinterval=0.05,
+            jobproperties={"WallSeconds": "1.2"}))
+        assert _wait(lambda: h.status().state == RUNNING, timeout=10)
+        env.operator.pods[h.job().uid].kill_pod()
+        assert h.wait(timeout=30).status.state == DONE
+        assert len(env.clusters["slurm"].jobs) == 1  # re-attached, not resubmitted

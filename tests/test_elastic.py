@@ -40,7 +40,8 @@ MODES = ["multiplexed", "pod-per-cr"]
 # regardless of how tick deadlines are scheduled or whether a status poll
 # was watch-elided.
 OPERATORS = [(m, "fixed") for m in MODES] + [
-    ("multiplexed", "adaptive"), ("multiplexed", "watch")]
+    ("multiplexed", "adaptive"), ("multiplexed", "watch"),
+    ("multiplexed", "wakeup")]
 
 
 class FanoutLSFAdapter(LSFAdapter):
@@ -169,6 +170,11 @@ def test_scale_32_up_48_down_8_exact_delta_with_midpatch_kill(mode, cadence):
     ("multiplexed", "sliced", 808, "adaptive"),
     ("multiplexed", "slurm", 909, "watch"),
     ("multiplexed", "sliced", 1010, "watch"),
+    # wakeup: watcher pokes + id-filtered polls under the same chaos — an
+    # event payload must never mask a kill/patch, and a poll that fails
+    # mid-storm must not advance the event watermark past a terminal
+    ("multiplexed", "slurm", 1111, "wakeup"),
+    ("multiplexed", "sliced", 1212, "wakeup"),
 ])
 def test_chaos_lifecycle(mode, kind, seed, cadence):
     """Seeded random op interleavings (deterministic op sequence + seeded
